@@ -1,0 +1,114 @@
+"""The paper's two benchmark applications, as Provuse function graphs.
+
+TREE (Fusionize++ fig. 4): A synchronously invokes B, which calls D and E;
+A also triggers an asynchronous branch via C to F and G. The async path
+dominates the workload (heavier payloads), so fusion of the sync chain must
+win despite most compute being elsewhere.
+
+IOT (Fusionize++ fig. 3): AnalyzeSensor entry combines sequential
+preprocessing with parallel analysis of temperature, air quality and
+traffic (synchronous), then stores results asynchronously.
+
+Payloads are real JAX compute (matmul stacks) sized like the paper's
+functions — light sensor analytics, a few hundred us each on this host —
+so the invocation boundary carries a share of end-to-end latency
+comparable to the paper's network hop.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FunctionSpec
+
+DIM = 128
+
+
+def _w(seed: int, scale: float = 0.05, dim: int = DIM):
+    return jax.random.normal(jax.random.PRNGKey(seed), (dim, dim)) * scale
+
+
+def _work(x: jax.Array, w: jax.Array, n: int = 1) -> jax.Array:
+    for _ in range(n):
+        x = jnp.tanh(x @ w)
+    return x
+
+
+def deploy_tree(platform) -> str:
+    """Returns the entry function name."""
+
+    def f_d(ctx, p, x):
+        return _work(x, p)
+
+    def f_e(ctx, p, x):
+        return _work(x, p)
+
+    def f_b(ctx, p, x):
+        h = _work(x, p)
+        d = ctx.call("tree/D", h)
+        e = ctx.call("tree/E", h)
+        return d + e
+
+    def f_g(ctx, p, x):
+        return _work(x, p, n=6).sum()
+
+    def f_f(ctx, p, x):
+        h = _work(x, p, n=3)
+        ctx.call_async("tree/G", h)
+        return h.sum()
+
+    def f_c(ctx, p, x):
+        h = _work(x, p, n=3)  # async path dominates (fig. 4 caption)
+        ctx.call_async("tree/F", h)
+        return h.sum()
+
+    def f_a(ctx, p, x):
+        h = _work(x, p)
+        ctx.call_async("tree/C", h)
+        return ctx.call("tree/B", h)
+
+    platform.deploy(FunctionSpec("tree/A", f_a, _w(1), trust_domain="tree"))
+    platform.deploy(FunctionSpec("tree/B", f_b, _w(2), trust_domain="tree"))
+    platform.deploy(FunctionSpec("tree/C", f_c, _w(3), trust_domain="tree"))
+    platform.deploy(FunctionSpec("tree/D", f_d, _w(4), trust_domain="tree"))
+    platform.deploy(FunctionSpec("tree/E", f_e, _w(5), trust_domain="tree"))
+    platform.deploy(FunctionSpec("tree/F", f_f, _w(6), trust_domain="tree"))
+    platform.deploy(FunctionSpec("tree/G", f_g, _w(7), trust_domain="tree"))
+    return "tree/A"
+
+
+def deploy_iot(platform) -> str:
+    def f_temp(ctx, p, x):
+        return _work(x, p, n=2).mean(axis=1)
+
+    def f_airq(ctx, p, x):
+        return jnp.sqrt(jnp.maximum(_work(x, p, n=2), 0)).mean(axis=1)
+
+    def f_traffic(ctx, p, x):
+        return jax.nn.softmax(_work(x, p, n=2), axis=1).max(axis=1)
+
+    def f_store(ctx, p, x):
+        return (x * x).sum()
+
+    def f_analyze(ctx, p, x):
+        h = _work(x, p)  # sequential preprocessing step
+        t = ctx.call("iot/temperature", h)
+        a = ctx.call("iot/airquality", h)
+        r = ctx.call("iot/traffic", h)
+        result = jnp.stack([t, a, r], axis=1)
+        ctx.call_async("iot/store", result)
+        return result
+
+    platform.deploy(FunctionSpec("iot/analyze", f_analyze, _w(11), trust_domain="iot"))
+    platform.deploy(FunctionSpec("iot/temperature", f_temp, _w(12), trust_domain="iot"))
+    platform.deploy(FunctionSpec("iot/airquality", f_airq, _w(13), trust_domain="iot"))
+    platform.deploy(FunctionSpec("iot/traffic", f_traffic, _w(14), trust_domain="iot"))
+    platform.deploy(FunctionSpec("iot/store", f_store, None, trust_domain="iot"))
+    return "iot/analyze"
+
+
+APPS = {"TREE": deploy_tree, "IOT": deploy_iot}
+
+
+def make_request(seed: int = 0):
+    return jax.random.normal(jax.random.PRNGKey(seed % 97), (8, DIM)) * 0.5

@@ -1,0 +1,45 @@
+"""Microbenchmark: cost of one function boundary (the overhead Provuse
+removes). A -> B identity-chain invoked unfused (interpreter glue + platform
+dispatch) vs fused (single compiled program)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FunctionSpec, FusionPolicy, TinyJaxBackend
+
+
+def run(iters: int = 200) -> dict:
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 64)) * 0.05
+
+    def fn_b(ctx, p, x):
+        return x @ p
+
+    def fn_a(ctx, p, x):
+        return ctx.call("micro/B", x @ p)
+
+    def bench(fusion: bool) -> float:
+        platform = TinyJaxBackend(FusionPolicy(min_observations=1, merge_cost_s=0.0, enabled=fusion))
+        try:
+            platform.deploy(FunctionSpec("micro/A", fn_a, w, trust_domain="m"))
+            platform.deploy(FunctionSpec("micro/B", fn_b, w, trust_domain="m"))
+            x = jnp.ones((4, 64))
+            for _ in range(10):
+                platform.invoke("micro/A", x)  # warm + trigger fusion if enabled
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                platform.invoke("micro/A", x)
+            return (time.perf_counter() - t0) / iters * 1e6
+        finally:
+            platform.shutdown()
+
+    unfused_us = bench(False)
+    fused_us = bench(True)
+    return {
+        "unfused_us_per_call": round(unfused_us, 1),
+        "fused_us_per_call": round(fused_us, 1),
+        "boundary_overhead_us": round(unfused_us - fused_us, 1),
+    }

@@ -1,0 +1,140 @@
+"""§Perf hillclimbing harness: lower one (arch x shape) cell under a named
+variant, extract the three roofline terms, and diff against baseline.
+
+Each experiment = hypothesis -> change -> re-lower -> re-analyse (no real
+TPU: the "profile" is the loop-aware HLO analysis, per the assignment).
+
+  PYTHONPATH=src python -m benchmarks.perf_experiments --arch qwen3-moe-30b-a3b \
+      --shape train_4k --variant moe_ep_local
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import dataclasses
+import json
+import time
+
+
+def lower_cell(cfg, shape_name: str, *, rules_override=None):
+    import jax
+
+    from repro.configs import get_shape
+    from repro.launch.hlo_analysis import analyze
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.model import build_model
+    from repro.models.params import param_structs
+    from repro.optim import AdamWConfig, cosine_schedule
+    from repro.sharding.specs import decode_rules, infer_rules, train_rules
+    from repro.training.train_step import make_train_state_defs, make_train_step
+
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh()
+    if rules_override is not None:
+        rules = rules_override(mesh, cfg, shape)
+    elif shape.kind == "decode":
+        rules = decode_rules(mesh, kv_heads=cfg.num_kv_heads or None, batch=shape.global_batch)
+    elif shape.kind == "prefill":
+        rules = infer_rules(mesh, kv_heads=cfg.num_kv_heads or None)
+    else:
+        rules = train_rules(mesh)
+    model = build_model(cfg, rules)
+    t0 = time.perf_counter()
+    with mesh:
+        if shape.kind == "train":
+            ss = param_structs(make_train_state_defs(model), mesh, rules)
+            bs = param_structs(model.input_defs(shape), mesh, rules)
+            step = make_train_step(model, AdamWConfig(), cosine_schedule(3e-4, 100, 10000))
+            compiled = jax.jit(step, donate_argnums=0).lower(ss, bs).compile()
+        elif shape.kind == "prefill":
+            ps = param_structs(model.param_defs, mesh, rules)
+            ins = param_structs(model.input_defs(shape), mesh, rules)
+            compiled = jax.jit(model.prefill_fn).lower(ps, ins).compile()
+        else:
+            ps = param_structs(model.param_defs, mesh, rules)
+            ins = param_structs(model.input_defs(shape), mesh, rules)
+            cs = param_structs(model.cache_defs(shape), mesh, rules)
+            compiled = jax.jit(model.decode_fn, donate_argnums=2).lower(ps, ins, cs).compile()
+    s = analyze(compiled.as_text())
+    ma = compiled.memory_analysis()
+    footprint = ma.argument_size_in_bytes + ma.temp_size_in_bytes + ma.output_size_in_bytes
+    HW = {"c": 197e12, "m": 819e9, "i": 50e9}
+    terms = {
+        "compute_s": s.flops / HW["c"],
+        "memory_s": s.bytes / HW["m"],
+        "collective_s": s.collective_bytes / HW["i"],
+    }
+    return {
+        "terms": {k: round(v, 6) for k, v in terms.items()},
+        "dominant": max(terms, key=terms.get),
+        "bound_s": max(terms.values()),
+        "hbm_gb": round(footprint / 2**30, 3),
+        "collective_detail": {k: (v["count"], round(v["bytes"] / 1e9, 3)) for k, v in s.collective_detail.items()},
+        "top_collectives": [
+            {
+                "op": r["op"],
+                "gb": round(r["total_bytes"] / 1e9, 2),
+                "per_op_mb": round(r["per_op_bytes"] / 1e6, 2),
+                "trips": r["trips"],
+                "line": r["line"][:120],
+            }
+            for r in s.top_collectives[:8]
+        ],
+        "compile_s": round(time.perf_counter() - t0, 1),
+    }
+
+
+# ---------------------------------------------------------------- variants
+
+def variant_baseline(cfg):
+    return cfg
+
+
+def variant_moe_ep_local(cfg):
+    """EP-local dispatch/combine inside shard_map (psum_scatter combine)."""
+    return dataclasses.replace(cfg, moe_impl="dropping_ep")
+
+
+def variant_no_remat(cfg):
+    return dataclasses.replace(cfg, remat=False)
+
+
+def variant_more_microbatches(cfg):
+    return dataclasses.replace(cfg, microbatches=max(2, cfg.microbatches * 2))
+
+
+def variant_kv_fp8(cfg):
+    """fp8 (e4m3) KV cache: halves decode cache reads + residency."""
+    return dataclasses.replace(cfg, kv_cache_dtype="float8_e4m3fn")
+
+
+VARIANTS = {
+    "baseline": variant_baseline,
+    "moe_ep_local": variant_moe_ep_local,
+    "no_remat": variant_no_remat,
+    "more_microbatches": variant_more_microbatches,
+    "kv_fp8": variant_kv_fp8,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="baseline", choices=sorted(VARIANTS))
+    args = ap.parse_args()
+    from repro.configs import get_arch
+
+    cfg = VARIANTS[args.variant](get_arch(args.arch))
+    out = lower_cell(cfg, args.shape)
+    out.update(arch=args.arch, shape=args.shape, variant=args.variant)
+    print(json.dumps(out, indent=2))
+    os.makedirs("results", exist_ok=True)
+    with open("results/perf_experiments.jsonl", "a") as f:
+        f.write(json.dumps(out) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""The paper's technique in roofline terms: UNFUSED (vanilla) function-chain
+serving vs the Provuse-FUSED single program, for one decode cell.
+
+Vanilla deployment = the model served as independent functions (embed ->
+block-group_0..G-1 -> head), each its own compiled XLA program: we lower
+every stage separately and sum the roofline terms. The fused deployment is
+the monolithic decode program (same numbers as the dry-run grid cell).
+
+The unfused chain pays (per token):
+  * boundary I/O — every stage writes its residual-stream output to HBM and
+    the next reads it back, and XLA cannot fuse across the boundary;
+  * G+1 extra program launches (host dispatch, ~30 us each on TPU hosts);
+and exactly this is what the platform's runtime fusion removes — the FaaS
+double-billing chain, in compiled-program form.
+
+  PYTHONPATH=src python -m benchmarks.provuse_roofline --arch llama3.2-1b --shape decode_32k
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+
+DISPATCH_US = 30.0  # typical TPU host launch latency per extra program
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--shape", default="decode_32k")
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding
+
+    from repro.configs import get_arch, get_shape
+    from repro.launch.hlo_analysis import analyze
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import transformer as tfm
+    from repro.models.layers import apply_norm, embed_tokens, unembed
+    from repro.models.model import build_model
+    from repro.models.params import param_structs
+    from repro.sharding.specs import decode_rules, to_pspec
+
+    cfg = get_arch(args.arch)
+    shape = get_shape(args.shape)
+    if shape.kind != "decode":
+        raise SystemExit("provuse_roofline quantifies the decode chain; use --shape decode_32k")
+    mesh = make_production_mesh()
+    rules = decode_rules(mesh, kv_heads=cfg.num_kv_heads or None, batch=shape.global_batch)
+    model = build_model(cfg, rules)
+    kind = "moe" if cfg.family == "moe" else "dense"
+    L = cfg.num_layers
+    g = cfg.num_function_groups
+    while L % g:
+        g -= 1
+    per = L // g
+
+    HW = {"c": 197e12, "m": 819e9, "i": 50e9}
+
+    def terms_of(compiled):
+        s = analyze(compiled.as_text())
+        return {
+            "compute_s": s.flops / HW["c"],
+            "memory_s": s.bytes / HW["m"],
+            "collective_s": s.collective_bytes / HW["i"],
+        }
+
+    with mesh:
+        p_structs = param_structs(model.param_defs, mesh, rules)
+        in_structs = param_structs(model.input_defs(shape), mesh, rules)
+        cache_structs = param_structs(model.cache_defs(shape), mesh, rules)
+
+        # ---------- fused (Provuse-converged) ----------
+        fused = jax.jit(model.decode_fn, donate_argnums=2).lower(p_structs, in_structs, cache_structs).compile()
+        fused_terms = terms_of(fused)
+
+        # ---------- unfused chain: per-stage programs ----------
+        b = shape.global_batch
+        hid = jax.ShapeDtypeStruct(
+            (b, 1, cfg.d_model), jnp.bfloat16,
+            sharding=NamedSharding(mesh, to_pspec((b, 1, cfg.d_model), ("batch", None, None), rules, strict=True)),
+        )
+        stage_terms = []
+
+        def embed_stage(emb, batch):
+            return embed_tokens(emb, batch["tokens"])
+
+        c = jax.jit(embed_stage).lower(p_structs["embed"], in_structs).compile()
+        stage_terms.append(terms_of(c))
+
+        def slice_tree(tree, lo, hi):
+            def one(x):
+                if isinstance(x, jax.ShapeDtypeStruct):
+                    return jax.ShapeDtypeStruct((hi - lo, *x.shape[1:]), x.dtype, sharding=x.sharding)
+                return x[lo:hi]
+
+            return jax.tree.map(one, tree)
+
+        for i in range(g):
+            blk_structs = slice_tree(p_structs["blocks"], i * per, (i + 1) * per)
+            cache_slice = slice_tree(cache_structs, i * per, (i + 1) * per)
+
+            def group_stage(blk, x, cache, cur_len, _kind=kind):
+                return tfm.apply_stack_decode(blk, x, cache, cfg, _kind, rules, cur_len)[:2]
+
+            c = jax.jit(group_stage, donate_argnums=2).lower(
+                blk_structs, hid, cache_slice, in_structs["cur_len"]
+            ).compile()
+            stage_terms.append(terms_of(c))
+
+        def head_stage(params, x):
+            h = apply_norm(params["ln_f"], x, cfg)
+            return unembed(params["embed"], h)[:, 0]
+
+        c = jax.jit(head_stage).lower({"ln_f": p_structs["ln_f"], "embed": p_structs["embed"]}, hid).compile()
+        stage_terms.append(terms_of(c))
+
+    unfused = {k: sum(t[k] for t in stage_terms) for k in stage_terms[0]}
+    boundaries = len(stage_terms) - 1
+    dispatch_s = (len(stage_terms)) * DISPATCH_US / 1e6
+
+    def bound(t):
+        return max(t.values())
+
+    out = {
+        "arch": args.arch,
+        "shape": args.shape,
+        "stages": len(stage_terms),
+        "fused": {k: round(v, 6) for k, v in fused_terms.items()},
+        "fused_bound_s": round(bound(fused_terms), 6),
+        "unfused_sum": {k: round(v, 6) for k, v in unfused.items()},
+        "unfused_dispatch_s": round(dispatch_s, 6),
+        "unfused_bound_s": round(bound(unfused) + dispatch_s, 6),
+        "fusion_speedup": round((bound(unfused) + dispatch_s) / bound(fused_terms), 3),
+        "boundary_memory_delta_s": round(unfused["memory_s"] - fused_terms["memory_s"], 6),
+    }
+    print(json.dumps(out, indent=2))
+    os.makedirs("results", exist_ok=True)
+    with open("results/provuse_roofline.json", "w") as f:
+        json.dump(out, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Roofline table from the dry-run JSONL (see launch/dryrun.py + DESIGN.md).
+
+Per (arch x shape x mesh): the three terms in seconds, the dominant one,
+HBM fit, and MODEL_FLOPS/HLO_FLOPS. Also emits the markdown table used in
+EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+HW_NOTE = "197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI per chip (TPU v5e)"
+
+
+def load(path: str = "results/dryrun.jsonl") -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                try:
+                    rows.append(json.loads(line))
+                except json.JSONDecodeError:
+                    continue
+    # newest record per cell wins
+    dedup: dict[tuple, dict] = {}
+    for r in rows:
+        dedup[(r.get("arch"), r.get("shape"), r.get("mesh"))] = r
+    return list(dedup.values())
+
+
+def table(rows: list[dict], mesh: str = "pod16x16") -> list[dict]:
+    out = []
+    for r in sorted(rows, key=lambda r: (r.get("arch", ""), r.get("shape", ""))):
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") != "ok":
+            out.append({"arch": r.get("arch"), "shape": r.get("shape"), "status": r.get("status"), "reason": r.get("reason", "")})
+            continue
+        rf = r["roofline"]
+        out.append(
+            {
+                "arch": r["arch"],
+                "shape": r["shape"],
+                "status": "ok",
+                "compute_s": rf["compute_s"],
+                "memory_s": rf["memory_s"],
+                "collective_s": rf["collective_s"],
+                "dominant": rf["dominant"].replace("_s", ""),
+                "bound_s": rf["bound_s"],
+                "hbm_gb": r["hbm_per_device_gb"],
+                "fits": r["fits_16gb"],
+                "useful_ratio": round(r["useful_flops_ratio"], 3),
+                "roofline_frac": round(rf["compute_s"] / rf["bound_s"], 4) if rf["bound_s"] else None,
+            }
+        )
+    return out
+
+
+def markdown(rows: list[dict], mesh: str = "pod16x16") -> str:
+    t = table(rows, mesh)
+    lines = [
+        f"Hardware: {HW_NOTE}; mesh {mesh}.",
+        "",
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | HBM GB | fits | 6ND/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in t:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | {r['status']}: {r.get('reason','')[:60]} | — | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4g} | {r['memory_s']:.4g} | "
+            f"{r['collective_s']:.4g} | {r['dominant']} | {r['hbm_gb']} | {'Y' if r['fits'] else 'N'} | "
+            f"{r['useful_ratio']} | {r['roofline_frac']} |"
+        )
+    return "\n".join(lines)
+
+
+def summary(rows: list[dict]) -> dict:
+    ok = [r for r in rows if r.get("status") == "ok"]
+    doms: dict[str, int] = {}
+    for r in ok:
+        doms[r["roofline"]["dominant"]] = doms.get(r["roofline"]["dominant"], 0) + 1
+    return {
+        "cells_ok": len(ok),
+        "cells_skipped": sum(1 for r in rows if r.get("status") == "skipped"),
+        "cells_failed": sum(1 for r in rows if r.get("status") in ("error", "timeout")),
+        "fits_16gb": sum(1 for r in ok if r.get("fits_16gb")),
+        "dominant_terms": doms,
+    }

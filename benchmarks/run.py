@@ -1,0 +1,72 @@
+"""Benchmark driver — one section per paper table/figure + the roofline.
+
+Prints ``name,us_per_call,derived`` CSV (one row per measured quantity).
+Full structured outputs land in results/*.json.
+
+  PYTHONPATH=src python -m benchmarks.run             # everything
+  PYTHONPATH=src python -m benchmarks.run --quick     # shorter runs
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skip-fusion", action="store_true", help="skip the (slow) paper-fidelity runs")
+    args = ap.parse_args()
+
+    rows: list[tuple[str, float, str]] = []
+
+    # --- dispatch-boundary microbench (paper §1 motivation) ---
+    from benchmarks.dispatch_microbench import run as micro_run
+
+    micro = micro_run(iters=100 if args.quick else 200)
+    rows.append(("dispatch_unfused", micro["unfused_us_per_call"], "us/call through 1 boundary"))
+    rows.append(("dispatch_fused", micro["fused_us_per_call"], "us/call same chain fused"))
+    rows.append(("boundary_overhead", micro["boundary_overhead_us"], "us eliminated per boundary"))
+
+    # --- kernel reference timings ---
+    from benchmarks.kernel_bench import run as kernels_run
+
+    for r in kernels_run():
+        rows.append((r["name"], r["us_per_call"], "jnp oracle on host CPU"))
+
+    # --- paper Figs 5/6 + RAM + billing: {TREE, IOT} x {2 backends} ---
+    if not args.skip_fusion:
+        from benchmarks.fusion_benchmarks import run_all
+
+        fus = run_all(requests=60 if args.quick else 150, rate_hz=5.0)
+        for s in fus["summary"]:
+            tag = f"{s['app']}_{s['backend']}"
+            rows.append((f"{tag}_vanilla_median", s["vanilla_median_ms"] * 1e3, "us median E2E latency"))
+            rows.append((f"{tag}_fusion_median", s["fusion_median_ms"] * 1e3, "us median E2E latency"))
+            rows.append((f"{tag}_latency_reduction", s["latency_reduction_pct"], "% (paper: 26.33% avg)"))
+            rows.append((f"{tag}_ram_reduction", s["ram_reduction_pct"], "% (paper: 53.57% avg)"))
+            rows.append((f"{tag}_billing_reduction", s["billing_reduction_pct"], "% GB-s incl. double billing"))
+        rows.append(("mean_latency_reduction", fus["mean_latency_reduction_pct"], "% across all 4 configs (paper: 26.33)"))
+        rows.append(("mean_ram_reduction", fus["mean_ram_reduction_pct"], "% across all 4 configs (paper: 53.57)"))
+
+    # --- roofline summary from the dry-run grid ---
+    from benchmarks.roofline import load, summary
+
+    dr = load()
+    if dr:
+        s = summary(dr)
+        rows.append(("dryrun_cells_ok", s["cells_ok"], f"compiled cells (skipped={s['cells_skipped']}, failed={s['cells_failed']})"))
+        rows.append(("dryrun_fits_16gb", s["fits_16gb"], "cells within 16GB/chip"))
+        for term, n in sorted(s["dominant_terms"].items()):
+            rows.append((f"dominant_{term}", n, "cells bound by this roofline term"))
+    else:
+        print("# note: results/dryrun.jsonl not found — run `python -m repro.launch.dryrun --all`", file=sys.stderr)
+
+    print("name,us_per_call,derived")
+    for name, val, derived in rows:
+        print(f"{name},{val},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: deploy three functions, send traffic, watch Provuse fuse them.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FunctionSpec, FusionPolicy, TinyJaxBackend
+
+# --- user code: three independent functions; preprocess calls the others ---
+w_embed = jax.random.normal(jax.random.PRNGKey(0), (128, 128)) * 0.05
+w_score = jax.random.normal(jax.random.PRNGKey(1), (128, 128)) * 0.05
+
+
+def normalize(ctx, params, x):
+    return (x - x.mean(axis=-1, keepdims=True)) / (x.std(axis=-1, keepdims=True) + 1e-6)
+
+
+def score(ctx, params, x):
+    return jnp.tanh(x @ params).sum(axis=-1)
+
+
+def preprocess(ctx, params, x):
+    h = jnp.tanh(x @ params)
+    h = ctx.call("normalize", h)   # synchronous -> fusion candidate
+    return ctx.call("score", h)    # synchronous -> fusion candidate
+
+
+# --- platform side: nothing special, just deploy ---
+platform = TinyJaxBackend(FusionPolicy(min_observations=3, merge_cost_s=0.0))
+platform.deploy(FunctionSpec("preprocess", preprocess, w_embed))
+platform.deploy(FunctionSpec("normalize", normalize, None))
+platform.deploy(FunctionSpec("score", score, w_score))
+
+x = jnp.ones((8, 128))
+for i in range(10):
+    t0 = time.perf_counter()
+    out = platform.invoke("preprocess", x)
+    dt = (time.perf_counter() - t0) * 1e3
+    insts = len(platform.registry.live_instances())
+    print(f"request {i:2d}: {dt:8.2f} ms   live instances: {insts}")
+
+print("\nmerge log:")
+for m in platform.merger.merge_log:
+    print(f"  {'OK ' if m.healthy else 'ABORT'} {m.members} (build {m.build_s:.2f}s, freed {m.freed_bytes} B)")
+print("\nedges observed:", platform.handler.stats())
+platform.shutdown()

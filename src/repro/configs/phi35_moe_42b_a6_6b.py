@@ -1,0 +1,27 @@
+"""Phi-3.5-MoE-42B-A6.6B — 32L d_model=4096 32H (GQA kv=8) d_ff=6400,
+MoE 16e top-2, vocab 32064. [hf:microsoft/Phi-3.5-MoE-instruct]"""
+from repro.configs.base import ModelConfig, register_arch
+
+CONFIG = register_arch(
+    ModelConfig(
+        name="phi3.5-moe-42b-a6.6b",
+        family="moe",
+        num_layers=32,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        d_head=128,
+        d_ff=0,
+        moe_d_ff=6400,
+        num_experts=16,
+        num_experts_per_tok=2,
+        vocab_size=32064,
+        act="silu",
+        norm="layernorm",
+        rope_theta=10000.0,
+        num_function_groups=4,
+        moe_impl="dropping_ep",  # EP-local dispatch+psum_scatter combine (EXPERIMENTS §Perf A1)
+        microbatches=8,  # train_4k fits 16GB/chip with grad accumulation
+        source="hf:microsoft/Phi-3.5-MoE-instruct",
+    )
+)

@@ -1,0 +1,14 @@
+"""Provuse core: platform-side function fusion (the paper's contribution)."""
+from repro.core.billing import BillingMeter  # noqa: F401
+from repro.core.errors import (  # noqa: F401
+    DeploymentError,
+    HealthCheckError,
+    InvocationError,
+    ProvuseError,
+    UnknownFunctionError,
+)
+from repro.core.function import FunctionInstance, FunctionSpec  # noqa: F401
+from repro.core.handler import FunctionHandler  # noqa: F401
+from repro.core.merger import MergeEvent, Merger  # noqa: F401
+from repro.core.platform import OrchestratedBackend, ProvusePlatform, TinyJaxBackend  # noqa: F401
+from repro.core.policy import FusionDecision, FusionPolicy  # noqa: F401

@@ -1,0 +1,119 @@
+"""Invocation contexts — where fusion actually happens.
+
+Execution model (the FaaS analogy, made robust):
+
+* **Eager glue** (:class:`EagerContext`) — the vanilla runtime. User function
+  code runs op-by-op in the host interpreter (a container's language
+  runtime); every ``ctx.call`` is a *real blocking host dispatch* through the
+  platform to the callee instance. The wait is observed by the Function
+  Handler — the paper's blocking-socket detection.
+* **Compiled unit** (:class:`TraceContext`) — when an entry point is
+  *self-contained* (a leaf function, or a fused group whose internal calls
+  all resolve to co-located members), the platform traces it into ONE XLA
+  program: co-located calls inline; async calls become fire-and-forget
+  ``io_callback``s. Tracing that hits a *synchronous boundary* call raises
+  :class:`BoundaryCall` and the platform falls back to eager glue for that
+  entry — a compiled program never blocks mid-execution on another instance.
+
+Function fusion therefore does exactly what the paper's Merger does: it
+turns a chain of interpreter-glued units into one compiled unit, eliminating
+per-hop dispatch, interpreter overhead, and intermediate materialization.
+
+``AbstractContext`` mirrors user code under ``jax.eval_shape`` so the
+platform can pre-compute output signatures without running anything.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import io_callback
+
+
+class BoundaryCall(Exception):
+    """Raised when tracing an entry reaches a synchronous call to a function
+    that is NOT co-located — the entry cannot be a single compiled unit."""
+
+    def __init__(self, caller: str, callee: str):
+        super().__init__(f"{caller} -> {callee} crosses the instance boundary")
+        self.caller = caller
+        self.callee = callee
+
+
+class TraceContext:
+    """Context used while tracing a (candidate) compiled unit."""
+
+    def __init__(self, platform, instance, params_by_member, member: str):
+        self._platform = platform
+        self._instance = instance
+        self._params = params_by_member
+        self.member = member
+
+    def _child(self, member: str) -> "TraceContext":
+        return TraceContext(self._platform, self._instance, self._params, member)
+
+    def call(self, name: str, *args):
+        if name in self._instance.members:  # co-located: inline (FUSION)
+            spec = self._instance.members[name]
+            return spec.fn(self._child(name), self._params[name], *args)
+        raise BoundaryCall(self.member, name)
+
+    def call_async(self, name: str, *args):
+        """Fire-and-forget: enqueue at the callee WITHOUT waiting. Safe inside
+        a compiled program (the callback never blocks on another program)."""
+        caller_fn = self.member
+        platform = self._platform
+        caller_instance = self._instance
+
+        def _fire(*flat_args):
+            platform.async_call(caller_instance, caller_fn, name, flat_args)
+            return np.int32(0)
+
+        return io_callback(_fire, jax.ShapeDtypeStruct((), jnp.int32), *args, ordered=False)
+
+
+class EagerContext:
+    """Context for interpreter-glued (vanilla) execution."""
+
+    def __init__(self, platform, instance, params_by_member, member: str):
+        self._platform = platform
+        self._instance = instance
+        self._params = params_by_member
+        self.member = member
+
+    def _child(self, member: str) -> "EagerContext":
+        return EagerContext(self._platform, self._instance, self._params, member)
+
+    def call(self, name: str, *args):
+        if name in self._instance.members:  # co-located member: run its code here
+            spec = self._instance.members[name]
+            return spec.fn(self._child(name), self._params[name], *args)
+        # real blocking dispatch through the platform (observed sync edge)
+        return self._platform.remote_call(self._instance, self.member, name, args)
+
+    def call_async(self, name: str, *args):
+        self._platform.async_call(self._instance, self.member, name, args)
+        return jnp.zeros((), jnp.int32)
+
+
+class AbstractContext:
+    """Shape-inference twin (used under ``jax.eval_shape``).
+
+    A nested ``call`` resolves the callee's output signature through the
+    platform's (memoized, cycle-checked) shape registry — pure Python
+    recursion outside the trace — and materializes abstract zeros of that
+    signature inside the trace. Async calls contribute only their token."""
+
+    def __init__(self, platform, member: str):
+        self._platform = platform
+        self.member = member
+
+    def call(self, name: str, *args):
+        arg_structs = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(jnp.shape(a), jnp.result_type(a)), args
+        )
+        out = self._platform.output_structs(name, arg_structs)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), out)
+
+    def call_async(self, name: str, *args):
+        return jnp.zeros((), jnp.int32)

@@ -1,0 +1,21 @@
+"""Platform error types."""
+
+
+class ProvuseError(Exception):
+    """Base class for platform errors."""
+
+
+class UnknownFunctionError(ProvuseError):
+    pass
+
+
+class DeploymentError(ProvuseError):
+    pass
+
+
+class HealthCheckError(ProvuseError):
+    """Merged instance failed its canary health check — swap aborted."""
+
+
+class InvocationError(ProvuseError):
+    pass

@@ -1,0 +1,220 @@
+"""FaaS functions and their serving instances.
+
+A :class:`FunctionSpec` is the *bring-your-own-function-code* unit: a pure
+JAX-traceable callable ``fn(ctx, params, *args)`` whose only impurity is
+calling other functions through the platform context (``ctx.call`` /
+``ctx.call_async``).
+
+A :class:`FunctionInstance` is the running analogue of a FaaS container: it
+hosts one or more functions' code + weights. Entries whose trace is
+*self-contained* (leaf functions; fused groups whose calls all resolve to
+co-located members) are served as ONE compiled XLA program. Entries with a
+synchronous boundary call run as *interpreter glue* (EagerContext): the
+function's code executes in the host runtime and each outbound call is a
+real blocking dispatch through the platform — the blocking-socket analogue
+the Function Handler observes. Fusion turns glued chains into compiled
+units; the payoff is real compiler-level cross-function optimization, not
+simulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import threading
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.errors import InvocationError
+
+
+@dataclasses.dataclass(frozen=True)
+class FunctionSpec:
+    name: str
+    fn: Callable  # fn(ctx, params, *args) -> pytree
+    params: Any = None
+    trust_domain: str = "default"
+    description: str = ""
+
+
+# Per-instance runtime footprint (container language runtime + loaded libs).
+# A FaaS instance is a container; tinyFaaS/K8s Python containers idle at
+# ~30-60 MiB RSS, and the paper's RAM savings come precisely from retiring
+# these duplicated runtimes. Our in-process instances share one interpreter,
+# so the platform's RAM metric models this per-container constant explicitly
+# (documented in EXPERIMENTS.md §Paper-fidelity); buffer accounting
+# (weights + compiled workspace) is measured, not modeled.
+INSTANCE_RUNTIME_OVERHEAD_BYTES = 32 * 2**20
+
+
+def tree_bytes(tree) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        if hasattr(leaf, "nbytes"):
+            total += int(leaf.nbytes)
+        elif hasattr(leaf, "size") and hasattr(leaf, "dtype"):
+            total += int(leaf.size) * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def _structs_of(tree):
+    return jax.tree.map(lambda a: jax.ShapeDtypeStruct(jnp.shape(a), jnp.result_type(a)), tree)
+
+
+def _struct_key(tree) -> tuple:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return (str(treedef), tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
+
+
+class InstanceState(enum.Enum):
+    DEPLOYING = "deploying"
+    READY = "ready"
+    DRAINING = "draining"
+    TERMINATED = "terminated"
+
+
+@dataclasses.dataclass
+class CompiledEntry:
+    compiled: Any
+    temp_bytes: int
+    code_bytes: int
+    output_bytes: int
+    compile_s: float
+
+
+class FunctionInstance:
+    """One running execution unit hosting >= 1 functions ("members")."""
+
+    _counter = 0
+    _counter_lock = threading.Lock()
+
+    def __init__(self, specs: dict[str, FunctionSpec], platform):
+        with FunctionInstance._counter_lock:
+            FunctionInstance._counter += 1
+            seq = FunctionInstance._counter
+        self.members: dict[str, FunctionSpec] = dict(specs)
+        self.instance_id = f"inst{seq}[{'+'.join(sorted(specs))}]"
+        self.platform = platform
+        self.params: dict[str, Any] = {n: s.params for n, s in specs.items()}
+        self.state = InstanceState.DEPLOYING
+        self._compiled: dict[tuple, CompiledEntry] = {}
+        self._eager_entries: set[tuple] = set()
+        self._lock = threading.Lock()
+        self._active = 0
+        self._idle_event = threading.Event()
+        self._idle_event.set()
+        self.created_at = time.perf_counter()
+
+    # ----------------------------------------------------------- lifecycle
+
+    def mark_ready(self):
+        self.state = InstanceState.READY
+
+    def begin_request(self):
+        with self._lock:
+            if self.state not in (InstanceState.READY, InstanceState.DEPLOYING, InstanceState.DRAINING):
+                raise InvocationError(f"{self.instance_id} is {self.state.value}")
+            self._active += 1
+            self._idle_event.clear()
+
+    def end_request(self):
+        with self._lock:
+            self._active -= 1
+            if self._active == 0:
+                self._idle_event.set()
+
+    def retire(self, timeout: float = 30.0) -> int:
+        """Drain in-flight requests, terminate, free weights. Returns bytes
+        freed (the RAM the fusion reclaims)."""
+        self.state = InstanceState.DRAINING
+        self._idle_event.wait(timeout)
+        freed = self.resident_bytes()
+        self.state = InstanceState.TERMINATED
+        self.params = {}
+        self._compiled = {}
+        return freed
+
+    # ----------------------------------------------------------- compile
+
+    def _entry_callable(self, entry: str):
+        from repro.core.context import TraceContext
+
+        spec = self.members[entry]
+
+        def run(params_by_member, *args):
+            ctx = TraceContext(self.platform, self, params_by_member, entry)
+            return spec.fn(ctx, params_by_member[entry], *args)
+
+        return run
+
+    def get_compiled(self, entry: str, args: tuple) -> CompiledEntry | None:
+        """Compiled program for this entry, or None when the entry crosses an
+        instance boundary synchronously (-> interpreter-glue execution)."""
+        key = (entry, _struct_key(args))
+        with self._lock:
+            if key in self._eager_entries:
+                return None
+            got = self._compiled.get(key)
+        if got is not None:
+            return got
+        from repro.core.context import BoundaryCall
+
+        t0 = time.perf_counter()
+        run = self._entry_callable(entry)
+        params_structs = _structs_of(self.params)
+        arg_structs = _structs_of(args)
+        try:
+            lowered = jax.jit(run).lower(params_structs, *arg_structs)
+            compiled = lowered.compile()
+        except BoundaryCall:
+            with self._lock:
+                self._eager_entries.add(key)
+            return None
+        temp = code = out = 0
+        try:
+            ma = compiled.memory_analysis()
+            temp = int(getattr(ma, "temp_size_in_bytes", 0) or 0)
+            code = int(getattr(ma, "generated_code_size_in_bytes", 0) or 0)
+            out = int(getattr(ma, "output_size_in_bytes", 0) or 0)
+        except Exception:  # pragma: no cover - backend without memory analysis
+            pass
+        entry_obj = CompiledEntry(compiled, temp, code, out, time.perf_counter() - t0)
+        with self._lock:
+            self._compiled[key] = entry_obj
+        return entry_obj
+
+    # ----------------------------------------------------------- execute
+
+    def execute(self, entry: str, args: tuple):
+        """Run one request to completion (synchronous, device-synced)."""
+        ce = self.get_compiled(entry, args)
+        if ce is None:  # interpreter glue: host-dispatched outbound calls
+            from repro.core.context import EagerContext
+
+            spec = self.members[entry]
+            ctx = EagerContext(self.platform, self, self.params, entry)
+            out = spec.fn(ctx, self.params[entry], *args)
+        else:
+            out = ce.compiled(self.params, *args)
+        jax.block_until_ready(out)
+        return out
+
+    # ----------------------------------------------------------- metrics
+
+    def resident_bytes(self) -> int:
+        """Live footprint of this execution unit: the container runtime
+        constant + weights + compiled-program workspace (temp arena),
+        generated code, and output staging buffers."""
+        if self.state == InstanceState.TERMINATED:
+            return 0
+        total = INSTANCE_RUNTIME_OVERHEAD_BYTES + tree_bytes(self.params)
+        with self._lock:
+            for ce in self._compiled.values():
+                total += ce.temp_bytes + ce.code_bytes + ce.output_bytes
+        return total
+
+    def __repr__(self):
+        return f"<{self.instance_id} {self.state.value} members={sorted(self.members)}>"

@@ -1,0 +1,119 @@
+"""The Function Handler: dispatch coordination + synchronous-call detection.
+
+Every invocation — external (client) or internal (function-to-function) —
+flows through the handler. For internal calls it observes, at run time,
+whether the issuing execution *blocked* waiting for the callee (the paper's
+blocking-socket observation; here the caller's compiled program is parked
+inside a ``pure_callback`` until the callee responds). Observed synchronous
+edges accumulate per (caller, callee) and are reported to the fusion policy;
+when the policy fires, a fusion request with the two function identifiers is
+submitted to the Merger — exactly the §3 control flow.
+
+The handler also:
+* captures the latest request per function as the *canary* used by the
+  Merger's health check;
+* maintains the per-thread invocation stack so blocked time is attributed
+  to the right billing record (the double-billing measurement).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable
+
+from repro.core.billing import BillingMeter, InvocationRecord
+
+
+@dataclasses.dataclass
+class EdgeStats:
+    sync_count: int = 0
+    async_count: int = 0
+    total_wait_s: float = 0.0
+
+    @property
+    def mean_wait_s(self) -> float:
+        return self.total_wait_s / self.sync_count if self.sync_count else 0.0
+
+
+@dataclasses.dataclass
+class _ActiveInvocation:
+    function: str
+    instance_id: str
+    t_start: float
+    resident_bytes: int
+    blocked_s: float = 0.0
+
+
+class FunctionHandler:
+    def __init__(self, meter: BillingMeter, on_fusion_candidate: Callable[[str, str], None] | None = None):
+        self.meter = meter
+        self.on_fusion_candidate = on_fusion_candidate
+        self.edges: dict[tuple[str, str], EdgeStats] = {}
+        self.canaries: dict[str, tuple] = {}
+        self._lock = threading.Lock()
+        self._tls = threading.local()
+
+    # ------------------------------------------------------- invocation stack
+
+    def _stack(self) -> list[_ActiveInvocation]:
+        if not hasattr(self._tls, "stack"):
+            self._tls.stack = []
+        return self._tls.stack
+
+    def enter(self, function: str, instance) -> None:
+        self._stack().append(
+            _ActiveInvocation(function, instance.instance_id, time.perf_counter(), instance.resident_bytes())
+        )
+
+    def exit(self, function: str) -> None:
+        stack = self._stack()
+        inv = stack.pop()
+        self.meter.record(
+            InvocationRecord(
+                function=inv.function,
+                instance=inv.instance_id,
+                t_start=inv.t_start,
+                t_end=time.perf_counter(),
+                resident_bytes=inv.resident_bytes,
+                blocked_s=inv.blocked_s,
+            )
+        )
+
+    def attribute_blocked(self, seconds: float) -> None:
+        stack = self._stack()
+        if stack:
+            stack[-1].blocked_s += seconds
+
+    # ------------------------------------------------------- observation
+
+    def record_canary(self, function: str, args: tuple) -> None:
+        with self._lock:
+            self.canaries[function] = args
+
+    def canary(self, function: str):
+        with self._lock:
+            return self.canaries.get(function)
+
+    def observe_edge(self, caller: str, callee: str, *, sync: bool, wait_s: float = 0.0) -> None:
+        notify = False
+        with self._lock:
+            st = self.edges.setdefault((caller, callee), EdgeStats())
+            if sync:
+                st.sync_count += 1
+                st.total_wait_s += wait_s
+                notify = True
+            else:
+                st.async_count += 1
+        if notify and self.on_fusion_candidate is not None:
+            self.on_fusion_candidate(caller, callee)
+
+    def sync_edges(self) -> dict[tuple[str, str], EdgeStats]:
+        with self._lock:
+            return {k: dataclasses.replace(v) for k, v in self.edges.items() if v.sync_count}
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                f"{a}->{b}": dataclasses.asdict(v) for (a, b), v in sorted(self.edges.items())
+            }

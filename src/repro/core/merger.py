@@ -1,0 +1,147 @@
+"""The Merger: builds, health-checks, and swaps in fused execution units.
+
+Mirrors §3/§4 of the paper:
+  fusion request (caller, callee identifiers) from the Function Handler
+    -> policy decision (sync-only, trust domain, amortization)
+    -> build a NEW execution unit hosting every function of the fusion
+       group, preserving each function's identifier (no collisions — the
+       members dict is keyed by name, the analogue of the preserved
+       directory structure)
+    -> "image build" = retrace members with co-located calls inlined +
+       XLA compile (can run in the background while originals keep serving)
+    -> health check: canary request through the new unit must match the
+       live (unfused) path's output
+    -> atomic traffic swap in the routing table
+    -> drain + terminate the originals, freeing their memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.core.errors import HealthCheckError
+from repro.core.function import FunctionInstance
+
+
+@dataclasses.dataclass
+class MergeEvent:
+    t_completed: float
+    members: tuple[str, ...]
+    freed_bytes: int
+    build_s: float
+    healthy: bool
+    reason: str = ""
+
+
+def _allclose_tree(a, b, rtol: float, atol: float) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(la) != len(lb):
+        return False
+    for x, y in zip(la, lb):
+        xf = np.asarray(x, dtype=np.float64) if np.asarray(x).dtype.kind == "f" else np.asarray(x)
+        yf = np.asarray(y, dtype=np.float64) if np.asarray(y).dtype.kind == "f" else np.asarray(y)
+        if xf.shape != yf.shape:
+            return False
+        if not np.allclose(xf, yf, rtol=rtol, atol=atol):
+            return False
+    return True
+
+
+class Merger:
+    def __init__(self, platform, policy, *, health_rtol: float = 2e-2, health_atol: float = 1e-2, async_build: bool = False):
+        self.platform = platform
+        self.policy = policy
+        self.health_rtol = health_rtol
+        self.health_atol = health_atol
+        self.async_build = async_build
+        self.merge_log: list[MergeEvent] = []
+        self._inflight: set[tuple[str, str]] = set()
+        self._lock = threading.Lock()
+        self._threads: list[threading.Thread] = []
+
+    # ------------------------------------------------------------ entry
+
+    def submit(self, caller: str, callee: str) -> None:
+        """Fusion request from the Function Handler."""
+        stats = self.platform.handler.edges.get((caller, callee))
+        if stats is None:
+            return
+        spec_a = self.platform.spec_of(caller)
+        spec_b = self.platform.spec_of(callee)
+        decision = self.policy.decide(caller, callee, stats, spec_a.trust_domain, spec_b.trust_domain)
+        if not decision.fuse:
+            return
+        with self._lock:
+            if (caller, callee) in self._inflight:
+                return
+            self._inflight.add((caller, callee))
+        if self.async_build:
+            th = threading.Thread(target=self._do_merge, args=(caller, callee, decision.group), daemon=True)
+            self._threads.append(th)
+            th.start()
+        else:
+            self._do_merge(caller, callee, decision.group)
+
+    def wait_idle(self, timeout: float = 120.0) -> None:
+        for th in self._threads:
+            th.join(timeout)
+        self._threads = [t for t in self._threads if t.is_alive()]
+
+    # ------------------------------------------------------------ merge
+
+    def _do_merge(self, caller: str, callee: str, group: frozenset[str]) -> None:
+        t0 = time.perf_counter()
+        platform = self.platform
+        try:
+            specs = {name: platform.spec_of(name) for name in group}
+            merged = FunctionInstance(specs, platform)
+            platform.attach_instance(merged)
+
+            # --- health check on captured canary traffic (warms the compile) ---
+            healthy = True
+            checked = 0
+            for name in sorted(group):
+                canary = platform.handler.canary(name)
+                if canary is None:
+                    continue
+                ref = platform.invoke(name, *canary)  # old (still-routed) path
+                got = merged.execute(name, canary)
+                checked += 1
+                if not _allclose_tree(ref, got, self.health_rtol, self.health_atol):
+                    healthy = False
+                    break
+            if checked == 0:
+                healthy = False  # no canary -> cannot verify; do not swap
+
+            if not healthy:
+                # Abort: never swap an unverified unit. Originals keep serving.
+                platform.detach_instance(merged)
+                reason = "health check failed" if checked else "no canary traffic captured"
+                self.merge_log.append(
+                    MergeEvent(time.perf_counter(), tuple(sorted(group)), 0, time.perf_counter() - t0, False, reason)
+                )
+                return
+
+            merged.mark_ready()
+            displaced = platform.registry.swap(group, merged)
+            self.policy.commit(caller, callee)
+
+            # --- retire originals no longer routed anywhere ---
+            still_live = {id(i) for i in platform.registry.live_instances()}
+            freed = 0
+            for inst in {id(v): v for v in displaced.values()}.values():
+                if id(inst) not in still_live and inst is not merged:
+                    freed += platform.retire_instance(inst)
+
+            build_s = time.perf_counter() - t0
+            self.policy.feedback_merge_cost(build_s)
+            self.merge_log.append(
+                MergeEvent(time.perf_counter(), tuple(sorted(group)), freed, build_s, True)
+            )
+        finally:
+            with self._lock:
+                self._inflight.discard((caller, callee))

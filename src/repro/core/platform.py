@@ -1,0 +1,316 @@
+"""Provuse platform backends.
+
+Two backends mirror the paper's two implementations:
+
+* :class:`TinyJaxBackend` — the tinyFaaS analogue: a minimal in-process
+  dispatcher. Invocations execute in the calling thread; routing is a dict
+  lookup; async branches run on a small shared pool.
+* :class:`OrchestratedBackend` — the Kubernetes analogue: every execution
+  unit gets a worker (queue + thread = Pod), invocations travel through a
+  Service-like indirection (routing table -> worker queue -> Future),
+  merged units go through a readiness gate before the Service selector
+  flips (rolling swap), and displaced units are drained before termination.
+
+Both share the Function Handler, Merger, policy, and billing meter — the
+Provuse mechanism is backend-agnostic, as the paper demonstrates.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any
+
+import jax
+
+from repro.core.billing import BillingMeter
+from repro.core.context import AbstractContext
+from repro.core.errors import DeploymentError, InvocationError, UnknownFunctionError
+from repro.core.function import FunctionInstance, FunctionSpec, InstanceState, _struct_key, _structs_of
+from repro.core.handler import FunctionHandler
+from repro.core.merger import Merger
+from repro.core.policy import FusionPolicy
+from repro.core.registry import RoutingTable
+
+
+class ProvusePlatform:
+    """Base platform: deploy / invoke / observe / fuse."""
+
+    backend_name = "base"
+
+    def __init__(self, policy: FusionPolicy | None = None, *, async_build: bool = False,
+                 health_rtol: float = 2e-2, health_atol: float = 1e-2):
+        self.registry = RoutingTable()
+        self.meter = BillingMeter()
+        self.policy = policy or FusionPolicy()
+        self.handler = FunctionHandler(self.meter, on_fusion_candidate=self._on_candidate)
+        self.merger = Merger(self, self.policy, async_build=async_build,
+                             health_rtol=health_rtol, health_atol=health_atol)
+        self._specs: dict[str, FunctionSpec] = {}
+        self._shape_cache: dict[tuple, Any] = {}
+        self._shape_stack: list[str] = []
+        self._shape_lock = threading.RLock()
+        # Fusion candidates are processed OFF the data path: an edge observed
+        # mid-request (inside a parked pure_callback) is queued and the merge
+        # runs after the request completes. Merging inside the callback would
+        # re-enter the currently-suspended executable (measured: ~30s stall
+        # on the 1-core host) — and control-plane work does not belong on the
+        # request path anyway.
+        self._pending_candidates: list[tuple[str, str]] = []
+        self._pending_lock = threading.Lock()
+        self._draining = threading.Lock()
+
+    # ------------------------------------------------------------- deploy
+
+    def deploy(self, spec: FunctionSpec) -> FunctionInstance:
+        if spec.name in self._specs:
+            raise DeploymentError(f"function {spec.name!r} already deployed")
+        self._specs[spec.name] = spec
+        instance = FunctionInstance({spec.name: spec}, self)
+        self.attach_instance(instance)
+        instance.mark_ready()
+        self.registry.register(spec.name, instance)
+        return instance
+
+    def spec_of(self, name: str) -> FunctionSpec:
+        try:
+            return self._specs[name]
+        except KeyError:
+            raise UnknownFunctionError(name) from None
+
+    # ------------------------------------------------------------- shapes
+
+    def output_structs(self, name: str, args: tuple):
+        key = (name, _struct_key(args))
+        with self._shape_lock:
+            if key in self._shape_cache:
+                return self._shape_cache[key]
+            if name in self._shape_stack:
+                raise InvocationError(f"call cycle through {name!r}: {self._shape_stack}")
+            spec = self.spec_of(name)
+            self._shape_stack.append(name)
+            try:
+                def run(params, *a):
+                    return spec.fn(AbstractContext(self, name), params, *a)
+
+                out = jax.eval_shape(run, _structs_of(spec.params), *_structs_of(args))
+            finally:
+                self._shape_stack.pop()
+            self._shape_cache[key] = out
+            return out
+
+    # ------------------------------------------------------------- hooks
+
+    def _on_candidate(self, caller: str, callee: str) -> None:
+        with self._pending_lock:
+            if (caller, callee) not in self._pending_candidates:
+                self._pending_candidates.append((caller, callee))
+
+    def _drain_candidates(self) -> None:
+        if not self._draining.acquire(blocking=False):
+            return  # a merge in progress is already invoking health checks
+        try:
+            while True:
+                with self._pending_lock:
+                    if not self._pending_candidates:
+                        return
+                    caller, callee = self._pending_candidates.pop(0)
+                self.merger.submit(caller, callee)
+        finally:
+            self._draining.release()
+
+    def attach_instance(self, instance: FunctionInstance) -> None:
+        """Backend hook: provision execution resources for an instance."""
+
+    def detach_instance(self, instance: FunctionInstance) -> None:
+        """Backend hook: tear down resources for a never-promoted instance."""
+
+    def retire_instance(self, instance: FunctionInstance) -> int:
+        freed = instance.retire()
+        self.detach_instance(instance)
+        return freed
+
+    # ------------------------------------------------------------- running
+
+    def _run_request(self, instance: FunctionInstance, entry: str, args: tuple):
+        instance.begin_request()
+        self.handler.enter(entry, instance)
+        try:
+            return instance.execute(entry, args)
+        finally:
+            self.handler.exit(entry)
+            instance.end_request()
+
+    def invoke(self, name: str, *args):
+        """External (client) invocation."""
+        self.handler.record_canary(name, args)
+        try:
+            try:
+                return self._dispatch_sync(name, args)
+            except InvocationError:
+                # fault tolerance: re-provision a fresh instance from the spec
+                self._redeploy(name)
+                return self._dispatch_sync(name, args)
+        finally:
+            self._drain_candidates()
+
+    def _redeploy(self, name: str) -> None:
+        spec = self.spec_of(name)
+        fresh = FunctionInstance({name: spec}, self)
+        self.attach_instance(fresh)
+        fresh.mark_ready()
+        self.registry.register(name, fresh)
+
+    def remote_call(self, caller_instance: FunctionInstance, caller_fn: str, callee: str, args: tuple):
+        """Blocking function-to-function dispatch (runs inside the caller's
+        pure_callback — the caller's program is parked until this returns)."""
+        self.handler.record_canary(callee, args)
+        t0 = time.perf_counter()
+        out = self._dispatch_sync(callee, args)
+        wait = time.perf_counter() - t0
+        self.handler.attribute_blocked(wait)
+        self.handler.observe_edge(caller_fn, callee, sync=True, wait_s=wait)
+        return out
+
+    def async_call(self, caller_instance: FunctionInstance, caller_fn: str, callee: str, args: tuple) -> None:
+        self.handler.observe_edge(caller_fn, callee, sync=False)
+        self._dispatch_async(callee, args)
+
+    # ------------------------------------------------------------- metrics
+
+    def ram_bytes(self) -> int:
+        return sum(inst.resident_bytes() for inst in self.registry.live_instances())
+
+    def stats(self) -> dict:
+        return {
+            "backend": self.backend_name,
+            "ram_bytes": self.ram_bytes(),
+            "instances": [repr(i) for i in self.registry.live_instances()],
+            "edges": self.handler.stats(),
+            "merges": [
+                {
+                    "members": e.members,
+                    "freed_bytes": e.freed_bytes,
+                    "build_s": round(e.build_s, 4),
+                    "healthy": e.healthy,
+                }
+                for e in self.merger.merge_log
+            ],
+            "billing": self.meter.summary(),
+        }
+
+    # ------------------------------------------------------------- backend API
+
+    def _dispatch_sync(self, name: str, args: tuple):
+        raise NotImplementedError
+
+    def _dispatch_async(self, name: str, args: tuple) -> None:
+        raise NotImplementedError
+
+    def shutdown(self) -> None:
+        pass
+
+
+class TinyJaxBackend(ProvusePlatform):
+    """tinyFaaS analogue: direct in-thread dispatch, minimal overhead."""
+
+    backend_name = "tinyjax"
+
+    def __init__(self, *args, async_workers: int = 2, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._async_pool = ThreadPoolExecutor(max_workers=async_workers, thread_name_prefix="tinyjax-async")
+
+    def _dispatch_sync(self, name: str, args: tuple):
+        instance = self.registry.resolve(name)
+        return self._run_request(instance, name, args)
+
+    def _dispatch_async(self, name: str, args: tuple) -> None:
+        self._async_pool.submit(self._safe_async, name, args)
+
+    def _safe_async(self, name: str, args: tuple) -> None:
+        try:
+            self._dispatch_sync(name, args)
+        except Exception:
+            pass  # async branches are fire-and-forget; failures are logged by billing absence
+
+    def shutdown(self) -> None:
+        self._async_pool.shutdown(wait=True)
+
+
+class _Worker:
+    """A Pod: serial request loop over a queue."""
+
+    def __init__(self, platform: "OrchestratedBackend", instance: FunctionInstance):
+        self.instance = instance
+        self.platform = platform
+        self.q: "queue.Queue[tuple[str, tuple, Future] | None]" = queue.Queue()
+        self.thread = threading.Thread(target=self._loop, daemon=True, name=f"worker-{instance.instance_id}")
+        self.thread.start()
+
+    def _loop(self):
+        while True:
+            item = self.q.get()
+            if item is None:
+                return
+            entry, args, fut = item
+            try:
+                fut.set_result(self.platform._run_request(self.instance, entry, args))
+            except Exception as exc:  # noqa: BLE001
+                fut.set_exception(exc)
+
+    def submit(self, entry: str, args: tuple) -> Future:
+        fut: Future = Future()
+        self.q.put((entry, args, fut))
+        return fut
+
+    def stop(self):
+        self.q.put(None)
+
+
+class OrchestratedBackend(ProvusePlatform):
+    """Kubernetes analogue: queue+thread Pods, Service indirection, rolling
+    swaps with readiness gating."""
+
+    backend_name = "orchestrated"
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._workers: dict[str, _Worker] = {}
+        self._workers_lock = threading.Lock()
+
+    def attach_instance(self, instance: FunctionInstance) -> None:
+        with self._workers_lock:
+            self._workers[instance.instance_id] = _Worker(self, instance)
+
+    def detach_instance(self, instance: FunctionInstance) -> None:
+        with self._workers_lock:
+            worker = self._workers.pop(instance.instance_id, None)
+        if worker:
+            worker.stop()
+
+    def _worker_for(self, instance: FunctionInstance) -> _Worker:
+        with self._workers_lock:
+            worker = self._workers.get(instance.instance_id)
+        if worker is None:
+            raise InvocationError(f"no worker for {instance.instance_id}")
+        return worker
+
+    def _dispatch_sync(self, name: str, args: tuple):
+        instance = self.registry.resolve(name)
+        current = threading.current_thread()
+        worker = self._worker_for(instance)
+        if worker.thread is current:
+            # self-call inside the same pod: run inline (avoids deadlock)
+            return self._run_request(instance, name, args)
+        return worker.submit(name, args).result()
+
+    def _dispatch_async(self, name: str, args: tuple) -> None:
+        instance = self.registry.resolve(name)
+        self._worker_for(instance).submit(name, args)
+
+    def shutdown(self) -> None:
+        with self._workers_lock:
+            for worker in self._workers.values():
+                worker.stop()
+            self._workers = {}

@@ -1,0 +1,99 @@
+"""Fusion policy: which observed synchronous edges become fusion requests.
+
+Constraints carried over from the paper (§3, §6):
+* only *synchronous* edges fuse (async/non-blocking calls never do);
+* both functions must share a trust domain (fusion reduces isolation);
+* fusion cost (rebuild + redeploy, here: retrace + recompile) is amortized
+  over subsequent invocations — the policy requires the projected saving
+  over the amortization horizon to exceed the merge cost.
+
+Fusion groups are maintained by union-find: A+B merged, then (B->C) observed
+=> the next merge hosts {A, B, C}. The platform converges to one execution
+unit per synchronous chain, which is the paper's Fig. 5 staircase.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+
+class UnionFind:
+    def __init__(self):
+        self._parent: dict[str, str] = {}
+
+    def find(self, x: str) -> str:
+        self._parent.setdefault(x, x)
+        root = x
+        while self._parent[root] != root:
+            root = self._parent[root]
+        while self._parent[x] != root:  # path compression
+            self._parent[x], x = root, self._parent[x]
+        return root
+
+    def union(self, a: str, b: str) -> str:
+        ra, rb = self.find(a), self.find(b)
+        if ra != rb:
+            self._parent[rb] = ra
+        return ra
+
+    def group(self, x: str) -> frozenset[str]:
+        root = self.find(x)
+        return frozenset(m for m in self._parent if self.find(m) == root)
+
+
+@dataclasses.dataclass
+class FusionDecision:
+    fuse: bool
+    reason: str
+    group: frozenset[str] = frozenset()
+
+
+@dataclasses.dataclass
+class FusionPolicy:
+    """min_observations: sync-edge observations before fusing (lets the
+    platform be sure the edge is hot, not incidental).
+    merge_cost_s: assumed cost of one merge (retrace+recompile+healthcheck);
+    measured values are fed back by the Merger after each merge.
+    amortization_horizon: invocations over which the merge must pay off.
+    """
+
+    min_observations: int = 3
+    amortization_horizon: int = 500
+    merge_cost_s: float = 2.0
+    enabled: bool = True
+
+    def __post_init__(self):
+        self.groups = UnionFind()
+        self._lock = threading.Lock()
+        self._fused_edges: set[tuple[str, str]] = set()
+
+    def feedback_merge_cost(self, seconds: float) -> None:
+        # exponential moving average of observed merge costs
+        self.merge_cost_s = 0.5 * self.merge_cost_s + 0.5 * seconds
+
+    def decide(self, caller: str, callee: str, stats, trust_a: str, trust_b: str) -> FusionDecision:
+        with self._lock:
+            if not self.enabled:
+                return FusionDecision(False, "fusion disabled")
+            if (caller, callee) in self._fused_edges:
+                return FusionDecision(False, "edge already fused")
+            if trust_a != trust_b:
+                return FusionDecision(False, f"trust domains differ ({trust_a} vs {trust_b})")
+            if self.groups.find(caller) == self.groups.find(callee):
+                return FusionDecision(False, "already in same fusion group")
+            if stats.sync_count < self.min_observations:
+                return FusionDecision(False, f"only {stats.sync_count} observations")
+            projected_saving = stats.mean_wait_s * self.amortization_horizon
+            if projected_saving < self.merge_cost_s:
+                return FusionDecision(
+                    False,
+                    f"not amortizable: saving {projected_saving:.3f}s < cost {self.merge_cost_s:.3f}s",
+                )
+            group = self.groups.group(caller) | self.groups.group(callee) | {caller, callee}
+            return FusionDecision(True, "sync edge hot + amortizable", frozenset(group))
+
+    def commit(self, caller: str, callee: str) -> frozenset[str]:
+        with self._lock:
+            self._fused_edges.add((caller, callee))
+            self.groups.union(caller, callee)
+            return self.groups.group(caller)

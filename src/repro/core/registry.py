@@ -1,0 +1,59 @@
+"""Routing table: function name -> serving instance.
+
+The paper's analogue of the tinyFaaS API-gateway entries / Kubernetes
+Service selectors. Swaps are atomic (single lock) and versioned so the
+Merger can redirect a whole fusion group in one step while requests keep
+flowing ("routes incoming requests for the local functions to the combined
+instance", §3).
+"""
+from __future__ import annotations
+
+import threading
+from typing import TYPE_CHECKING, Iterable
+
+from repro.core.errors import UnknownFunctionError
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.function import FunctionInstance
+
+
+class RoutingTable:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._routes: dict[str, "FunctionInstance"] = {}
+        self.version = 0
+
+    def register(self, name: str, instance: "FunctionInstance") -> None:
+        with self._lock:
+            self._routes[name] = instance
+            self.version += 1
+
+    def resolve(self, name: str) -> "FunctionInstance":
+        with self._lock:
+            try:
+                return self._routes[name]
+            except KeyError:
+                raise UnknownFunctionError(name) from None
+
+    def swap(self, names: Iterable[str], instance: "FunctionInstance") -> dict[str, "FunctionInstance"]:
+        """Atomically point every name at ``instance``; returns the previous
+        instances (for draining/retirement)."""
+        with self._lock:
+            old = {}
+            for name in names:
+                if name in self._routes:
+                    old[name] = self._routes[name]
+                self._routes[name] = instance
+            self.version += 1
+            return old
+
+    def names(self) -> list[str]:
+        with self._lock:
+            return sorted(self._routes)
+
+    def live_instances(self) -> list["FunctionInstance"]:
+        with self._lock:
+            seen: dict[int, "FunctionInstance"] = {}
+            for inst in self._routes.values():
+                seen[id(inst)] = inst
+            return list(seen.values())

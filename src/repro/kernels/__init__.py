@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the platform's compute hot spots.
+
+flash_attention / decode_attention / ssd_scan / moe_gmm, each with a
+pure-jnp oracle in ref.py and a jit'd dispatcher in ops.py (kernel on TPU,
+oracle on CPU, interpret mode for validation).
+"""

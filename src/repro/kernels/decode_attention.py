@@ -1,0 +1,98 @@
+"""Flash-decoding attention — Pallas TPU kernel for the serve path.
+
+One query token per sequence against a long KV cache. Tiling:
+grid = (B, H, S/bk); the kv sweep is the minor axis, so the partial-softmax
+state (m, l, acc) is carried in VMEM scratch across kv blocks — the split-K
+decode schedule of FlashDecoding [arXiv:2311.01282] mapped onto the TPU's
+sequential grid. Valid-length masking comes from the per-sequence
+``cur_len`` vector (continuous batching: each request has its own length).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref, *, scale: float, block_k: int, num_k_blocks: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, :]  # (hd,)
+    k = k_ref[0, :, 0, :]  # (bk, hd)
+    v = v_ref[0, :, 0, :]  # (bk, hd)
+    cur = len_ref[0]
+
+    s = jnp.einsum("kh,h->k", k.astype(jnp.float32), q.astype(jnp.float32)) * scale  # (bk,)
+    cols = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_k,), 0)
+    s = jnp.where(cols < cur, s, NEG_INF)
+
+    m_prev = m_ref[0]
+    m_cur = jnp.maximum(m_prev, jnp.max(s))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)  # (bk,)
+    l_ref[0] = l_ref[0] * alpha + jnp.sum(p)
+    m_ref[0] = m_cur
+    acc_ref[...] = acc_ref[...] * alpha + jnp.einsum(
+        "k,kh->h", p, v.astype(jnp.float32)
+    )[None, :]
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        l = l_ref[0]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, :] = (acc_ref[0] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    cur_len: jax.Array,
+    *,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, H, hd); k, v: (B, S, KV, hd); cur_len: (B,) -> (B, H, hd)."""
+    b, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    block_k = min(block_k, s)
+    if s % block_k:
+        raise ValueError(f"S={s} must divide block_k={block_k}")
+    grid = (b, h, s // block_k)
+    scale = 1.0 / (hd**0.5)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, block_k=block_k, num_k_blocks=s // block_k
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda ib, ih, ik: (ib, ih, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda ib, ih, ik, g=g: (ib, ik, ih // g, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda ib, ih, ik, g=g: (ib, ik, ih // g, 0)),
+            pl.BlockSpec((1,), lambda ib, ih, ik: (ib,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda ib, ih, ik: (ib, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, cur_len)

@@ -1,0 +1,118 @@
+"""Causal GQA flash attention — Pallas TPU kernel.
+
+Tiling: grid = (B, H, T/bq, S/bk). TPU executes the grid sequentially with
+the last axis minor, so the kv index ``ik`` sweeps fully for each q block
+``iq``; the online-softmax running state (m, l, acc) lives in VMEM scratch
+and is carried across the ``ik`` sweep [FlashAttention, arXiv:2205.14135,
+re-tiled for the MXU: bq = bk = 128 and head_dim-sized accumulators].
+
+GQA: the BlockSpec index maps route q head ``h`` to kv head ``h // G`` —
+grouped heads reuse the same K/V block stream (no replication in HBM).
+
+Causality is handled two ways:
+  * blocks fully above the diagonal contribute nothing — masked to -inf and
+    skipped cheaply (their contribution to l is 0);
+  * the diagonal block applies the per-element triangular mask.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, causal: bool, scale: float, block_q: int, block_k: int, num_k_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, :]  # (bq, hd)
+    k = k_ref[0, :, 0, :]  # (bk, hd)
+    v = v_ref[0, :, 0, :]  # (bk, hd)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bk)
+
+    if causal:
+        rows = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(rows >= cols, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])  # (bq, bk)
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1)
+    m_ref[...] = m_cur
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, T, H, hd); k, v: (B, S, KV, hd) -> (B, T, H, hd)."""
+    b, t, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    block_q = min(block_q, t)
+    block_k = min(block_k, s)
+    if t % block_q or s % block_k:
+        raise ValueError(f"seq lengths ({t},{s}) must divide blocks ({block_q},{block_k})")
+    grid = (b, h, t // block_q, s // block_k)
+    scale = 1.0 / (hd**0.5)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        causal=causal,
+        scale=scale,
+        block_q=block_q,
+        block_k=block_k,
+        num_k_blocks=s // block_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), lambda ib, ih, iq, ik: (ib, iq, ih, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda ib, ih, iq, ik, g=g: (ib, ik, ih // g, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda ib, ih, iq, ik, g=g: (ib, ik, ih // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd), lambda ib, ih, iq, ik: (ib, iq, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # m: running row max
+            pltpu.VMEM((block_q,), jnp.float32),      # l: running row sum
+            pltpu.VMEM((block_q, hd), jnp.float32),   # acc: unnormalized output
+        ],
+        interpret=interpret,
+    )(q, k, v)

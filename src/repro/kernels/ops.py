@@ -1,0 +1,63 @@
+"""jit'd dispatch wrappers: Pallas kernel on TPU, jnp oracle elsewhere.
+
+The models call these entry points; the CPU container (tests, dry-run
+lowering) takes the ref path, a real TPU deployment takes the kernel path.
+``REPRO_USE_PALLAS=1`` forces kernels (with ``interpret=True`` off-TPU — used
+by the kernel benchmarks).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_kernel
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.moe_gmm import moe_gmm as _gmm_kernel
+from repro.kernels.ssd_scan import ssd_scan as _ssd_kernel
+
+
+def _mode() -> str:
+    """'kernel' | 'interpret' | 'ref'."""
+    forced = os.environ.get("REPRO_USE_PALLAS", "")
+    if jax.default_backend() == "tpu":
+        return "ref" if forced == "0" else "kernel"
+    if forced == "1":
+        return "interpret"
+    return "ref"
+
+
+def _aligned(*dims_and_blocks: tuple[int, int]) -> bool:
+    return all(d % b == 0 for d, b in dims_and_blocks)
+
+
+def attention(q, k, v, *, causal: bool = True):
+    mode = _mode()
+    if mode != "ref" and _aligned((q.shape[1], 128), (k.shape[1], 128)):
+        return _flash_kernel(q, k, v, causal=causal, interpret=(mode == "interpret"))
+    return ref.mha_ref(q, k, v, causal=causal)
+
+
+def decode_attention(q, k, v, cur_len):
+    mode = _mode()
+    if mode != "ref" and _aligned((k.shape[1], 512)):
+        return _decode_kernel(q, k, v, cur_len, interpret=(mode == "interpret"))
+    return ref.decode_attn_ref(q, k, v, cur_len)
+
+
+def ssd(x, bm, cm, dt, a_log, d_skip, *, chunk: int = 256):
+    mode = _mode()
+    if mode != "ref" and _aligned((x.shape[1], chunk)):
+        return _ssd_kernel(x, bm, cm, dt, a_log, d_skip, chunk=chunk, interpret=(mode == "interpret"))
+    y, _ = ref.ssd_ref(x, bm, cm, dt, a_log, d_skip)
+    return y.astype(x.dtype)
+
+
+def gmm(xe, w):
+    mode = _mode()
+    e, c, d = xe.shape
+    f = w.shape[2]
+    if mode != "ref" and _aligned((c, 128), (d, 128), (f, 128)):
+        return _gmm_kernel(xe, w, interpret=(mode == "interpret"))
+    return ref.gmm_ref(xe, w)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each oracle is the mathematically transparent O(T^2)/dense formulation —
+slow and memory-hungry by design. Kernel tests sweep shapes/dtypes and
+assert_allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True, q_offset: int = 0) -> jax.Array:
+    """q: (B, T, H, hd); k, v: (B, S, KV, hd) with H % KV == 0 -> (B, T, H, hd)."""
+    b, t, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, t, kv, g, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    scores = jnp.einsum("btkgh,bskh->bkgts", qg, k, preferred_element_type=jnp.float32) * scale
+    if causal:
+        qi = jnp.arange(t) + q_offset
+        si = jnp.arange(s)
+        mask = si[None, :] <= qi[:, None]
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", probs.astype(v.dtype), v)
+    return out.reshape(b, t, h, hd)
+
+
+def decode_attn_ref(q: jax.Array, k: jax.Array, v: jax.Array, cur_len: jax.Array) -> jax.Array:
+    """q: (B, H, hd); k, v: (B, S, KV, hd); cur_len: (B,) -> (B, H, hd)."""
+    b, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, k, preferred_element_type=jnp.float32) * scale
+    mask = jnp.arange(s)[None, :] < cur_len[:, None]  # (B, S)
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs.astype(v.dtype), v)
+    return out.reshape(b, h, hd)
+
+
+def ssd_ref(x, bm, cm, dt, a_log, d_skip):
+    """Naive O(T^2) SSD (exact dual form, no chunking).
+
+    x: (B,T,H,P); bm/cm: (B,T,G,N); dt: (B,T,H) fp32; a_log, d_skip: (H,)
+    -> (B,T,H,P) fp32 and final state (B,H,P,N) fp32."""
+    b, t, h, p = x.shape
+    grp = bm.shape[2]
+    hpg = h // grp
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dta = dt.astype(jnp.float32) * a  # (B,T,H)
+    cum = jnp.cumsum(dta, axis=1)
+    # decay[i, j] = exp(cum_i - cum_j), i >= j
+    li = cum[:, :, None, :] - cum[:, None, :, :]  # (B, Ti, Tj, H)
+    iq = jnp.arange(t)
+    causal = iq[:, None] >= iq[None, :]
+    decay = jnp.where(causal[None, :, :, None], jnp.exp(li), 0.0)
+    lmat = decay * dt.astype(jnp.float32)[:, None, :, :]  # (B,Ti,Tj,H)
+    scores = jnp.einsum("bign,bjgn->bijg", cm.astype(jnp.float32), bm.astype(jnp.float32))
+    scores = jnp.repeat(scores, hpg, axis=3) * lmat
+    y = jnp.einsum("bijh,bjhp->bihp", scores, x.astype(jnp.float32))
+    y = y + x.astype(jnp.float32) * d_skip.astype(jnp.float32)[None, None, :, None]
+    # final state
+    w_j = jnp.exp(cum[:, -1:, :] - cum) * dt.astype(jnp.float32)  # (B,T,H)
+    bh = jnp.repeat(bm, hpg, axis=2).astype(jnp.float32)  # (B,T,H,N)
+    state = jnp.einsum("bthp,bthn->bhpn", x.astype(jnp.float32) * w_j[..., None], bh)
+    return y, state
+
+
+def gmm_ref(xe: jax.Array, w: jax.Array) -> jax.Array:
+    """Per-expert GEMM. xe: (E, C, d); w: (E, d, f) -> (E, C, f)."""
+    return jnp.einsum("ecd,edf->ecf", xe, w, preferred_element_type=jnp.float32).astype(xe.dtype)

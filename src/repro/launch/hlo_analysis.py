@@ -1,0 +1,385 @@
+"""Loop-aware static cost analysis of optimized (post-SPMD) HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts each ``while`` body
+ONCE, but scan-over-layers puts ~everything inside a while loop — an
+88-layer model would be undercounted ~88x. This analyzer parses the HLO
+module text into computations, detects while ops and their trip counts
+(from the loop-bound constant in the condition computation), and sums
+
+  * FLOPs        — from ``dot`` ops (2 * prod(result_dims) * contraction),
+                   including dots inside fusion subcomputations (attributed
+                   to their callsites), scaled by enclosing trip counts;
+  * HBM bytes    — per top-level instruction: result + operand bytes (the
+                   fusion boundary is where XLA materializes buffers;
+                   bitcast/tuple/parameter plumbing excluded), scaled by
+                   trip counts;
+  * collectives  — per op kind, bytes moved per device with ring-model
+                   group-size factors ((g-1)/g), scaled by trip counts.
+
+Operands in optimized HLO are untyped name references, so each computation
+carries a symbol table (instruction results + header parameters) to resolve
+operand shapes.
+
+This is a *static, per-device* traffic model of the compiled program — the
+quantity HloCostAnalysis reports, with loops unrolled arithmetically.
+Validated against 6*N*D analytic FLOPs in tests/test_dryrun_small.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1,
+}
+
+SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+COMP_HEADER_RE = re.compile(r"^\s*(?:ENTRY\s+)?%([\w.\-]+)\s+\((.*)\)\s*->\s*(.+)\{\s*$")
+INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+OP_RE = re.compile(r"[)\]}\s]([a-z][a-z0-9\-]*(?:-start|-done)?)\(")
+REF_RE = re.compile(r"%([\w.\-]+)")
+CALL_TARGET_RE = re.compile(r"(?:calls|to_apply)=\{?%?([\w.\-]+)")
+GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+CONST_RE = re.compile(r"constant\((\d+)\)")
+HEADER_PARAM_RE = re.compile(r"([\w.\-]+)\s*:\s*((?:\([^)]*\))|(?:[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?))")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+# Ops whose operands/results MUST touch HBM even under TPU-grade fusion.
+# The CPU backend leaves elementwise chains unfused, so counting every
+# instruction massively overstates what a TPU compile would move; this set
+# is the fusion-optimal traffic model (documented in EXPERIMENTS.md §Roofline).
+_TRAFFIC_OPS = {
+    "dot", "convolution", "gather", "scatter", "dynamic-slice",
+    "dynamic-update-slice", "concatenate", "sort", "rng-bit-generator",
+    *COLLECTIVES,
+}
+
+
+def _shapes_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 0)
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    result_bytes: int
+    result_dims: list[int]
+    operand_names: list[str]
+    rhs: str
+    group_size: int
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+    symbols: dict[str, int]  # name -> result bytes
+    dims: dict[str, list[int]] = dataclasses.field(default_factory=dict)  # name -> result dims
+
+
+def _split_op(rhs: str) -> tuple[str, str, str]:
+    """rhs -> (result_type_text, op, paren_contents). The op is the first
+    `word(` occurrence outside the result-type prefix."""
+    m = OP_RE.search(" " + rhs)  # pad so a leading op still matches
+    if m is None:
+        return rhs, "", ""
+    op = m.group(1)
+    idx = m.end()  # position after '('
+    depth = 1
+    j = idx
+    while j < len(rhs) + 1 and depth:
+        ch = (" " + rhs)[j]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        j += 1
+    head = (" " + rhs)[: m.start() + 1]
+    paren = (" " + rhs)[idx : j - 1]
+    return head, op, paren
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    current: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        header = COMP_HEADER_RE.match(line)
+        if header:
+            current = Computation(header.group(1), [], {})
+            comps[current.name] = current
+            for pname, ptype in HEADER_PARAM_RE.findall(header.group(2)):
+                current.symbols[pname] = _shapes_bytes(ptype)
+                first = SHAPE_RE.findall(ptype)
+                if first:
+                    current.dims[pname] = [int(d) for d in first[0][1].split(",") if d]
+            continue
+        if current is None:
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        m = INSTR_RE.match(line.split(" metadata=")[0])
+        if m is None:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        head, op, paren = _split_op(rhs)
+        result_bytes = _shapes_bytes(head)
+        first = SHAPE_RE.findall(head)
+        result_dims = [int(d) for d in first[0][1].split(",") if d] if first else []
+        current.symbols[name] = result_bytes
+        operand_names = REF_RE.findall(paren)
+        g = 1
+        gi = GROUPS_IOTA_RE.search(rhs)
+        if gi:
+            g = int(gi.group(2))
+        else:
+            gb = GROUPS_BRACE_RE.search(rhs)
+            if gb:
+                g = len([x for x in gb.group(1).split(",") if x.strip() != ""])
+        current.dims[name] = result_dims
+        current.instrs.append(Instr(name, op, result_bytes, result_dims, operand_names, rhs, g))
+    return comps
+
+
+@dataclasses.dataclass
+class CostSummary:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_detail: dict = dataclasses.field(default_factory=dict)
+    while_trips: dict = dataclasses.field(default_factory=dict)
+    top_collectives: list = dataclasses.field(default_factory=list)
+    top_traffic: list = dataclasses.field(default_factory=list)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_detail": self.collective_detail,
+            "while_trips": self.while_trips,
+        }
+
+
+class HloAnalyzer:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        # dims table per computation: name -> dims (instructions + header params)
+        self.dims: dict[str, dict[str, list[int]]] = {
+            cname: comp.dims for cname, comp in self.comps.items()
+        }
+        self.by_name: dict[str, dict[str, Instr]] = {
+            cname: {ins.name: ins for ins in comp.instrs} for cname, comp in self.comps.items()
+        }
+        self._fusion_cache: dict[str, float] = {}
+
+    _PURE_LAYOUT_OPS = {"convert", "bitcast", "copy", "transpose", "parameter", "reshape", "broadcast"}
+
+    def _is_layout_fusion(self, called: str) -> bool:
+        comp = self.comps.get(called)
+        if comp is None:
+            return False
+        return all(ins.op in self._PURE_LAYOUT_OPS or not ins.op for ins in comp.instrs)
+
+    def _operand_traffic(self, comp: Computation, name: str) -> int:
+        """HBM bytes read for one operand. If the operand is a dtype convert /
+        layout-only fusion (e.g. a bf16 or fp8 KV cache upconverted to the
+        dot's accumulation type), the HBM read happens at the SOURCE dtype —
+        on TPU the convert fuses into the consumer (MXU upconverts in-flight)
+        — so count the producer's own operand bytes."""
+        ins = self.by_name.get(comp.name, {}).get(name)
+        if ins is not None and ins.operand_names:
+            src = sum(comp.symbols.get(n, 0) for n in ins.operand_names)
+            if ins.op == "convert" and 0 < src < ins.result_bytes:
+                return src
+            if ins.op == "fusion":
+                called = CALL_TARGET_RE.findall(ins.rhs)
+                if called and self._is_layout_fusion(called[0]) and 0 < src < ins.result_bytes:
+                    return src
+        return comp.symbols.get(name, 0)
+
+    # ------------------------------------------------------------- helpers
+
+    def entry_name(self) -> str:
+        called: set[str] = set()
+        for c in self.comps.values():
+            for ins in c.instrs:
+                called.update(CALL_TARGET_RE.findall(ins.rhs))
+                for key in ("body", "condition", "branch_computations"):
+                    for mt in re.findall(rf"{key}=\{{?%?([\w.\-]+)", ins.rhs):
+                        called.add(mt)
+        roots = [n for n in self.comps if n not in called]
+        # prefer one that looks like main
+        for n in roots:
+            if "main" in n:
+                return n
+        if roots:
+            return roots[0]
+        return next(iter(self.comps), "")
+
+    def _dot_flops(self, ins: Instr, comp: Computation) -> float:
+        if ins.op != "dot":
+            return 0.0
+        res_elems = 1
+        head = ins.rhs.split("dot(")[0]
+        mres = SHAPE_RE.findall(head)
+        if mres:
+            for d in mres[0][1].split(","):
+                if d:
+                    res_elems *= int(d)
+        contraction = 1
+        mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rhs)
+        lhs_dims = self.dims[comp.name].get(ins.operand_names[0], []) if ins.operand_names else []
+        if mc and mc.group(1):
+            for ax in mc.group(1).split(","):
+                ax = int(ax)
+                if ax < len(lhs_dims):
+                    contraction *= lhs_dims[ax]
+        return 2.0 * res_elems * contraction
+
+    def _fusion_cost(self, name: str, visiting: set[str]) -> tuple[float, float]:
+        """(dot flops, dot bytes) inside a fusion subcomputation tree."""
+        if name in self._fusion_cache:
+            return self._fusion_cache[name]
+        comp = self.comps.get(name)
+        if comp is None or name in visiting:
+            return (0.0, 0.0)
+        visiting.add(name)
+        flops = 0.0
+        dot_bytes = 0.0
+        for ins in comp.instrs:
+            f = self._dot_flops(ins, comp)
+            flops += f
+            if f:
+                dot_bytes += ins.result_bytes + sum(self._operand_traffic(comp, n) for n in ins.operand_names)
+            for t in CALL_TARGET_RE.findall(ins.rhs):
+                sub = self._fusion_cost(t, visiting)
+                flops += sub[0]
+                dot_bytes += sub[1]
+        visiting.discard(name)
+        self._fusion_cache[name] = (flops, dot_bytes)
+        return (flops, dot_bytes)
+
+    def _trip_count(self, cond_name: str) -> int:
+        cond = self.comps.get(cond_name)
+        if cond is None:
+            return 1
+        best = 1
+        for ins in cond.instrs:
+            for c in CONST_RE.findall(ins.rhs):
+                best = max(best, int(c))
+        return best
+
+    def _collective_moved(self, base: str, ins: Instr, comp: Computation) -> float:
+        g = ins.group_size
+        if g <= 1:
+            return 0.0
+        frac = (g - 1) / g
+        operand_bytes = sum(comp.symbols.get(n, 0) for n in ins.operand_names)
+        if base == "all-gather":
+            return ins.result_bytes * frac
+        if base == "all-reduce":
+            return 2.0 * operand_bytes * frac
+        if base == "reduce-scatter":
+            return operand_bytes * frac
+        if base == "all-to-all":
+            return operand_bytes * frac
+        return operand_bytes  # collective-permute
+
+    # ------------------------------------------------------------- analyze
+
+    def analyze(self, entry: str | None = None) -> CostSummary:
+        if not self.comps:
+            return CostSummary(collective_detail={op: {"count": 0, "bytes": 0.0} for op in COLLECTIVES})
+        entry = entry or self.entry_name()
+        summary = CostSummary(collective_detail={op: {"count": 0, "bytes": 0.0} for op in COLLECTIVES})
+        visiting: set[str] = set()
+
+        def walk(name: str, mult: float) -> None:
+            comp = self.comps.get(name)
+            if comp is None or name in visiting:
+                return
+            visiting.add(name)
+            for ins in comp.instrs:
+                op = ins.op
+                if op.endswith("-done"):
+                    continue
+                base = op[: -len("-start")] if op.endswith("-start") else op
+                if base == "while":
+                    mb = re.search(r"body=%?([\w.\-]+)", ins.rhs)
+                    mc = re.search(r"condition=%?([\w.\-]+)", ins.rhs)
+                    trips = self._trip_count(mc.group(1)) if mc else 1
+                    summary.while_trips[f"{name}/{ins.name}"] = trips
+                    if mb:
+                        walk(mb.group(1), mult * trips)
+                    continue
+                if base in ("conditional", "call"):
+                    for key in ("branch_computations", "to_apply", "calls"):
+                        for t in re.findall(rf"{key}=\{{?%?([\w.\-]+)", ins.rhs):
+                            walk(t, mult)
+                    continue
+                if base in _TRAFFIC_OPS:
+                    if base in ("scatter", "dynamic-update-slice"):
+                        # in-place update (donated/aliased buffers on TPU):
+                        # traffic = updates read + updated-region write, NOT
+                        # a full read+write of the target buffer
+                        moved_bytes = 2 * sum(comp.symbols.get(n, 0) for n in ins.operand_names[1:])
+                    else:
+                        operand_bytes = sum(self._operand_traffic(comp, n) for n in ins.operand_names)
+                        moved_bytes = ins.result_bytes + operand_bytes
+                    summary.bytes += moved_bytes * mult
+                    if moved_bytes * mult > 0:
+                        summary.top_traffic.append(
+                            {"op": base, "total_bytes": moved_bytes * mult, "per_op_bytes": moved_bytes,
+                             "trips": mult, "comp": name, "line": ins.rhs[:140]}
+                        )
+                summary.flops += self._dot_flops(ins, comp) * mult
+                if base == "fusion":
+                    for t in CALL_TARGET_RE.findall(ins.rhs):
+                        f, b = self._fusion_cost(t, visiting)
+                        summary.flops += f * mult
+                        summary.bytes += b * mult
+                        if b * mult > 0:
+                            summary.top_traffic.append(
+                                {"op": "fusion:dots", "total_bytes": b * mult, "per_op_bytes": b,
+                                 "trips": mult, "comp": name, "line": ins.rhs[:140]}
+                            )
+                if base in COLLECTIVES:
+                    moved = self._collective_moved(base, ins, comp)
+                    summary.collective_bytes += moved * mult
+                    summary.collective_detail[base]["count"] += max(1, int(mult))
+                    summary.collective_detail[base]["bytes"] += moved * mult
+                    summary.top_collectives.append(
+                        {
+                            "op": base,
+                            "total_bytes": moved * mult,
+                            "per_op_bytes": moved,
+                            "trips": mult,
+                            "comp": name,
+                            "line": ins.rhs[:160],
+                        }
+                    )
+            visiting.discard(name)
+
+        walk(entry, 1.0)
+        summary.top_collectives.sort(key=lambda r: -r["total_bytes"])
+        summary.top_collectives = summary.top_collectives[:20]
+        summary.top_traffic.sort(key=lambda r: -r["total_bytes"])
+        summary.top_traffic = summary.top_traffic[:20]
+        return summary
+
+
+def analyze(text: str, entry: str | None = None) -> CostSummary:
+    return HloAnalyzer(text).analyze(entry)

@@ -1,0 +1,159 @@
+"""GQA/MQA attention: train/prefill (chunked causal), decode (KV cache),
+and cross-attention for enc-dec.
+
+The full-sequence path is *query-chunked* (``lax.scan`` over query blocks) so
+the lowered program never materializes a (T, S) score tensor — the jnp
+analogue of the flash-attention memory profile. On TPU the Pallas kernels in
+``repro.kernels`` replace this path (see kernels/ops.py dispatch); the
+lowering structure (FLOPs/bytes) is equivalent for roofline purposes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, rms_norm_1d
+from repro.models.params import ParamDef
+
+DEFAULT_Q_CHUNK = 512
+
+
+def attn_defs(cfg: ModelConfig):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    defs = {
+        "wq": ParamDef((d, h, hd), ("embed_fsdp", "heads", "head_dim")),
+        "wk": ParamDef((d, kv, hd), ("embed_fsdp", "kv_heads", "head_dim")),
+        "wv": ParamDef((d, kv, hd), ("embed_fsdp", "kv_heads", "head_dim")),
+        "wo": ParamDef((h, hd, d), ("heads", "head_dim", "embed_fsdp")),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), ("head_dim",), init="ones")
+        defs["k_norm"] = ParamDef((hd,), ("head_dim",), init="ones")
+    return defs
+
+
+def qkv_project(params, x: jax.Array, cfg: ModelConfig, positions: jax.Array | None):
+    """x: (B, T, d) -> q (B,T,H,hd), k/v (B,T,KV,hd); applies QK-norm + RoPE."""
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"])
+    if "q_norm" in params:
+        q = rms_norm_1d(params["q_norm"], q)
+        k = rms_norm_1d(params["k_norm"], k)
+    if positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B,Tq,KV,G,hd), k: (B,S,KV,hd) -> (B,KV,G,Tq,S) fp32."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    s = jnp.einsum("btkgh,bskh->bkgts", q, k, preferred_element_type=jnp.float32)
+    return s * scale
+
+
+def _group_q(q: jax.Array, num_kv: int) -> jax.Array:
+    b, t, h, hd = q.shape
+    return q.reshape(b, t, num_kv, h // num_kv, hd)
+
+
+def full_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_chunk: int = DEFAULT_Q_CHUNK,
+    q_offset: jax.Array | int = 0,
+) -> jax.Array:
+    """Query-chunked attention. q: (B,T,H,hd); k,v: (B,S,KV,hd) -> (B,T,H,hd).
+
+    ``q_offset``: absolute position of q[0] (for prefill-continuation /
+    chunked-prefill the query block may start past 0).
+    """
+    from repro.kernels import ops as kops
+
+    if kops._mode() == "kernel" and isinstance(q_offset, int) and q_offset == 0:
+        if q.shape[1] % 128 == 0 and k.shape[1] % 128 == 0:
+            return kops.attention(q, k, v, causal=causal)  # Pallas on TPU
+    b, t, h, hd = q.shape
+    num_kv = k.shape[2]
+    qg = _group_q(q, num_kv)
+    s_len = k.shape[1]
+    chunk = min(q_chunk, t)
+    if t % chunk != 0:  # fall back to one block for odd lengths (tests)
+        chunk = t
+    n_chunks = t // chunk
+    qg = qg.reshape(b, n_chunks, chunk, num_kv, h // num_kv, hd)
+    k_idx = jnp.arange(s_len)
+
+    def body(carry, inp):
+        q_blk, blk_i = inp  # (B, chunk, KV, G, hd)
+        scores = _gqa_scores(q_blk, k)  # (B,KV,G,chunk,S) fp32
+        if causal:
+            q_idx = blk_i * chunk + jnp.arange(chunk) + q_offset
+            mask = k_idx[None, :] <= q_idx[:, None]
+            scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgts,bskh->btkgh", probs.astype(v.dtype), v)
+        return carry, out
+
+    _, outs = jax.lax.scan(body, None, (jnp.moveaxis(qg, 1, 0), jnp.arange(n_chunks)))
+    # outs: (n_chunks, B, chunk, KV, G, hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, t, h, hd)
+    return out
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cur_len: jax.Array,
+) -> jax.Array:
+    """One-token attention over a (possibly sequence-sharded) KV cache.
+
+    q: (B,1,H,hd); caches: (B,S,KV,hd); cur_len: (B,) valid lengths
+    (positions < cur_len attend). GSPMD turns the softmax reduction over a
+    'model'-sharded S into the flash-decoding partial-softmax all-reduce.
+    """
+    from repro.kernels import ops as kops
+
+    if k_cache.dtype != q.dtype:
+        # quantized (e.g. fp8) KV cache: HBM reads happen at the narrow
+        # dtype; the upconvert fuses into the attention kernel on TPU
+        k_cache = k_cache.astype(q.dtype)
+        v_cache = v_cache.astype(q.dtype)
+    if kops._mode() == "kernel" and k_cache.shape[1] % 512 == 0:
+        return kops.decode_attention(q[:, 0], k_cache, v_cache, cur_len)[:, None]
+    b, _, h, hd = q.shape
+    num_kv = k_cache.shape[2]
+    qg = _group_q(q, num_kv)  # (B,1,KV,G,hd)
+    scores = _gqa_scores(qg, k_cache)  # (B,KV,G,1,S) fp32
+    s_idx = jnp.arange(k_cache.shape[1])
+    mask = s_idx[None, :] < cur_len[:, None]  # (B,S)
+    scores = jnp.where(mask[:, None, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", probs.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, h, hd)
+
+
+def attn_output(params, attn: jax.Array) -> jax.Array:
+    return jnp.einsum("bthk,hkd->btd", attn, params["wo"])
+
+
+def update_kv_cache(
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    positions: jax.Array,
+):
+    """Scatter new K/V rows (B, T_new, KV, hd) into caches at ``positions``
+    (B, T_new) — per-example positions support continuous batching."""
+    b = k_cache.shape[0]
+    batch_idx = jnp.broadcast_to(jnp.arange(b)[:, None], positions.shape)
+    k_cache = k_cache.at[batch_idx, positions].set(k_new.astype(k_cache.dtype))
+    v_cache = v_cache.at[batch_idx, positions].set(v_new.astype(v_cache.dtype))
+    return k_cache, v_cache

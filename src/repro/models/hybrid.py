@@ -1,0 +1,113 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + ONE shared transformer block
+applied every `shared_attn_every` layers. [arXiv:2411.15242]
+
+81 layers = 13 groups of 6 + a tail of 3 (config-derived). Structure is a
+two-level scan — outer over groups, inner over the group's mamba layers —
+so HLO stays O(1) in depth. The shared block's *weights* are reused at every
+application, but each application has its own KV cache (n_groups leading dim).
+
+Deviation noted (DESIGN.md §2): the real Zamba2 feeds concat(hidden,
+embedding) through per-application LoRA on the shared block; we apply the
+shared block to the hidden state directly — same compute/communication
+shape, simpler plumbing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.models.params import stack_defs
+from repro.sharding.specs import LogicalRules
+
+
+def split_layers(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(n_groups, group_size, tail)."""
+    every = cfg.shared_attn_every
+    n_groups, tail = divmod(cfg.num_layers, every)
+    return n_groups, every, tail
+
+
+def hybrid_defs(cfg: ModelConfig):
+    n_groups, every, tail = split_layers(cfg)
+    defs = {
+        "groups": stack_defs(stack_defs(tfm.block_defs(cfg, "ssm"), every, "inner"), n_groups, "groups"),
+        "shared": tfm.block_defs(cfg, "dense"),
+    }
+    if tail:
+        defs["tail"] = stack_defs(tfm.block_defs(cfg, "ssm"), tail, "inner")
+    return defs
+
+
+def apply_hybrid_full(
+    params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    rules: LogicalRules | None,
+    positions: jax.Array,
+    collect_cache: bool = False,
+):
+    """Returns (x, caches, metrics). caches (collect_cache=True) =
+    {'groups': ssm states (n_groups, every, ...), 'attn': {'k','v'}
+    (n_groups, B, S, KV, hd), 'tail': ssm states (tail, ...)}."""
+    n_groups, every, tail = split_layers(cfg)
+
+    def group_body(carry, group_params):
+        h = carry
+        h, ssm_cache, m_inner = tfm.apply_stack_full(
+            group_params, h, cfg, "ssm", rules, positions, collect_cache=collect_cache
+        )
+        h, kv, m_attn = tfm.apply_block_full(
+            params["shared"], h, cfg, "dense", rules, positions, causal=True, collect_cache=collect_cache
+        )
+        metrics = jax.tree.map(jnp.add, m_inner, m_attn)
+        return h, ((ssm_cache, kv) if collect_cache else None, metrics)
+
+    body = jax.checkpoint(group_body) if cfg.remat else group_body
+    x, (entries, metrics) = jax.lax.scan(body, x, params["groups"])
+    metrics = jax.tree.map(jnp.sum, metrics)
+    tail_cache = None
+    if tail:
+        x, tail_cache, m_tail = tfm.apply_stack_full(
+            params["tail"], x, cfg, "ssm", rules, positions, collect_cache=collect_cache
+        )
+        metrics = jax.tree.map(jnp.add, metrics, m_tail)
+    caches = None
+    if collect_cache and entries is not None:
+        ssm_caches, kvs = entries
+        caches = {"groups": ssm_caches, "attn": {"k": kvs[0], "v": kvs[1]}}
+        if tail:
+            caches["tail"] = tail_cache
+    return x, caches, metrics
+
+
+def apply_hybrid_decode(
+    params,
+    x: jax.Array,
+    caches: dict,
+    cfg: ModelConfig,
+    rules: LogicalRules | None,
+    cur_len: jax.Array,
+):
+    """caches: {'groups': ssm-state stacked (n_groups, every, ...),
+    'attn': {'k','v'} (n_groups, B, S, KV, hd), 'tail': (tail, ...)}."""
+    n_groups, every, tail = split_layers(cfg)
+
+    def group_body(carry, inp):
+        group_params, group_cache, attn_cache = inp
+        h = carry
+        h, new_ssm, m1 = tfm.apply_stack_decode(group_params, h, group_cache, cfg, "ssm", rules, cur_len)
+        h, new_attn, m2 = tfm.apply_block_decode(params["shared"], h, attn_cache, cfg, "dense", rules, cur_len)
+        return h, ((new_ssm, new_attn), jax.tree.map(jnp.add, m1, m2))
+
+    x, ((new_groups, new_attn), metrics) = jax.lax.scan(
+        group_body, x, (params["groups"], caches["groups"], caches["attn"])
+    )
+    metrics = jax.tree.map(jnp.sum, metrics)
+    new_caches = {"groups": new_groups, "attn": new_attn}
+    if tail:
+        x, new_tail, m_tail = tfm.apply_stack_decode(params["tail"], x, caches["tail"], cfg, "ssm", rules, cur_len)
+        metrics = jax.tree.map(jnp.add, metrics, m_tail)
+        new_caches["tail"] = new_tail
+    return x, new_caches, metrics

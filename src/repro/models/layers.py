@@ -1,0 +1,114 @@
+"""Shared neural-net layers: norms, rotary embedding, MLPs, embeddings.
+
+Pure-functional style: ``*_defs(cfg)`` returns a ParamDef tree, ``fn(params,
+x, ...)`` applies it. Compute is bf16 with fp32 accumulation in norms,
+softmax and the loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamDef
+
+# ---------------------------------------------------------------- norms
+
+
+def norm_defs(cfg: ModelConfig, d: int | None = None):
+    d = d or cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"scale": ParamDef((d,), ("embed",), init="ones")}
+    return {
+        "scale": ParamDef((d,), ("embed",), init="ones"),
+        "bias": ParamDef((d,), ("embed",), init="zeros"),
+    }
+
+
+def apply_norm(params, x: jax.Array, cfg: ModelConfig, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if "bias" in params:  # LayerNorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:  # RMSNorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_1d(scale: jax.Array, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Headwise RMSNorm (QK-norm): normalizes the trailing dim."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- rotary
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponent)  # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- mlp
+
+
+def mlp_defs(cfg: ModelConfig, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act == "silu":  # SwiGLU: gate + up + down
+        return {
+            "wi_gate": ParamDef((d, f), ("embed_fsdp", "ff")),
+            "wi_up": ParamDef((d, f), ("embed_fsdp", "ff")),
+            "wo": ParamDef((f, d), ("ff", "embed_fsdp")),
+        }
+    return {
+        "wi": ParamDef((d, f), ("embed_fsdp", "ff")),
+        "wo": ParamDef((f, d), ("ff", "embed_fsdp")),
+    }
+
+
+def apply_mlp(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if "wi_gate" in params:
+        g = jnp.einsum("...d,df->...f", x, params["wi_gate"])
+        u = jnp.einsum("...d,df->...f", x, params["wi_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jnp.einsum("...d,df->...f", x, params["wi"])
+        h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, params["wo"])
+
+
+# ---------------------------------------------------------------- embeddings
+
+
+def embedding_defs(cfg: ModelConfig):
+    defs = {"table": ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed_fsdp"), init="embed")}
+    if not cfg.tie_embeddings:
+        defs["head"] = ParamDef((cfg.d_model, cfg.vocab_size), ("embed_fsdp", "vocab"))
+    return defs
+
+
+def embed_tokens(params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x: jax.Array) -> jax.Array:
+    """Returns fp32 logits (vocab sharded over 'model' via the head kernel)."""
+    if "head" in params:
+        return jnp.einsum("...d,dv->...v", x, params["head"]).astype(jnp.float32)
+    return jnp.einsum("...d,vd->...v", x, params["table"]).astype(jnp.float32)

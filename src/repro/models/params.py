@@ -1,0 +1,115 @@
+"""Parameter definition trees.
+
+A model is described by a pytree of :class:`ParamDef` leaves. From one defs
+tree we derive three things:
+
+* ``init_params``   — materialized arrays (smoke tests, real training)
+* ``param_structs`` — ``jax.ShapeDtypeStruct`` with ``NamedSharding`` attached
+                      (dry-run lowering: zero allocation)
+* ``param_pspecs``  — ``PartitionSpec`` tree (``in_shardings`` for pjit)
+
+Keeping the defs symbolic is what lets the multi-pod dry-run lower a 34B
+model on a 1-CPU container.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.specs import LogicalRules, to_pspec
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale_axis: int | None = None  # fan-in axis for 'normal' (default: -2)
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.logical):
+            raise ValueError(f"ParamDef rank mismatch: {self.shape} vs {self.logical}")
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _fan_in(d: ParamDef) -> int:
+    if not d.shape:
+        return 1
+    ax = d.scale_axis
+    if ax is None:
+        ax = -2 if len(d.shape) >= 2 else 0
+    return max(1, d.shape[ax])
+
+
+def _init_leaf(d: ParamDef, key: jax.Array) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "embed":
+        return (jax.random.normal(key, d.shape, jnp.float32)).astype(d.dtype)
+    std = 1.0 / math.sqrt(_fan_in(d))
+    return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(d.dtype)
+
+
+def init_params(defs, rng: jax.Array):
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(rng, max(1, len(leaves)))
+    out = [_init_leaf(d, k) for d, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_pspecs(defs, rules: LogicalRules):
+    return jax.tree_util.tree_map(
+        lambda d: to_pspec(d.shape, d.logical, rules, strict=True), defs, is_leaf=is_def
+    )
+
+
+def param_structs(defs, mesh, rules: LogicalRules):
+    from jax.sharding import NamedSharding
+
+    def one(d: ParamDef):
+        # strict: array shardings must divide exactly (uneven dims — e.g. a
+        # 50280 vocab on a 16-way axis — drop that axis instead)
+        return jax.ShapeDtypeStruct(
+            d.shape, d.dtype,
+            sharding=NamedSharding(mesh, to_pspec(d.shape, d.logical, rules, strict=True)),
+        )
+
+    return jax.tree_util.tree_map(one, defs, is_leaf=is_def)
+
+
+def param_count(defs) -> int:
+    leaves = jax.tree_util.tree_leaves(defs, is_leaf=is_def)
+    return int(sum(int(np.prod(d.shape)) for d in leaves))
+
+
+def param_bytes(defs) -> int:
+    leaves = jax.tree_util.tree_leaves(defs, is_leaf=is_def)
+    return int(sum(int(np.prod(d.shape)) * jnp.dtype(d.dtype).itemsize for d in leaves))
+
+
+def map_defs(fn: Callable[[ParamDef], ParamDef], defs):
+    return jax.tree_util.tree_map(fn, defs, is_leaf=is_def)
+
+
+def stack_defs(defs, n: int, logical: str = "layers"):
+    """Prepend a stacking axis (for scan-over-layers stacked params)."""
+    return map_defs(
+        lambda d: dataclasses.replace(
+            d,
+            shape=(n, *d.shape),
+            logical=(logical, *d.logical),
+            scale_axis=None if d.scale_axis is None else (d.scale_axis if d.scale_axis < 0 else d.scale_axis + 1),
+        ),
+        defs,
+    )

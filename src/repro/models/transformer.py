@@ -1,0 +1,259 @@
+"""Pre-LN transformer blocks and scanned stacks.
+
+Layers are stacked on a leading 'layers' axis and applied with
+``jax.lax.scan`` so the HLO is O(1) in depth (critical: the dry-run compiles
+88-layer/34B programs on a CPU host). ``jax.checkpoint`` wraps the block body
+when ``cfg.remat`` — activation memory is one residual stream per layer
+boundary, everything else recomputed in backward.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import apply_mlp, apply_norm, mlp_defs, norm_defs
+from repro.models.params import ParamDef, stack_defs
+from repro.sharding.specs import LogicalRules, shard_as, shard_as_bf16_grad
+
+ZERO_METRICS = {"moe_aux": 0.0, "moe_dropped": 0.0}
+
+
+def _metrics_like(m: dict | None) -> dict:
+    out = dict(ZERO_METRICS)
+    if m:
+        out.update(m)
+    return {k: jnp.asarray(v, jnp.float32) for k, v in out.items()}
+
+
+# ------------------------------------------------------------------ blocks
+
+
+def block_defs(cfg: ModelConfig, kind: str):
+    """kind: dense | moe | ssm"""
+    if kind == "ssm":
+        return {"ln1": norm_defs(cfg), "ssm": ssm_mod.ssm_defs(cfg)}
+    defs = {
+        "ln1": norm_defs(cfg),
+        "attn": attn_mod.attn_defs(cfg),
+        "ln2": norm_defs(cfg),
+    }
+    if kind == "moe":
+        defs["moe"] = moe_mod.moe_defs(cfg)
+    else:
+        defs["mlp"] = mlp_defs(cfg)
+    return defs
+
+
+def layer_kind(cfg: ModelConfig) -> str:
+    if cfg.family == "ssm":
+        return "ssm"
+    if cfg.family == "moe":
+        return "moe"
+    return "dense"
+
+
+def apply_block_full(
+    params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    kind: str,
+    rules: LogicalRules | None,
+    positions: jax.Array,
+    causal: bool = True,
+    collect_cache: bool = False,
+):
+    """Full-sequence block. Returns (x, cache_entry | None, metrics).
+
+    cache_entry: (k, v) for attention kinds, ssm state dict for 'ssm'."""
+    metrics = None
+    if kind == "ssm":
+        h = apply_norm(params["ln1"], x, cfg)
+        if collect_cache:
+            out, cache = ssm_mod.apply_ssm(params["ssm"], h, cfg, rules, return_cache=True)
+        else:
+            out, cache = ssm_mod.apply_ssm(params["ssm"], h, cfg, rules), None
+        x = x + out
+        x = shard_as(x, ("batch", "seq", None), rules)
+        return x, cache, _metrics_like(metrics)
+
+    h = apply_norm(params["ln1"], x, cfg)
+    q, k, v = attn_mod.qkv_project(params["attn"], h, cfg, positions)
+    q = shard_as(q, ("batch", "seq_full", "act_heads", None), rules)
+    k_attn, v_attn = k, v
+    if rules is not None:
+        msize = rules.mesh_axis_sizes.get("model", 1)
+        if cfg.num_heads % msize == 0 and 1 < cfg.num_kv_heads < msize:
+            # GQA under TP: the (kv, group) split of the head dim cannot be
+            # sharded 16-way without GSPMD splitting BOTH sub-dims, which
+            # inserts partial-sum all-reduces inside every attention chunk
+            # (measured ~360 GB/step on qwen3 train — EXPERIMENTS §Perf #3).
+            # K/V are TP-replicated anyway; repeating them to full heads
+            # keeps the head dim cleanly sharded and attention collective-free.
+            rep = cfg.num_heads // cfg.num_kv_heads
+            k_attn = jnp.repeat(k, rep, axis=2)
+            v_attn = jnp.repeat(v, rep, axis=2)
+            k_attn = shard_as(k_attn, ("batch", "seq_full", "act_heads", None), rules)
+            v_attn = shard_as(v_attn, ("batch", "seq_full", "act_heads", None), rules)
+    out = attn_mod.full_attention(q, k_attn, v_attn, causal=causal)
+    x = x + attn_mod.attn_output(params["attn"], out)
+    x = shard_as_bf16_grad(x, ("batch", "seq", None), rules)
+    if collect_cache:
+        # the prefill-built cache must land in the decode layout (seq or
+        # kv-heads over 'model'), not batch-only sharded — and in the
+        # configured cache dtype (fp8 when quantized-KV is on)
+        cache_dt = jnp.dtype(cfg.kv_cache_dtype)
+        k = shard_as(k.astype(cache_dt), ("batch", "cache_seq", "cache_kv_heads", None), rules)
+        v = shard_as(v.astype(cache_dt), ("batch", "cache_seq", "cache_kv_heads", None), rules)
+
+    h = apply_norm(params["ln2"], x, cfg)
+    if kind == "moe":
+        y, metrics = moe_mod.apply_moe(params["moe"], h, cfg, rules)
+    else:
+        y = apply_mlp(params["mlp"], h, cfg)
+    x = x + y
+    x = shard_as_bf16_grad(x, ("batch", "seq", None), rules)
+    return x, (k, v), _metrics_like(metrics)
+
+
+def apply_block_decode(
+    params,
+    x: jax.Array,
+    cache: dict,
+    cfg: ModelConfig,
+    kind: str,
+    rules: LogicalRules | None,
+    cur_len: jax.Array,
+):
+    """Single-token block step. cache: {'k','v'} or SSM state dict."""
+    metrics = None
+    if kind == "ssm":
+        h = apply_norm(params["ln1"], x, cfg)
+        out, new_cache = ssm_mod.ssm_decode_step(params["ssm"], h, cache, cfg)
+        return x + out, new_cache, _metrics_like(metrics)
+
+    positions = cur_len[:, None]  # (B, 1)
+    h = apply_norm(params["ln1"], x, cfg)
+    q, k_new, v_new = attn_mod.qkv_project(params["attn"], h, cfg, positions)
+    k_cache, v_cache = attn_mod.update_kv_cache(cache["k"], cache["v"], k_new, v_new, positions)
+    out = attn_mod.decode_attention(q, k_cache, v_cache, cur_len + 1)
+    x = x + attn_mod.attn_output(params["attn"], out)
+
+    h = apply_norm(params["ln2"], x, cfg)
+    if kind == "moe":
+        y, metrics = moe_mod.apply_moe(params["moe"], h, cfg, rules)
+    else:
+        y = apply_mlp(params["mlp"], h, cfg)
+    x = x + y
+    new_cache = {"k": k_cache, "v": v_cache}
+    return x, new_cache, _metrics_like(metrics)
+
+
+# ------------------------------------------------------------------ stacks
+
+
+def stack_block_defs(cfg: ModelConfig, kind: str, n_layers: int):
+    return stack_defs(block_defs(cfg, kind), n_layers)
+
+
+def apply_stack_full(
+    stacked_params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    kind: str,
+    rules: LogicalRules | None,
+    positions: jax.Array,
+    causal: bool = True,
+    collect_cache: bool = False,
+    unroll: bool | None = None,
+):
+    """Full-sequence pass through the stack.
+
+    Returns (x, stacked cache pytree (leading 'layers' dim) or None, metrics
+    summed). For attention kinds the cache is {'k','v'}; for ssm it is the
+    ssm state dict.
+
+    ``unroll`` exists for experimentation; the scan path is the default for
+    all passes (unrolled loops lose cross-layer buffer reuse)."""
+    if unroll is None:
+        unroll = False
+    if unroll:
+        n = jax.tree.leaves(stacked_params)[0].shape[0]
+        entries = []
+        metrics = None
+        for i in range(n):
+            lp = jax.tree.map(lambda a: a[i], stacked_params)
+            x, entry, m = apply_block_full(lp, x, cfg, kind, rules, positions, causal, collect_cache)
+            metrics = m if metrics is None else jax.tree.map(jnp.add, metrics, m)
+            if collect_cache:
+                entries.append(entry)
+        cache = None
+        if collect_cache and entries and entries[0] is not None:
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *entries)
+            cache = {"k": stacked[0], "v": stacked[1]} if isinstance(stacked, tuple) else stacked
+        return x, cache, metrics
+
+    def body(carry, layer_params):
+        h, entry, metrics = apply_block_full(
+            layer_params, carry, cfg, kind, rules, positions, causal, collect_cache
+        )
+        ys = (entry if collect_cache else None, metrics)
+        return h, ys
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, (entries, metrics) = jax.lax.scan(body_fn, x, stacked_params)
+    cache = None
+    if collect_cache and entries is not None:
+        cache = {"k": entries[0], "v": entries[1]} if isinstance(entries, tuple) else entries
+    return x, cache, jax.tree.map(jnp.sum, metrics)
+
+
+def apply_stack_decode(
+    stacked_params,
+    x: jax.Array,
+    caches,
+    cfg: ModelConfig,
+    kind: str,
+    rules: LogicalRules | None,
+    cur_len: jax.Array,
+    mode: str = "carry",
+):
+    """One decode step through the stack; caches have a leading 'layers' dim.
+
+    mode='carry' (default): the cache rides in the scan CARRY and each layer
+    does an in-place dynamic-update at its index — ONE cache buffer total.
+    Passing the cache as scan xs/ys instead makes XLA double-buffer it
+    (in + out copies; measured +2x cache temp on the 34B decode cells), and
+    a python-unrolled loop is worse still (no cross-layer buffer reuse).
+    mode='xs' keeps the plain xs/ys formulation for comparison."""
+    n = jax.tree.leaves(stacked_params)[0].shape[0]
+    if mode == "carry":
+        def body(carry, inp):
+            i, layer_params = inp
+            h, caches_c = carry
+            cache_i = jax.tree.map(lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False), caches_c)
+            h, new_cache, metrics = apply_block_decode(layer_params, h, cache_i, cfg, kind, rules, cur_len)
+            caches_c = jax.tree.map(
+                lambda a, u: jax.lax.dynamic_update_index_in_dim(a, u.astype(a.dtype), i, 0),
+                caches_c, new_cache,
+            )
+            return (h, caches_c), metrics
+
+        (x, new_caches), metrics = jax.lax.scan(
+            body, (x, caches), (jnp.arange(n), stacked_params)
+        )
+        return x, new_caches, jax.tree.map(jnp.sum, metrics)
+
+    def body(carry, inp):
+        layer_params, cache = inp
+        h, new_cache, metrics = apply_block_decode(layer_params, carry, cache, cfg, kind, rules, cur_len)
+        return h, (new_cache, metrics)
+
+    x, (new_caches, metrics) = jax.lax.scan(body, x, (stacked_params, caches))
+    return x, new_caches, jax.tree.map(jnp.sum, metrics)

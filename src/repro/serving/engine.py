@@ -1,0 +1,274 @@
+"""Serving engine: deploys a model on the Provuse platform as a FaaS
+function *chain* and serves batched prefill/decode through it.
+
+Chain layout (blocks families — dense/moe/vlm/ssm):
+
+    <arch>/embed  ->  <arch>/g0  ->  ...  ->  <arch>/g{G-1}  ->  <arch>/head
+
+Each stage is an independently deployed function holding its own layer-slice
+weights; every stage synchronously calls the next and returns the final
+result back up the chain — while the head computes, every upstream instance
+is blocked (the paper's double-billing chain). enc-dec archs deploy the
+canonical two-function app (encoder -> decoder); hybrid deploys
+embed -> core -> head.
+
+The platform observes the synchronous edges during live traffic and fuses
+the chain step by step into a single XLA program per request type — no code
+here ever asks for fusion; it *happens to* the deployment (transparent,
+platform-side). Per-token latency before/after is the paper's Fig. 5.
+
+Stage functions are shape-polymorphic: a (B, T>1) input takes the prefill
+path (and scatter-fills the preallocated max_len cache); (B, 1) takes the
+decode path. One deployed function serves both request types, mirroring a
+FaaS function with two routes.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.function import FunctionSpec
+from repro.core.platform import ProvusePlatform
+from repro.models import encdec as ed
+from repro.models import hybrid as hy
+from repro.models import transformer as tfm
+from repro.models.layers import apply_norm, embed_tokens, unembed
+from repro.models.model import Model
+from repro.models.params import init_params
+
+
+def _slice_tree(tree, lo: int, hi: int):
+    return jax.tree.map(lambda x: x[lo:hi], tree)
+
+
+def _pick_groups(n_layers: int, requested: int) -> int:
+    g = min(requested, n_layers)
+    while g > 1 and n_layers % g:
+        g -= 1
+    return max(1, g)
+
+
+class ServingEngine:
+    def __init__(self, model: Model, platform: ProvusePlatform, *, max_len: int = 256, params=None, trust_domain: str | None = None):
+        self.model = model
+        self.cfg = model.cfg
+        self.platform = platform
+        self.max_len = max_len
+        self.params = params if params is not None else model.init(jax.random.PRNGKey(0))
+        self.prefix = self.cfg.name
+        self.trust = trust_domain or self.cfg.name
+        self.entry = f"{self.prefix}/embed"
+        fam = self.cfg.family
+        if fam in ("dense", "moe", "vlm", "ssm"):
+            self._deploy_blocks_chain()
+        elif fam == "audio":
+            self._deploy_encdec_chain()
+        elif fam == "hybrid":
+            self._deploy_monolithic_chain()
+        else:
+            raise ValueError(fam)
+
+    # ------------------------------------------------------------ chains
+
+    def _deploy_blocks_chain(self) -> None:
+        cfg = self.cfg
+        L = cfg.num_layers
+        g = _pick_groups(L, cfg.num_function_groups)
+        per = L // g
+        kind = "moe" if cfg.family == "moe" else ("ssm" if cfg.family == "ssm" else "dense")
+        names = [f"{self.prefix}/g{i}" for i in range(g)]
+        head_name = f"{self.prefix}/head"
+
+        def embed_fn(ctx, params, inputs, cur_len, caches):
+            if "tokens" in inputs:
+                x = embed_tokens(params, inputs["tokens"])
+            else:
+                x = inputs["embeds"]
+            return ctx.call(names[0], x, cur_len, caches)
+
+        self.platform.deploy(
+            FunctionSpec(self.entry, embed_fn, {"table": self.params["embed"]["table"]}, self.trust)
+        )
+
+        def make_group_fn(i: int):
+            key = f"g{i}"
+            nxt = names[i + 1] if i + 1 < g else head_name
+
+            def group_fn(ctx, params, x, cur_len, caches):
+                old = caches[key]
+                if x.shape[1] == 1:  # decode
+                    h, new_cache, _ = tfm.apply_stack_decode(params, x, old, cfg, kind, None, cur_len)
+                else:  # prefill: build the cache and scatter into max_len slots
+                    positions = jnp.arange(x.shape[1])[None, :]
+                    h, built, _ = tfm.apply_stack_full(params, x, cfg, kind, None, positions, collect_cache=True)
+                    if kind == "ssm":
+                        new_cache = built
+                    else:
+                        new_cache = jax.tree.map(
+                            lambda full, part: jax.lax.dynamic_update_slice(
+                                full, part.astype(full.dtype), (0, 0, 0, 0, 0)
+                            ),
+                            old,
+                            built,
+                        )
+                caches = dict(caches)
+                caches[key] = new_cache
+                return ctx.call(nxt, h, cur_len, caches)
+
+            return group_fn
+
+        blocks = self.params["blocks"]
+        for i, name in enumerate(names):
+            self.platform.deploy(
+                FunctionSpec(name, make_group_fn(i), _slice_tree(blocks, i * per, (i + 1) * per), self.trust)
+            )
+
+        def head_fn(ctx, params, x, cur_len, caches):
+            h = apply_norm(params["ln_f"], x[:, -1:], cfg)
+            logits = unembed(params["embed"], h)[:, 0]
+            return logits, caches
+
+        self.platform.deploy(
+            FunctionSpec(head_name, head_fn, {"ln_f": self.params["ln_f"], "embed": self.params["embed"]}, self.trust)
+        )
+        self.group_names = names
+        self.kind = kind
+
+    def _deploy_encdec_chain(self) -> None:
+        cfg = self.cfg
+        dec_name = f"{self.prefix}/decoder"
+
+        def enc_fn(ctx, params, inputs, cur_len, caches):
+            enc, _ = ed.encode(params, inputs["src_embeds"], cfg, None)
+            return ctx.call(dec_name, enc, inputs["tokens"], cur_len, caches)
+
+        def dec_fn(ctx, params, *args):
+            if len(args) == 4:  # prefill: (enc, tokens, cur_len, caches)
+                enc, tokens, cur_len, caches = args
+                cross = ed.cross_kv_from_enc(params["encdec"], enc)
+                x = embed_tokens(params["embed"], tokens)
+                src_len = jnp.full((x.shape[0],), enc.shape[1], jnp.int32)
+                h, new_self, _ = ed.decoder_step(
+                    params["encdec"], x, caches["self"], cross, cfg, None, cur_len, src_len
+                )
+                caches = {"self": new_self, "cross": cross}
+            else:  # decode: (tokens, cur_len, caches)
+                tokens, cur_len, caches = args
+                x = embed_tokens(params["embed"], tokens)
+                src = caches["cross"]["k"].shape[2]
+                src_len = jnp.full((x.shape[0],), src, jnp.int32)
+                h, new_self, _ = ed.decoder_step(
+                    params["encdec"], x, caches["self"], caches["cross"], cfg, None, cur_len, src_len
+                )
+                caches = {"self": new_self, "cross": caches["cross"]}
+            h = apply_norm(params["ln_f"], h, cfg)
+            logits = unembed(params["embed"], h)[:, 0]
+            return logits, caches
+
+        enc_params = {"encoder": self.params["encdec"]["encoder"]}
+        dec_params = {
+            "encdec": {"decoder": self.params["encdec"]["decoder"]},
+            "embed": self.params["embed"],
+            "ln_f": self.params["ln_f"],
+        }
+        # encode() expects params["encoder"]; decoder fns expect the nested form
+        self.platform.deploy(FunctionSpec(self.entry, enc_fn, enc_params, self.trust))
+        self.platform.deploy(FunctionSpec(dec_name, dec_fn, dec_params, self.trust))
+        self.dec_name = dec_name
+
+    def _deploy_monolithic_chain(self) -> None:
+        cfg = self.cfg
+        core_name = f"{self.prefix}/core"
+        head_name = f"{self.prefix}/head"
+
+        def embed_fn(ctx, params, inputs, cur_len, caches):
+            x = embed_tokens(params, inputs["tokens"])
+            return ctx.call(core_name, x, cur_len, caches)
+
+        def core_fn(ctx, params, x, cur_len, caches):
+            if x.shape[1] == 1:
+                h, new_caches, _ = hy.apply_hybrid_decode(params, x, caches, cfg, None, cur_len)
+            else:
+                positions = jnp.arange(x.shape[1])[None, :]
+                h, built, _ = hy.apply_hybrid_full(params, x, cfg, None, positions, collect_cache=True)
+                new_caches = dict(caches)
+                new_caches["groups"] = built["groups"]
+                if "tail" in built:
+                    new_caches["tail"] = built["tail"]
+                new_caches["attn"] = jax.tree.map(
+                    lambda full, part: jax.lax.dynamic_update_slice(
+                        full, part.astype(full.dtype), (0, 0, 0, 0, 0)
+                    ),
+                    caches["attn"],
+                    built["attn"],
+                )
+            return ctx.call(head_name, h, cur_len, new_caches)
+
+        def head_fn(ctx, params, x, cur_len, caches):
+            h = apply_norm(params["ln_f"], x[:, -1:], cfg)
+            logits = unembed(params["embed"], h)[:, 0]
+            return logits, caches
+
+        self.platform.deploy(FunctionSpec(self.entry, embed_fn, {"table": self.params["embed"]["table"]}, self.trust))
+        self.platform.deploy(FunctionSpec(core_name, core_fn, self.params["hybrid"], self.trust))
+        self.platform.deploy(
+            FunctionSpec(head_name, head_fn, {"ln_f": self.params["ln_f"], "embed": self.params["embed"]}, self.trust)
+        )
+
+    # ------------------------------------------------------------ caches
+
+    def empty_caches(self, batch: int):
+        from repro.configs.base import ShapeConfig
+
+        shape = ShapeConfig("serve", self.max_len, batch, "decode")
+        cache = init_params(self.model.cache_defs(shape), jax.random.PRNGKey(0))
+        if self.cfg.family in ("dense", "moe", "vlm", "ssm"):
+            # re-key the model-level (L, ...) cache by chain stage
+            g = len(self.group_names)
+            per = self.cfg.num_layers // g
+            return {
+                f"g{i}": _slice_tree(cache, i * per, (i + 1) * per) for i in range(g)
+            }
+        return cache
+
+    # ------------------------------------------------------------ serving API
+
+    def prefill(self, inputs: dict, caches=None):
+        b = jax.tree.leaves(inputs)[0].shape[0]
+        if caches is None:
+            caches = self.empty_caches(b)
+        if self.cfg.family == "audio":
+            t = jnp.zeros((b,), jnp.int32)
+            logits, caches = self.platform.invoke(self.entry, inputs, t, {"self": caches["self"]})
+            cur_len = jnp.ones((b,), jnp.int32)
+        else:
+            t_in = inputs["tokens"].shape[1] if "tokens" in inputs else inputs["embeds"].shape[1]
+            cur_len = jnp.full((b,), t_in, jnp.int32)
+            logits, caches = self.platform.invoke(self.entry, inputs, cur_len, caches)
+        return logits, caches, cur_len
+
+    def decode_step(self, tokens, cur_len, caches):
+        if self.cfg.family == "audio":
+            return self.platform.invoke(self.dec_name, tokens, cur_len, caches)
+        inputs = {"tokens": tokens}
+        return self.platform.invoke(self.entry, inputs, cur_len, caches)
+
+    def generate(self, inputs: dict, steps: int):
+        """Greedy generation; returns (tokens (B, steps), per-token seconds)."""
+        import time
+
+        logits, caches, cur_len = self.prefill(inputs)
+        tokens = jnp.argmax(jnp.asarray(logits), axis=-1)[:, None].astype(jnp.int32)
+        out = [tokens]
+        lat = []
+        for _ in range(steps - 1):
+            t0 = time.perf_counter()
+            logits, caches = self.decode_step(tokens, cur_len, caches)
+            lat.append(time.perf_counter() - t0)
+            cur_len = cur_len + 1
+            tokens = jnp.argmax(jnp.asarray(logits), axis=-1)[:, None].astype(jnp.int32)
+            out.append(tokens)
+        return jnp.concatenate(out, axis=1), lat

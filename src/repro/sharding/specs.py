@@ -1,0 +1,244 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Every tensor in the framework is annotated with *logical* axis names
+(e.g. ``('batch', 'seq', 'embed')``); a :class:`LogicalRules` table maps each
+logical name to zero or more mesh axes. This is the single place where the
+parallelism strategy (DP / FSDP / TP / EP / SP, multi-pod DP) is decided, so
+hillclimbing a sharding change is a one-line rules edit.
+
+Axis conventions (see DESIGN.md §5):
+  'pod'   — cross-pod data parallelism (multi-pod mesh only)
+  'data'  — in-pod data parallelism + FSDP param sharding
+  'model' — tensor parallelism (heads / ff / vocab), expert parallelism,
+            and sequence parallelism for the residual stream & long KV
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical names where uneven (padded) sharding is accepted rather than
+# dropping the mesh axis: q-heads (starcoder2 has 24 heads on a 16-way TP
+# axis) and vocab (tokenizer sizes are rarely multiples of 16).
+ALLOW_UNEVEN = frozenset({"heads", "vocab"})
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicalRules:
+    """Mapping of logical axis name -> mesh axis (or tuple of mesh axes)."""
+
+    rules: Mapping[str, tuple[str, ...] | str | None]
+    mesh_axis_sizes: Mapping[str, int]
+    mesh: Mesh | None = None
+
+    def dp_axes(self) -> tuple[str, ...]:
+        return tuple(ax for ax in ("pod", "data") if self.mesh_axis_sizes.get(ax, 1) > 1)
+
+    def mesh_axes_for(self, logical: str) -> tuple[str, ...]:
+        got = self.rules.get(logical)
+        if got is None:
+            return ()
+        if isinstance(got, str):
+            return (got,)
+        return tuple(got)
+
+    def spec_entry(self, logical: str | None, dim: int, *, strict: bool = False) -> tuple[str, ...] | str | None:
+        """Resolve one logical axis to a PartitionSpec entry, honouring
+        divisibility. ``strict=True`` (array/struct shardings — must divide
+        exactly) always drops non-dividing axes; the lenient path keeps
+        ALLOW_UNEVEN names (with_sharding_constraint pads internally)."""
+        if logical is None:
+            return None
+        axes = self.mesh_axes_for(logical)
+        if not axes:
+            return None
+        if not strict and logical in ALLOW_UNEVEN:
+            return axes if len(axes) > 1 else axes[0]
+        keep: list[str] = []
+        remaining = dim
+        for ax in axes:
+            size = self.mesh_axis_sizes.get(ax, 1)
+            if size > 1 and remaining % size == 0:
+                keep.append(ax)
+                remaining //= size
+            elif size == 1:
+                # axis of extent 1 — harmless, keep it out for clean specs
+                continue
+        if not keep:
+            return None
+        return tuple(keep) if len(keep) > 1 else keep[0]
+
+
+def _mesh_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def train_rules(mesh: Mesh) -> LogicalRules:
+    """Sharding rules for train / prefill programs.
+
+    Params: FSDP over ('pod','data') on the embed dim + TP over 'model'.
+    Activations: batch over ('pod','data'), residual-stream seq over 'model'
+    (Megatron-style sequence parallelism — GSPMD inserts the all-gather before
+    attention/MLP TP regions and the reduce-scatter after).
+    """
+    has_pod = "pod" in mesh.axis_names
+    dp: tuple[str, ...] = ("pod", "data") if has_pod else ("data",)
+    rules = {
+        # --- activations ---
+        "batch": dp,
+        "seq": "model",          # sequence-parallel residual stream
+        "seq_full": None,        # inside attention (post all-gather)
+        "embed": None,
+        "act_heads": "model",
+        "act_kv_heads": None,    # GQA KV usually replicated across TP
+        "act_ff": "model",
+        "head_dim": None,
+        "vocab_out": "model",    # logits vocab dim
+        # --- params: FSDP axis + TP axis ---
+        "embed_fsdp": dp,        # every big param's embed dim
+        "heads": "model",
+        "kv_heads": "model",     # dropped automatically when not divisible
+        "ff": "model",
+        "experts": "model",      # EP: expert dim over 'model'
+        "expert_ff": None,       # per-expert ff dim (model axis is taken by EP)
+        "vocab": "model",
+        # --- SSM ---
+        "ssm_inner": "model",    # d_inner sharded over TP
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "conv_k": None,
+        # --- misc ---
+        "layers": None,
+        "groups": None,
+        "inner": None,
+        "cache_seq": None,
+        "cache_kv_heads": None,
+        "expert_cap": None,
+    }
+    return LogicalRules(rules, _mesh_sizes(mesh), mesh)
+
+
+def _cache_rules(sizes: Mapping[str, int], kv_heads: int | None) -> dict:
+    model_size = sizes.get("model", 1)
+    shard_kv = kv_heads is not None and kv_heads % model_size == 0 and kv_heads >= model_size
+    return {
+        "cache_seq": None if shard_kv else "model",
+        "cache_kv_heads": "model" if shard_kv else None,
+    }
+
+
+def infer_rules(mesh: Mesh, *, kv_heads: int | None = None) -> LogicalRules:
+    """PREFILL rules: params stay FSDP-sharded (ZeRO-inference) — the
+    per-layer weight all-gather amortizes over the whole prompt batch
+    (1M tokens for prefill_32k) and per-device weights drop 16x, which is
+    what lets the 34-42B archs prefill within 16 GB/chip. The prefill-built
+    KV cache is sharded like the decode cache (heads over 'model' when
+    divisible, else sequence)."""
+    base = train_rules(mesh)
+    rules = dict(base.rules)
+    rules.update(_cache_rules(base.mesh_axis_sizes, kv_heads))
+    return LogicalRules(rules, base.mesh_axis_sizes, mesh)
+
+
+def decode_rules(mesh: Mesh, *, kv_heads: int | None = None, batch: int | None = None) -> LogicalRules:
+    """Sharding rules for decode programs (single-token step, big KV cache).
+
+    Params: TP-only (see infer_rules). The KV cache is the dominant tensor:
+    if the arch has enough KV heads to split over the TP axis we shard
+    heads; otherwise (MQA / small-GQA: granite kv=1, qwen3 kv=4, ...) we
+    shard the cache *sequence* dim over 'model' — flash-decoding style;
+    GSPMD inserts the partial-softmax all-reduce for the attention
+    reduction.
+    """
+    base = infer_rules(mesh, kv_heads=kv_heads)
+    sizes = base.mesh_axis_sizes
+    # DECODE params: TP-only (vLLM layout). FSDP'd decode weights would be
+    # all-gathered EVERY token (~100 ms/step at 34B) — unacceptable latency.
+    rules_patch = {"embed_fsdp": None}
+    model_size = sizes.get("model", 1)
+    dp_size = sizes.get("pod", 1) * sizes.get("data", 1)
+    shard_kv_heads = kv_heads is not None and kv_heads % model_size == 0 and kv_heads >= model_size
+    # single-stream long-context decode (batch < data axis): the data axis
+    # would sit idle — use it for the cache sequence dim instead
+    seq_over_data = batch is not None and batch < dp_size
+    rules = dict(base.rules)
+    if seq_over_data:
+        cache_seq: tuple[str, ...] | str | None = ("pod", "data") if "pod" in sizes else ("data",)
+        if not shard_kv_heads:
+            cache_seq = (*cache_seq, "model")
+        rules["cache_seq"] = cache_seq
+        rules["batch"] = None
+    rules.update(rules_patch)
+    rules.update(
+        {
+            "seq": None,          # q_len == 1: nothing to shard
+            "act_kv_heads": "model" if shard_kv_heads else None,
+        }
+    )
+    return LogicalRules(rules, sizes, mesh)
+
+
+def to_pspec(shape: Sequence[int], logical: Sequence[str | None], rules: LogicalRules, *, strict: bool = False) -> P:
+    if len(shape) != len(logical):
+        raise ValueError(f"rank mismatch: shape {shape} vs logical {logical}")
+    entries = [rules.spec_entry(l, d, strict=strict) for l, d in zip(logical, shape)]
+    # PartitionSpec must not name one mesh axis twice; keep first occurrence.
+    seen: set[str] = set()
+    cleaned: list = []
+    for e in entries:
+        if e is None:
+            cleaned.append(None)
+            continue
+        group = (e,) if isinstance(e, str) else e
+        kept = tuple(ax for ax in group if ax not in seen)
+        seen.update(kept)
+        if not kept:
+            cleaned.append(None)
+        elif len(kept) == 1:
+            cleaned.append(kept[0])
+        else:
+            cleaned.append(kept)
+    return P(*cleaned)
+
+
+def to_named_sharding(mesh: Mesh, shape: Sequence[int], logical: Sequence[str | None], rules: LogicalRules) -> NamedSharding:
+    return NamedSharding(mesh, to_pspec(shape, logical, rules, strict=True))
+
+
+def shard_as(x: jax.Array, logical: Sequence[str | None], rules: LogicalRules | None) -> jax.Array:
+    """``with_sharding_constraint`` by logical axes; no-op when rules is None
+    (single-device smoke-test path)."""
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, to_pspec(x.shape, logical, rules))
+
+
+def shard_as_bf16_grad(x: jax.Array, logical: Sequence[str | None], rules: LogicalRules | None) -> jax.Array:
+    """shard_as whose BACKWARD casts the cotangent to bf16 first.
+
+    Cotangents of the residual stream otherwise ride in fp32 (upcasts leak
+    from the loss/norm/router fp32 islands), so every TP/SP boundary
+    reduction in the backward moves 2x the bytes (measured 252 MB/op fp32
+    activation all-reduces on qwen3 train — EXPERIMENTS §Perf #4).
+    bf16 gradient reductions are standard practice (Megatron-LM)."""
+    if rules is None:
+        return x
+    dtype = x.dtype  # static at trace time
+
+    @jax.custom_vjp
+    def f(y):
+        return shard_as(y, logical, rules)
+
+    def fwd(y):
+        return shard_as(y, logical, rules), None
+
+    def bwd(_, g):
+        g = g.astype(jnp.bfloat16).astype(dtype)
+        return (shard_as(g, logical, rules),)
+
+    f.defvjp(fwd, bwd)
+    return f(x)

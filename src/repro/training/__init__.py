@@ -1,0 +1,2 @@
+from repro.training.loop import FailureInjector, InjectedFailure, TrainLoop  # noqa: F401
+from repro.training.train_step import make_train_step, make_train_state_defs  # noqa: F401

@@ -1,0 +1,75 @@
+"""train_step: loss -> grads -> clipped AdamW update, with optional
+gradient-accumulation microbatching (scan over microbatches — the per-
+microbatch backward overlaps its gradient reduce with the next microbatch's
+compute under XLA's scheduler)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+from repro.models.params import ParamDef
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_state_defs, adamw_update
+
+
+def make_train_state_defs(model: Model):
+    return {"params": model.param_defs, "opt": adamw_state_defs(model.param_defs)}
+
+
+def init_train_state(model: Model, rng: jax.Array):
+    params = model.init(rng)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig | None = None, lr_schedule=None):
+    opt_cfg = opt_cfg or AdamWConfig()
+    cfg = model.cfg
+    n_micro = max(1, cfg.microbatches)
+
+    def loss_for_grad(params, batch):
+        loss, metrics = model.loss_fn(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_for_grad, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                (l, m), g = grad_fn(params, mb)
+                g_acc, l_acc, m_acc = carry
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                m_acc = jax.tree.map(jnp.add, m_acc, m)
+                return (g_acc, l_acc + l, m_acc), None
+
+            # accumulate in the grad dtype (bf16): a fp32 accumulator makes
+            # XLA hoist the f32 convert BEFORE the per-microbatch TP grad
+            # all-reduce -> 2x collective bytes (EXPERIMENTS §Perf #5)
+            zeros_g = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+            first_mb = jax.tree.map(lambda x: x[0], micro)
+            (_, m0), _ = jax.eval_shape(grad_fn, params, first_mb)
+            zeros_m = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m0)
+            (grads, loss, metrics), _ = jax.lax.scan(
+                acc_body, (zeros_g, jnp.zeros((), jnp.float32), zeros_m), micro
+            )
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss / n_micro
+            metrics = jax.tree.map(lambda m: m / n_micro, metrics)
+
+        new_params, new_opt, opt_metrics = adamw_update(params, grads, state["opt"], opt_cfg, lr_schedule)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step

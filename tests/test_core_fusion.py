@@ -1,0 +1,181 @@
+"""End-to-end behaviour of the Provuse platform: observation -> policy ->
+merge -> health check -> swap -> retire, on both backends."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FunctionSpec,
+    FusionPolicy,
+    OrchestratedBackend,
+    TinyJaxBackend,
+)
+
+BACKENDS = [TinyJaxBackend, OrchestratedBackend]
+
+
+def deploy_chain_app(platform):
+    """A -> B -> C synchronously; A fires async D."""
+    wa = jax.random.normal(jax.random.PRNGKey(0), (64, 64)) * 0.05
+    wb = jax.random.normal(jax.random.PRNGKey(1), (64, 64)) * 0.05
+    wc = jax.random.normal(jax.random.PRNGKey(2), (64, 64)) * 0.05
+
+    def fn_c(ctx, params, x):
+        return jnp.tanh(x @ params)
+
+    def fn_b(ctx, params, x):
+        return ctx.call("C", jnp.tanh(x @ params))
+
+    def fn_a(ctx, params, x):
+        h = jnp.tanh(x @ params)
+        ctx.call_async("D", h)
+        return ctx.call("B", h)
+
+    def fn_d(ctx, params, x):
+        return (x * x).sum()
+
+    platform.deploy(FunctionSpec("A", fn_a, wa))
+    platform.deploy(FunctionSpec("B", fn_b, wb))
+    platform.deploy(FunctionSpec("C", fn_c, wc))
+    platform.deploy(FunctionSpec("D", fn_d, None))
+    return wa, wb, wc
+
+
+def chain_reference(wa, wb, wc, x):
+    return jnp.tanh(jnp.tanh(jnp.tanh(x @ wa) @ wb) @ wc)
+
+
+@pytest.mark.parametrize("backend_cls", BACKENDS)
+def test_progressive_fusion_preserves_semantics(backend_cls):
+    p = backend_cls(FusionPolicy(min_observations=3, merge_cost_s=0.0))
+    try:
+        wa, wb, wc = deploy_chain_app(p)
+        x = jnp.ones((4, 64))
+        outs = [p.invoke("A", x) for _ in range(10)]
+        ref = chain_reference(wa, wb, wc, x)
+        for out in outs:
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-6)
+        merges = [m for m in p.merger.merge_log if m.healthy]
+        assert len(merges) >= 2
+        assert merges[-1].members == ("A", "B", "C")
+        # routing: all three names now resolve to ONE instance
+        insts = {id(p.registry.resolve(n)) for n in ("A", "B", "C")}
+        assert len(insts) == 1
+    finally:
+        p.shutdown()
+
+
+@pytest.mark.parametrize("backend_cls", BACKENDS)
+def test_async_edges_never_fuse(backend_cls):
+    p = backend_cls(FusionPolicy(min_observations=1, merge_cost_s=0.0))
+    try:
+        deploy_chain_app(p)
+        x = jnp.ones((4, 64))
+        for _ in range(8):
+            p.invoke("A", x)
+        time.sleep(0.5)  # let async D invocations drain
+        d_inst = p.registry.resolve("D")
+        assert d_inst.members.keys() == {"D"}
+        edges = p.handler.edges
+        assert edges[("A", "D")].async_count > 0
+        assert edges[("A", "D")].sync_count == 0
+    finally:
+        p.shutdown()
+
+
+def test_trust_domain_blocks_fusion():
+    p = TinyJaxBackend(FusionPolicy(min_observations=1, merge_cost_s=0.0))
+    try:
+        w = jnp.eye(8)
+
+        def fn_b(ctx, params, x):
+            return x @ params
+
+        def fn_a(ctx, params, x):
+            return ctx.call("B", x @ params)
+
+        p.deploy(FunctionSpec("A", fn_a, w, trust_domain="tenant1"))
+        p.deploy(FunctionSpec("B", fn_b, w, trust_domain="tenant2"))
+        for _ in range(6):
+            p.invoke("A", jnp.ones((2, 8)))
+        assert not [m for m in p.merger.merge_log if m.healthy]
+        assert len({id(p.registry.resolve(n)) for n in ("A", "B")}) == 2
+    finally:
+        p.shutdown()
+
+
+def test_ram_reduction_and_billing():
+    p = TinyJaxBackend(FusionPolicy(min_observations=3, merge_cost_s=0.0))
+    try:
+        wa, wb, wc = deploy_chain_app(p)
+        x = jnp.ones((4, 64))
+        p.invoke("A", x)
+        p.invoke("A", x)
+        ram_before = p.ram_bytes()
+        blocked_before = p.meter.blocked_gb_seconds()
+        assert blocked_before > 0, "double billing must be observable pre-fusion"
+        for _ in range(8):
+            p.invoke("A", x)
+        merges = [m for m in p.merger.merge_log if m.healthy]
+        assert merges and all(m.freed_bytes >= 0 for m in merges)
+        # instances freed: A,B,C collapsed to one
+        live = p.registry.live_instances()
+        assert len(live) == 2  # merged[A+B+C] + D
+        p.meter.reset()
+        for _ in range(5):
+            p.invoke("A", x)
+        assert p.meter.blocked_gb_seconds() == 0.0, "no blocking after full fusion"
+    finally:
+        p.shutdown()
+
+
+def test_merge_aborts_without_canary():
+    p = TinyJaxBackend(FusionPolicy(min_observations=1, merge_cost_s=0.0))
+    try:
+        deploy_chain_app(p)
+        # no traffic at all -> no canary -> direct merge submit must not swap
+        p.handler.edges[("B", "C")] = type(p.handler.edges.get(("B", "C"), None) or object)() if False else None
+        from repro.core.handler import EdgeStats
+
+        p.handler.edges[("B", "C")] = EdgeStats(sync_count=5, total_wait_s=1.0)
+        p.merger.submit("B", "C")
+        assert not [m for m in p.merger.merge_log if m.healthy]
+        assert [m for m in p.merger.merge_log if not m.healthy]
+        assert len({id(p.registry.resolve(n)) for n in ("B", "C")}) == 2
+    finally:
+        p.shutdown()
+
+
+def test_compiled_vs_eager_entry_selection():
+    p = TinyJaxBackend(FusionPolicy(enabled=False))
+    try:
+        deploy_chain_app(p)
+        x = jnp.ones((4, 64))
+        p.invoke("A", x)
+        # C is a leaf -> compiled; A and B have boundary calls -> eager glue
+        inst_c = p.registry.resolve("C")
+        inst_a = p.registry.resolve("A")
+        assert inst_c._compiled and not inst_c._eager_entries
+        assert inst_a._eager_entries and not inst_a._compiled
+    finally:
+        p.shutdown()
+
+
+def test_fault_tolerance_redeploys_terminated_instance():
+    p = TinyJaxBackend(FusionPolicy(enabled=False))
+    try:
+        deploy_chain_app(p)
+        x = jnp.ones((4, 64))
+        first = p.invoke("A", x)
+        # simulate a crashed container
+        inst = p.registry.resolve("C")
+        inst.state = inst.state.__class__.TERMINATED
+        inst.params = {}
+        out = p.invoke("C", jnp.ones((4, 64)))  # platform must re-provision
+        assert out.shape == (4, 64)
+        assert p.registry.resolve("C").state.value == "ready"
+    finally:
+        p.shutdown()

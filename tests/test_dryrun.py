@@ -1,0 +1,48 @@
+"""Dry-run integration: one real cell compiles on the production mesh in a
+subprocess and reports coherent roofline terms. (The full 40-cell x 2-mesh
+grid runs via `python -m repro.launch.dryrun --all --both-meshes`; its
+results are recorded in EXPERIMENTS.md.)"""
+import json
+import subprocess
+import sys
+
+import pytest
+
+
+def run_cell(arch, shape, extra=()):
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch, "--shape", shape, *extra],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    return json.loads(out.stdout)
+
+
+@pytest.mark.slow
+def test_llama_decode_cell_production_mesh():
+    r = run_cell("llama3.2-1b", "decode_32k")
+    assert r["status"] == "ok"
+    assert r["n_chips"] == 256
+    assert r["fits_16gb"], f"HBM {r['hbm_per_device_gb']} GB over budget"
+    rf = r["roofline"]
+    assert rf["bound_s"] > 0
+    assert rf["dominant"] in ("compute_s", "memory_s", "collective_s")
+    assert r["flops_per_device"] > 0
+    assert 0 < r["useful_flops_ratio"] < 4
+
+
+@pytest.mark.slow
+def test_multi_pod_mesh_cell():
+    r = run_cell("llama3.2-1b", "decode_32k", ("--multi-pod",))
+    assert r["status"] == "ok"
+    assert r["n_chips"] == 512
+
+
+def test_long_500k_skips_full_attention_archs():
+    from repro.configs import get_arch, shape_skip_reason
+
+    assert shape_skip_reason(get_arch("llama3.2-1b"), "long_500k")
+    assert shape_skip_reason(get_arch("qwen3-moe-30b-a3b"), "long_500k")
+    assert shape_skip_reason(get_arch("mamba2-370m"), "long_500k") is None
+    assert shape_skip_reason(get_arch("zamba2-7b"), "long_500k") is None

@@ -1,0 +1,107 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.ssd_scan import ssd_scan
+
+RNG = jax.random.PRNGKey(7)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("b,t,h,kv,hd", [
+    (2, 256, 4, 2, 64),
+    (1, 128, 8, 8, 32),
+    (2, 256, 4, 1, 64),   # MQA
+    (1, 512, 2, 2, 128),
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_ref(b, t, h, kv, hd, causal, dtype):
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (b, t, h, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, t, kv, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, t, kv, hd), jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64, interpret=True)
+    expect = ref.mha_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(expect, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("b,s,h,kv,hd", [(2, 512, 4, 2, 64), (3, 1024, 8, 1, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_vs_ref(b, s, h, kv, hd, dtype):
+    ks = jax.random.split(RNG, 4)
+    q = jax.random.normal(ks[0], (b, h, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32).astype(dtype)
+    cur = jax.random.randint(ks[3], (b,), 1, s, jnp.int32)
+    out = decode_attention(q, k, v, cur, block_k=256, interpret=True)
+    expect = ref.decode_attn_ref(q, k, v, cur)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(expect, np.float32), **tol(dtype))
+
+
+def test_decode_attention_length_edge_cases():
+    b, s, h, kv, hd = 2, 256, 2, 2, 32
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (b, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32)
+    for cur in (jnp.array([1, s]), jnp.array([s, 1])):
+        out = decode_attention(q, k, v, cur, block_k=128, interpret=True)
+        expect = ref.decode_attn_ref(q, k, v, cur)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("b,t,h,grp,p,n,chunk", [
+    (2, 128, 4, 1, 32, 16, 32),
+    (1, 256, 2, 2, 64, 32, 64),
+    (1, 64, 2, 1, 16, 8, 64),  # single chunk
+])
+def test_ssd_scan_vs_ref(b, t, h, grp, p, n, chunk):
+    ks = jax.random.split(RNG, 5)
+    x = jax.random.normal(ks[0], (b, t, h, p), jnp.float32)
+    bm = jax.random.normal(ks[1], (b, t, grp, n), jnp.float32) * 0.5
+    cm = jax.random.normal(ks[2], (b, t, grp, n), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (b, t, h), jnp.float32))
+    a_log = jax.random.normal(ks[4], (h,), jnp.float32) * 0.3
+    d_skip = jnp.ones((h,), jnp.float32)
+    out = ssd_scan(x, bm, cm, dt, a_log, d_skip, chunk=chunk, interpret=True)
+    expect, _ = ref.ssd_ref(x, bm, cm, dt, a_log, d_skip)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect, np.float32), rtol=5e-4, atol=5e-4)
+
+
+def test_models_ssd_chunked_matches_oracle():
+    """The model's jnp chunked SSD (the lowering path) == naive O(T^2) oracle."""
+    from repro.models.ssm import ssd_chunked
+
+    ks = jax.random.split(RNG, 5)
+    b, t, h, grp, p, n = 2, 96, 4, 2, 16, 8
+    x = jax.random.normal(ks[0], (b, t, h, p), jnp.float32)
+    bm = jax.random.normal(ks[1], (b, t, grp, n), jnp.float32) * 0.5
+    cm = jax.random.normal(ks[2], (b, t, grp, n), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (b, t, h), jnp.float32))
+    a_log = jax.random.normal(ks[4], (h,), jnp.float32) * 0.3
+    d_skip = jnp.ones((h,), jnp.float32)
+    y, state = ssd_chunked(x, bm, cm, dt, a_log, d_skip, chunk=32)
+    y_ref, state_ref = ref.ssd_ref(x, bm, cm, dt, a_log, d_skip)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref, np.float32), rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(state_ref), rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("e,c,d,f", [(4, 64, 128, 256), (2, 128, 64, 128), (1, 32, 32, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_gmm_vs_ref(e, c, d, f, dtype):
+    ks = jax.random.split(RNG, 2)
+    xe = jax.random.normal(ks[0], (e, c, d), jnp.float32).astype(dtype)
+    w = (jax.random.normal(ks[1], (e, d, f), jnp.float32) * 0.05).astype(dtype)
+    out = moe_gmm(xe, w, block_c=32, block_f=32, block_d=32, interpret=True)
+    expect = ref.gmm_ref(xe, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(expect, np.float32), **tol(dtype))

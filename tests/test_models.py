@@ -1,0 +1,139 @@
+"""Per-arch smoke tests (reduced configs, one fwd/train step on CPU) +
+model-level correctness properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_arch, reduced_config
+from repro.configs.base import ShapeConfig
+from repro.models.model import build_model
+from repro.models.params import init_params
+
+TRAIN = ShapeConfig("smoke_train", 32, 2, "train")
+PREFILL = ShapeConfig("smoke_prefill", 32, 2, "prefill")
+DECODE = ShapeConfig("smoke_decode", 32, 2, "decode")
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_train_step(arch):
+    """REDUCED config of the same family: one loss+grad step, shapes + no NaNs."""
+    cfg = reduced_config(get_arch(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = model.make_inputs(TRAIN, jax.random.PRNGKey(1))
+    (loss, metrics), grads = jax.jit(jax.value_and_grad(model.loss_fn, has_aux=True))(params, batch)
+    assert jnp.isfinite(loss), f"{arch}: loss not finite"
+    assert all(jnp.isfinite(g).all() for g in jax.tree.leaves(grads)), f"{arch}: NaN grads"
+    assert float(metrics["loss"]) == pytest.approx(float(loss))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_serve_paths(arch):
+    cfg = reduced_config(get_arch(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    logits, cache = jax.jit(model.prefill_fn)(params, model.make_inputs(PREFILL, jax.random.PRNGKey(1)))
+    assert logits.shape == (2, cfg.vocab_size)
+    assert jnp.isfinite(logits).all(), f"{arch}: prefill NaNs"
+    dec_in = model.make_inputs(DECODE, jax.random.PRNGKey(2))
+    dec_cache = init_params(model.cache_defs(DECODE), jax.random.PRNGKey(3))
+    logits2, new_cache = jax.jit(model.decode_fn)(params, dec_in, dec_cache)
+    assert logits2.shape == (2, cfg.vocab_size)
+    assert jnp.isfinite(logits2).all(), f"{arch}: decode NaNs"
+    assert jax.tree_util.tree_structure(new_cache) == jax.tree_util.tree_structure(dec_cache)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "stablelm-1.6b", "mamba2-370m", "zamba2-7b"])
+def test_prefill_then_decode_matches_full_forward(arch):
+    """Serving-path correctness: prefill a prompt, decode the next token —
+    logits must match a prefill over the extended prompt (same cache math)."""
+    cfg = reduced_config(get_arch(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    t = 16
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (2, t + 1), 0, cfg.vocab_size, jnp.int32)
+
+    logits_a, cache = jax.jit(model.prefill_fn)(params, {"tokens": tokens[:, :t]})
+    # grow attention caches by one slot so decode can write at position t
+    def grow(x):
+        if x.ndim >= 3 and x.shape[-3] == t:  # (.., B, S, KV, hd) seq dim
+            pad = [(0, 0)] * x.ndim
+            pad[-3] = (0, 1)
+            return jnp.pad(x, pad)
+        return x
+    cache = jax.tree.map(grow, cache)
+    batch = {"tokens": tokens[:, t:], "cur_len": jnp.full((2,), t, jnp.int32)}
+    logits_b, _ = jax.jit(model.decode_fn)(params, batch, cache)
+
+    logits_full, _ = jax.jit(model.prefill_fn)(params, {"tokens": tokens})
+    # SSM-family decode uses the recurrent form vs the chunked dual form in
+    # prefill: mathematically identical, but bf16 rounding reorders through
+    # exp() decay products -> wider tolerance than for attention archs.
+    loose = cfg.family in ("ssm", "hybrid")
+    np.testing.assert_allclose(
+        np.asarray(logits_b, np.float32),
+        np.asarray(logits_full, np.float32),
+        rtol=0.2 if loose else 3e-2,
+        atol=0.5 if loose else 3e-2,
+    )
+
+
+def test_causality_future_tokens_do_not_change_past():
+    cfg = reduced_config(get_arch("llama3.2-1b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    t = 16
+    tok1 = jax.random.randint(jax.random.PRNGKey(1), (1, t), 0, cfg.vocab_size, jnp.int32)
+    tok2 = tok1.at[:, -1].set((tok1[:, -1] + 1) % cfg.vocab_size)
+    # last-token logits after t-1 tokens must be identical
+    l1, _ = jax.jit(model.prefill_fn)(params, {"tokens": tok1[:, : t - 1]})
+    l2, _ = jax.jit(model.prefill_fn)(params, {"tokens": tok2[:, : t - 1]})
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_moe_is_dropless_with_ample_capacity():
+    """With capacity_factor >> 1, MoE output == explicit per-token loop."""
+    import dataclasses
+
+    from repro.models import moe as moe_mod
+
+    cfg = dataclasses.replace(
+        reduced_config(get_arch("qwen3-moe-30b-a3b")), capacity_factor=8.0
+    )
+    defs = moe_mod.moe_defs(cfg)
+    params = init_params(defs, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model), jnp.float32).astype(jnp.bfloat16)
+    y, metrics = moe_mod.apply_moe(params, x, cfg)
+    assert float(metrics["moe_dropped"]) == 0.0
+
+    # explicit reference: per-token top-k expert mix
+    xf = x.reshape(-1, cfg.d_model)
+    logits = xf.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    w, idx = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    w = w / w.sum(-1, keepdims=True)
+    outs = []
+    for i in range(xf.shape[0]):
+        acc = 0
+        for j in range(cfg.num_experts_per_tok):
+            eidx = int(idx[i, j])
+            gate = jax.nn.silu((xf[i] @ params["wi_gate"][eidx]).astype(jnp.float32))
+            up = (xf[i] @ params["wi_up"][eidx]).astype(jnp.float32)
+            acc = acc + float(w[i, j]) * ((gate * up).astype(jnp.bfloat16) @ params["wo"][eidx]).astype(jnp.float32)
+        outs.append(acc)
+    expect = jnp.stack(outs).reshape(2, 8, cfg.d_model)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(expect, np.float32), rtol=5e-2, atol=5e-2
+    )
+
+
+def test_moe_router_weights_normalized():
+    cfg = reduced_config(get_arch("phi3.5-moe-42b-a6.6b"))
+    from repro.models import moe as moe_mod
+
+    params = init_params(moe_mod.moe_defs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, cfg.d_model)).astype(jnp.bfloat16)
+    y, metrics = moe_mod.apply_moe(params, x, cfg)
+    assert y.shape == x.shape
+    assert float(metrics["moe_aux"]) > 0.0  # aux loss is live

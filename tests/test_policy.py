@@ -1,0 +1,74 @@
+"""Property tests (hypothesis) for the fusion policy + union-find groups."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.handler import EdgeStats
+from repro.core.policy import FusionPolicy, UnionFind
+
+names = st.sampled_from([f"f{i}" for i in range(8)])
+
+
+@given(st.lists(st.tuples(names, names), max_size=30))
+@settings(max_examples=60, deadline=None)
+def test_union_find_partition_invariants(pairs):
+    uf = UnionFind()
+    for a, b in pairs:
+        uf.union(a, b)
+    seen = {x for ab in pairs for x in ab}
+    # reflexive + symmetric + transitive: groups partition the elements
+    for x in seen:
+        gx = uf.group(x)
+        assert x in gx
+        for y in gx:
+            assert uf.group(y) == gx
+    # union implies same group
+    for a, b in pairs:
+        assert uf.find(a) == uf.find(b)
+
+
+@given(
+    sync=st.integers(0, 10),
+    wait_ms=st.floats(0.0, 50.0),
+    min_obs=st.integers(1, 5),
+    horizon=st.integers(1, 1000),
+    cost=st.floats(0.0, 5.0),
+)
+@settings(max_examples=80, deadline=None)
+def test_policy_decision_consistency(sync, wait_ms, min_obs, horizon, cost):
+    policy = FusionPolicy(min_observations=min_obs, amortization_horizon=horizon, merge_cost_s=cost)
+    stats = EdgeStats(sync_count=sync, total_wait_s=sync * wait_ms / 1e3)
+    d = policy.decide("a", "b", stats, "t", "t")
+    if d.fuse:
+        assert sync >= min_obs
+        assert stats.mean_wait_s * horizon >= cost
+        assert {"a", "b"} <= set(d.group)
+    if sync < min_obs:
+        assert not d.fuse
+
+
+def test_policy_cross_trust_never_fuses():
+    policy = FusionPolicy(min_observations=0, merge_cost_s=0.0)
+    stats = EdgeStats(sync_count=100, total_wait_s=10.0)
+    assert not policy.decide("a", "b", stats, "t1", "t2").fuse
+
+
+def test_policy_commit_grows_groups_transitively():
+    policy = FusionPolicy()
+    policy.commit("a", "b")
+    policy.commit("b", "c")
+    assert policy.groups.group("a") == frozenset({"a", "b", "c"})
+    stats = EdgeStats(sync_count=100, total_wait_s=10.0)
+    # an edge within the committed group never re-fuses
+    assert not policy.decide("a", "c", stats, "t", "t").fuse
+
+
+def test_policy_disabled():
+    policy = FusionPolicy(enabled=False)
+    stats = EdgeStats(sync_count=100, total_wait_s=10.0)
+    assert not policy.decide("a", "b", stats, "t", "t").fuse
+
+
+def test_merge_cost_feedback_moves_estimate():
+    policy = FusionPolicy(merge_cost_s=2.0)
+    policy.feedback_merge_cost(0.0)
+    assert policy.merge_cost_s == 1.0

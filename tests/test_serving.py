@@ -1,0 +1,99 @@
+"""Serving engine on the Provuse platform: chain correctness under fusion."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced_config
+from repro.core import FusionPolicy, TinyJaxBackend
+from repro.models.model import build_model
+from repro.models.params import init_params
+from repro.serving.engine import ServingEngine
+
+
+def direct_generate(model, params, tokens, steps, max_len):
+    """Reference: generate WITHOUT the platform (plain model calls)."""
+    from repro.configs.base import ShapeConfig
+
+    logits, cache = jax.jit(model.prefill_fn)(params, {"tokens": tokens})
+    t = tokens.shape[1]
+    # pad cache seq dim to max_len
+    def grow(x):
+        if x.ndim >= 3 and x.shape[-3] == t:
+            pad = [(0, 0)] * x.ndim
+            pad[-3] = (0, max_len - t)
+            return jnp.pad(x, pad)
+        return x
+
+    cache = jax.tree.map(grow, cache)
+    cur = jnp.full((tokens.shape[0],), t, jnp.int32)
+    out = [jnp.argmax(logits, -1)[:, None].astype(jnp.int32)]
+    dec = jax.jit(model.decode_fn)
+    for _ in range(steps - 1):
+        logits, cache = dec(params, {"tokens": out[-1], "cur_len": cur}, cache)
+        cur = cur + 1
+        out.append(jnp.argmax(logits, -1)[:, None].astype(jnp.int32))
+    return jnp.concatenate(out, axis=1)
+
+
+def test_chain_generation_matches_direct_model():
+    cfg = reduced_config(get_arch("llama3.2-1b"))
+    model = build_model(cfg)
+    platform = TinyJaxBackend(FusionPolicy(min_observations=2, merge_cost_s=0.0))
+    try:
+        engine = ServingEngine(model, platform, max_len=48)
+        tokens = jax.random.randint(jax.random.PRNGKey(3), (2, 12), 0, cfg.vocab_size, jnp.int32)
+        got, _ = engine.generate({"tokens": tokens}, steps=10)
+        expect = direct_generate(model, engine.params, tokens, 10, 48)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+        # fusion actually happened during generation
+        assert any(m.healthy for m in platform.merger.merge_log)
+    finally:
+        platform.shutdown()
+
+
+def test_chain_fuses_to_single_instance_and_latency_drops():
+    cfg = reduced_config(get_arch("llama3.2-1b"))
+    model = build_model(cfg)
+    platform = TinyJaxBackend(FusionPolicy(min_observations=2, merge_cost_s=0.0))
+    try:
+        engine = ServingEngine(model, platform, max_len=48)
+        tokens = jnp.ones((1, 8), jnp.int32)
+        _, lat = engine.generate({"tokens": tokens}, steps=16)
+        live = platform.registry.live_instances()
+        assert len(live) == 1, f"chain should fully fuse, got {live}"
+        assert np.median(lat[-3:]) < np.median(lat[:3])
+    finally:
+        platform.shutdown()
+
+
+def test_encdec_two_function_app():
+    cfg = reduced_config(get_arch("seamless-m4t-medium"))
+    model = build_model(cfg)
+    platform = TinyJaxBackend(FusionPolicy(min_observations=1, merge_cost_s=0.0))
+    try:
+        engine = ServingEngine(model, platform, max_len=32)
+        inputs = {
+            "src_embeds": (jax.random.normal(jax.random.PRNGKey(0), (2, 8, cfg.d_model)) * 0.02).astype(jnp.bfloat16),
+            "tokens": jnp.zeros((2, 1), jnp.int32),
+        }
+        toks, _ = engine.generate(inputs, steps=6)
+        assert toks.shape == (2, 6)
+        assert jnp.all((toks >= 0) & (toks < cfg.vocab_size))
+        merged = [m for m in platform.merger.merge_log if m.healthy]
+        assert merged and len(merged[0].members) == 2  # encoder + decoder fused
+    finally:
+        platform.shutdown()
+
+
+def test_hybrid_monolithic_chain():
+    cfg = reduced_config(get_arch("zamba2-7b"))
+    model = build_model(cfg)
+    platform = TinyJaxBackend(FusionPolicy(min_observations=2, merge_cost_s=0.0))
+    try:
+        engine = ServingEngine(model, platform, max_len=32)
+        tokens = jnp.ones((1, 8), jnp.int32)
+        toks, _ = engine.generate({"tokens": tokens}, steps=5)
+        assert toks.shape == (1, 5)
+    finally:
+        platform.shutdown()

@@ -1,0 +1,31 @@
+"""Whole-system integration: the quickstart path — deploy a composed app,
+serve traffic, watch the platform converge, verify nothing regressed."""
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.apps import deploy_iot, make_request
+from repro.core import FusionPolicy, TinyJaxBackend
+
+
+def test_iot_app_end_to_end_with_fusion():
+    platform = TinyJaxBackend(FusionPolicy(min_observations=3, merge_cost_s=0.0))
+    try:
+        entry = deploy_iot(platform)
+        ref_out = None
+        for i in range(10):
+            out = platform.invoke(entry, make_request(0))
+            if ref_out is None:
+                ref_out = np.asarray(out)
+            else:
+                np.testing.assert_allclose(np.asarray(out), ref_out, rtol=2e-4, atol=1e-5)
+        stats = platform.stats()
+        healthy = [m for m in stats["merges"] if m["healthy"]]
+        assert healthy, "IOT sync edges must fuse"
+        # the sync group analyze+temperature+airquality+traffic converges
+        final_members = set(healthy[-1]["members"])
+        assert "iot/analyze" in final_members and len(final_members) >= 3
+        # async store stays isolated
+        assert platform.registry.resolve("iot/store").members.keys() == {"iot/store"}
+        assert stats["billing"]["total_gb_s"] > 0
+    finally:
+        platform.shutdown()

@@ -1,0 +1,115 @@
+"""Fault-tolerant training loop: bit-exact restart, stragglers, data resume."""
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpointing import CheckpointManager
+from repro.configs import get_arch, reduced_config
+from repro.configs.base import ShapeConfig
+from repro.data import SyntheticTokenPipeline
+from repro.models.model import build_model
+from repro.optim import AdamWConfig, cosine_schedule
+from repro.training import FailureInjector, TrainLoop
+from repro.training.train_step import init_train_state, make_train_step
+
+SHAPE = ShapeConfig("t", 32, 4, "train")
+
+
+def build(tmpdir, cfg):
+    model = build_model(cfg)
+    step_fn = make_train_step(model, AdamWConfig(lr=1e-2), cosine_schedule(1e-2, 2, 20))
+    state0 = init_train_state(model, jax.random.PRNGKey(0))
+    make_data = lambda start: SyntheticTokenPipeline(cfg, SHAPE, seed=7, mode="affine", start_batch=start)
+    return model, step_fn, state0, make_data
+
+
+def test_restart_is_bit_exact(tmp_path):
+    cfg = reduced_config(get_arch("llama3.2-1b"))
+    _, step_fn, state0, make_data = build(tmp_path, cfg)
+    loop_a = TrainLoop(step_fn, make_data, CheckpointManager(str(tmp_path / "a")), ckpt_every=4)
+    state_a, hist_a = loop_a.run(state0, 12)
+    loop_b = TrainLoop(step_fn, make_data, CheckpointManager(str(tmp_path / "b")), ckpt_every=4)
+    injector = FailureInjector([5, 9])
+    state_b, hist_b = loop_b.run(state0, 12, injector)
+    assert loop_b.restarts == 2
+    assert injector.fired == [5, 9]
+    for a, b in zip(jax.tree.leaves(state_a["params"]), jax.tree.leaves(state_b["params"])):
+        assert jnp.array_equal(a, b), "post-recovery params differ from failure-free run"
+
+
+def test_training_learns_affine_stream(tmp_path):
+    cfg = reduced_config(get_arch("llama3.2-1b"))
+    _, step_fn, state0, make_data = build(tmp_path, cfg)
+    loop = TrainLoop(step_fn, make_data, CheckpointManager(str(tmp_path / "c")), ckpt_every=0)
+    _, hist = loop.run(state0, 15)
+    assert hist[-1]["loss"] < hist[0]["loss"] * 0.8
+
+
+def test_straggler_detection():
+    calls = {"n": 0}
+
+    def slow_step(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 8:
+            time.sleep(1.5)  # the straggler
+        return state, {"loss": jnp.float32(1.0)}
+
+    cfg = reduced_config(get_arch("llama3.2-1b"))
+    make_data = lambda start: SyntheticTokenPipeline(cfg, SHAPE, seed=7, start_batch=start)
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        # jit_step=False: a jitted step would swallow the python sleep at trace time
+        loop = TrainLoop(slow_step, make_data, CheckpointManager(d), ckpt_every=0,
+                         straggler_factor=3.0, jit_step=False)
+        state0 = {"x": jnp.zeros(())}
+        loop.run(state0, 12)
+    assert any(ev.step == 8 for ev in loop.straggler_events)
+
+
+def test_data_pipeline_deterministic_resume():
+    cfg = reduced_config(get_arch("llama3.2-1b"))
+    p1 = SyntheticTokenPipeline(cfg, SHAPE, seed=3)
+    batches = [next(p1) for _ in range(5)]
+    p1.close()
+    p2 = SyntheticTokenPipeline(cfg, SHAPE, seed=3, start_batch=3)
+    resumed = next(p2)
+    p2.close()
+    assert jnp.array_equal(batches[3]["tokens"], resumed["tokens"])
+    assert jnp.array_equal(batches[3]["targets"], resumed["targets"])
+
+
+def test_affine_stream_is_next_token_predictable():
+    cfg = reduced_config(get_arch("llama3.2-1b"))
+    p = SyntheticTokenPipeline(cfg, SHAPE, seed=1, mode="affine")
+    b = next(p)
+    p.close()
+    v = cfg.vocab_size
+    expect = (31 * b["tokens"].astype(jnp.int64) + 7) % v
+    assert jnp.array_equal(expect.astype(jnp.int32), b["targets"])
+
+
+def test_microbatched_step_matches_full_batch():
+    """Gradient accumulation must be loss-equivalent to the full batch."""
+    import dataclasses
+
+    cfg = reduced_config(get_arch("llama3.2-1b"))
+    model_full = build_model(cfg)
+    cfg_micro = dataclasses.replace(cfg, microbatches=2)
+    model_micro = build_model(cfg_micro)
+    state = init_train_state(model_full, jax.random.PRNGKey(0))
+    step_full = make_train_step(model_full, AdamWConfig(lr=1e-2))
+    step_micro = make_train_step(model_micro, AdamWConfig(lr=1e-2))
+    p = SyntheticTokenPipeline(cfg, SHAPE, seed=7)
+    batch = next(p)
+    p.close()
+    s1, m1 = jax.jit(step_full)(state, batch)
+    s2, m2 = jax.jit(step_micro)(state, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=2e-2)
+    # grads accumulate in bf16 (see train_step.py) -> updates agree loosely
+    for a, b in zip(jax.tree.leaves(s1["params"]), jax.tree.leaves(s2["params"])):
+        assert jnp.allclose(a.astype(jnp.float32), b.astype(jnp.float32), rtol=8e-2, atol=2e-2), (
+            float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        )
