@@ -1,0 +1,248 @@
+"""Open/closed-loop load generator for the Provuse request scheduler.
+
+Drives concurrent decode traffic through a ServingEngine chain and measures
+throughput + tail latency under four regimes: {unfused, fused} x {serial
+`invoke`, micro-batched `invoke_async`}. The headline comparison (fused
+chain, batched vs serial dispatch at --concurrency 8) is the scheduler's
+reason to exist: the paper's fusion makes one request faster; the scheduler
+makes the fused unit serve many at once.
+
+Closed loop (default): C client threads, each with its own KV cache, decode
+as fast as responses return for --steps iterations.
+Open loop (--rate R): a single generator submits `invoke_async` arrivals at
+R req/s (uniform spacing) for --duration seconds and waits for completions —
+latency then includes queueing behind the instance, the classic
+open-vs-closed distinction.
+
+Usage:
+    PYTHONPATH=src python benchmarks/load_bench.py --concurrency 8
+    PYTHONPATH=src python benchmarks/load_bench.py --concurrency 8 --backend orchestrated
+    PYTHONPATH=src python benchmarks/load_bench.py --rate 200 --duration 5 --modes fused-batched
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced_config
+from repro.core import FusionPolicy, OrchestratedBackend, TinyJaxBackend
+from repro.models.model import build_model
+from repro.scheduler import percentiles_ms
+from repro.serving.engine import ServingEngine
+
+BACKENDS = {"tinyjax": TinyJaxBackend, "orchestrated": OrchestratedBackend}
+MODES = ("unfused-serial", "unfused-batched", "fused-serial", "fused-batched")
+
+
+def build_engine(args, fused: bool):
+    cfg = reduced_config(get_arch(args.arch))
+    model = build_model(cfg)
+    policy = FusionPolicy(min_observations=2, merge_cost_s=0.0, enabled=fused)
+    platform = BACKENDS[args.backend](
+        policy, max_batch=args.max_batch or args.concurrency, max_delay_ms=args.max_delay_ms
+    )
+    engine = ServingEngine(model, platform, max_len=args.max_len)
+    return engine, platform
+
+
+def warm(engine, steps: int = 6):
+    """Trigger observation->fusion (when enabled) and all compiles."""
+    tokens = jnp.ones((1, 4), jnp.int32)
+    engine.generate({"tokens": tokens}, steps=steps)
+    engine.platform.merger.wait_idle()
+
+
+class Client:
+    """One closed-loop stream: prefill once, then decode step after step.
+
+    The next-token choice is elided (a constant token is fed every step):
+    token identity changes neither shapes nor decode cost, and per-step
+    argmax/host-roundtrip in N GIL-sharing client threads would measure the
+    load generator, not the platform under test. Caches and cur_len advance
+    normally, so every step is a real full decode."""
+
+    def __init__(self, engine, cid: int, prompt_len: int):
+        self.engine = engine
+        tokens = jnp.full((1, prompt_len), 1 + cid % 17, jnp.int32)
+        _, self.caches, cur_len = engine.prefill({"tokens": tokens})
+        # host-side step counter: numpy += 1 is ~1000x cheaper than a JAX
+        # dispatch, and N client threads share one GIL
+        self.cur_len = np.asarray(cur_len)
+        self.tokens = jnp.full((1, 1), 1 + cid % 17, jnp.int32)
+        self.latencies: list[float] = []
+
+    def step_serial(self):
+        t0 = time.perf_counter()
+        _, self.caches = self.engine.decode_step(self.tokens, self.cur_len, self.caches)
+        self.latencies.append(time.perf_counter() - t0)
+        self.cur_len = self.cur_len + 1
+
+    def step_batched(self):
+        t0 = time.perf_counter()
+        fut = self.engine.decode_step_async(self.tokens, self.cur_len, self.caches)
+        _, self.caches = fut.result()
+        self.latencies.append(time.perf_counter() - t0)
+        self.cur_len = self.cur_len + 1
+
+
+def run_closed_loop(args, mode: str) -> dict:
+    fused = mode.startswith("fused")
+    batched = mode.endswith("batched")
+    engine, platform = build_engine(args, fused)
+    try:
+        warm(engine)
+        clients = [Client(engine, i, args.prompt_len) for i in range(args.concurrency)]
+        # per-mode warmup: compile the batched buckets before the timed window
+        barrier = threading.Barrier(args.concurrency)
+
+        def drive(client: Client, steps: int):
+            barrier.wait()
+            for _ in range(steps):
+                client.step_batched() if batched else client.step_serial()
+
+        for phase_steps, timed in ((args.warmup_steps, False), (args.steps, True)):
+            for c in clients:
+                c.latencies.clear()
+            threads = [
+                threading.Thread(target=drive, args=(c, phase_steps), daemon=True)
+                for c in clients
+            ]
+            t0 = time.perf_counter()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            elapsed = time.perf_counter() - t0
+        total = args.steps * args.concurrency
+        lats = [l for c in clients for l in c.latencies]
+        out = {
+            "mode": mode,
+            "loop": "closed",
+            "requests": total,
+            "elapsed_s": round(elapsed, 3),
+            "throughput_rps": round(total / elapsed, 2),
+            **{k: round(v, 3) for k, v in percentiles_ms(lats).items()},
+            "scheduler": platform.scheduler.stats() if batched else None,
+        }
+        return out
+    finally:
+        platform.shutdown()
+
+
+def run_open_loop(args, mode: str) -> dict:
+    fused = mode.startswith("fused")
+    engine, platform = build_engine(args, fused)
+    try:
+        warm(engine)
+        clients = [Client(engine, i, args.prompt_len) for i in range(args.concurrency)]
+        # warm the batch buckets so open-loop timing excludes compiles
+        futs = [engine.decode_step_async(c.tokens, c.cur_len, c.caches) for c in clients]
+        for f in futs:
+            f.result()
+        interval = 1.0 / args.rate
+        deadline = time.perf_counter() + args.duration
+        pending = []
+        lats: list[float] = []
+        lats_lock = threading.Lock()
+
+        def stamp_completion(t_submit):
+            # done-callbacks fire ON completion, so latency includes queueing
+            # behind the instance but NOT time spent waiting in a drain loop
+            def cb(fut):
+                dt = time.perf_counter() - t_submit
+                with lats_lock:
+                    lats.append(dt)
+            return cb
+
+        i = 0
+        t_next = time.perf_counter()
+        t0 = time.perf_counter()
+        while time.perf_counter() < deadline:
+            now = time.perf_counter()
+            if now < t_next:
+                time.sleep(min(t_next - now, interval))
+                continue
+            t_next += interval
+            c = clients[i % len(clients)]
+            i += 1
+            # open loop: fire-and-record, do not wait for the response
+            fut = engine.decode_step_async(c.tokens, c.cur_len, c.caches)
+            fut.add_done_callback(stamp_completion(time.perf_counter()))
+            pending.append(fut)
+        for fut in pending:
+            fut.result()
+        elapsed = time.perf_counter() - t0
+        return {
+            "mode": mode,
+            "loop": "open",
+            "offered_rps": args.rate,
+            "requests": len(pending),
+            "elapsed_s": round(elapsed, 3),
+            "throughput_rps": round(len(pending) / elapsed, 2),
+            **{k: round(v, 3) for k, v in percentiles_ms(lats).items()},
+            "scheduler": platform.scheduler.stats(),
+        }
+    finally:
+        platform.shutdown()
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--backend", default="tinyjax", choices=sorted(BACKENDS))
+    ap.add_argument("--concurrency", type=int, default=8, help="closed-loop clients / open-loop streams")
+    ap.add_argument("--steps", type=int, default=48, help="timed decode steps per closed-loop client")
+    ap.add_argument("--warmup-steps", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--max-batch", type=int, default=0, help="0 = match --concurrency")
+    ap.add_argument("--max-delay-ms", type=float, default=4.0, help="micro-batch window")
+    ap.add_argument("--rate", type=float, default=0.0, help=">0 switches to open loop at this req/s")
+    ap.add_argument("--duration", type=float, default=5.0, help="open-loop run time (s)")
+    ap.add_argument("--modes", nargs="*", default=["fused-serial", "fused-batched"], choices=MODES)
+    ap.add_argument("--json", action="store_true", help="emit machine-readable results")
+    args = ap.parse_args()
+
+    results = []
+    for mode in args.modes:
+        if args.rate > 0:
+            if mode.endswith("serial"):
+                # open loop submits without waiting — that IS the scheduled
+                # path; a "serial" open-loop row would silently measure the
+                # same thing under a different label
+                print(f"[{mode:>16}] skipped: open loop (--rate) only supports *-batched modes")
+                continue
+            res = run_open_loop(args, mode)
+        else:
+            res = run_closed_loop(args, mode)
+        results.append(res)
+        if not args.json:
+            sched = res.pop("scheduler", None)
+            print(f"[{res['mode']:>16}] {res['throughput_rps']:8.1f} req/s   "
+                  f"p50 {res['p50_ms']:7.1f} ms   p95 {res['p95_ms']:7.1f} ms   "
+                  f"p99 {res['p99_ms']:7.1f} ms   ({res['requests']} reqs in {res['elapsed_s']}s)")
+            if sched:
+                print(f"{'':18}mean batch {sched['mean_batch']:.2f}, max {sched['max_batch_seen']}, "
+                      f"{sched['batches']} batches")
+
+    by_mode = {r["mode"]: r for r in results}
+    if "fused-serial" in by_mode and "fused-batched" in by_mode:
+        speedup = by_mode["fused-batched"]["throughput_rps"] / max(by_mode["fused-serial"]["throughput_rps"], 1e-9)
+        if args.json:
+            for r in results:
+                r.pop("scheduler", None)
+            print(json.dumps({"results": results, "batched_vs_serial_speedup": round(speedup, 2)}, indent=2))
+        else:
+            print(f"\nbatched vs serial (fused chain): {speedup:.2f}x throughput")
+    elif args.json:
+        print(json.dumps({"results": results}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

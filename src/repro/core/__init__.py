@@ -12,3 +12,4 @@ from repro.core.handler import FunctionHandler  # noqa: F401
 from repro.core.merger import MergeEvent, Merger  # noqa: F401
 from repro.core.platform import OrchestratedBackend, ProvusePlatform, TinyJaxBackend  # noqa: F401
 from repro.core.policy import FusionDecision, FusionPolicy  # noqa: F401
+from repro.scheduler import RequestScheduler  # noqa: F401

@@ -22,6 +22,11 @@ class InvocationRecord:
     t_end: float
     resident_bytes: int
     blocked_s: float = 0.0
+    # Requests co-batched into this execution. Each request in a micro-batch
+    # gets its own record, but the instance was held ONCE for the batch
+    # duration — so billed GB-s splits evenly across the co-batched requests
+    # (summing the batch's records reproduces the instance's true cost).
+    batch_size: int = 1
 
     @property
     def duration_s(self) -> float:
@@ -29,21 +34,33 @@ class InvocationRecord:
 
     @property
     def gb_seconds(self) -> float:
-        return self.duration_s * self.resident_bytes / 1e9
+        return self.duration_s * self.resident_bytes / 1e9 / max(1, self.batch_size)
 
 
 class BillingMeter:
     def __init__(self):
         self._lock = threading.Lock()
         self.records: list[InvocationRecord] = []
+        from repro.scheduler.metrics import LatencyWindow
+
+        self._latency = LatencyWindow()
 
     def record(self, rec: InvocationRecord) -> None:
         with self._lock:
             self.records.append(rec)
 
+    def observe_latency(self, function: str, seconds: float) -> None:
+        """One *external* request completed end-to-end (admission/arrival ->
+        response ready) after ``seconds``. Serial `invoke` and the scheduler's
+        batched path both report here — and only client traffic does; the
+        Merger's canary replays bypass this — so percentiles cover exactly
+        the external request stream regardless of dispatch mode."""
+        self._latency.observe(seconds)
+
     def reset(self) -> None:
         with self._lock:
             self.records = []
+        self._latency.reset()
 
     def total_gb_seconds(self) -> float:
         with self._lock:
@@ -53,6 +70,10 @@ class BillingMeter:
         """The double-billed component: memory held while blocked downstream."""
         with self._lock:
             return sum(r.blocked_s * r.resident_bytes / 1e9 for r in self.records)
+
+    def latency_summary(self) -> dict:
+        """p50/p95/p99 of external request latency + sustained throughput."""
+        return self._latency.snapshot()
 
     def summary(self) -> dict:
         with self._lock:

@@ -35,6 +35,10 @@ class MergeEvent:
     build_s: float
     healthy: bool
     reason: str = ""
+    # Members whose canary was replayed through the live path during the
+    # health check — each replay is one extra (control-plane) invocation on
+    # the billing meter, so tests can account for merge traffic exactly.
+    checked_members: tuple[str, ...] = ()
 
 
 def _allclose_tree(a, b, rtol: float, atol: float) -> bool:
@@ -60,6 +64,16 @@ class Merger:
         self.async_build = async_build
         self.merge_log: list[MergeEvent] = []
         self._inflight: set[tuple[str, str]] = set()
+        # Edges/groups whose merged unit FAILED its health check. The merged
+        # program is a pure function of the specs, so retrying without a code
+        # change fails identically — and because the health check's own
+        # reference invocation re-observes the hot edge, retry-on-observation
+        # would spin the control plane forever. Failed rollouts stay failed.
+        # The group set catches OTHER edges that resolve to the same doomed
+        # member set (e.g. (A,C) after (B,C) failed to extend committed
+        # {A,B}) before they pay the build cost again.
+        self._quarantined: set[tuple[str, str]] = set()
+        self._failed_groups: set[frozenset[str]] = set()
         self._lock = threading.Lock()
         self._threads: list[threading.Thread] = []
 
@@ -76,8 +90,10 @@ class Merger:
         if not decision.fuse:
             return
         with self._lock:
-            if (caller, callee) in self._inflight:
+            if (caller, callee) in self._inflight or (caller, callee) in self._quarantined:
                 return
+            if frozenset(decision.group) in self._failed_groups:
+                return  # another edge already proved this exact unit unhealthy
             self._inflight.add((caller, callee))
         if self.async_build:
             th = threading.Thread(target=self._do_merge, args=(caller, callee, decision.group), daemon=True)
@@ -103,26 +119,31 @@ class Merger:
 
             # --- health check on captured canary traffic (warms the compile) ---
             healthy = True
-            checked = 0
+            checked: list[str] = []
             for name in sorted(group):
                 canary = platform.handler.canary(name)
                 if canary is None:
                     continue
-                ref = platform.invoke(name, *canary)  # old (still-routed) path
+                ref = platform._invoke_with_retry(name, canary)  # old (still-routed) path
                 got = merged.execute(name, canary)
-                checked += 1
+                checked.append(name)
                 if not _allclose_tree(ref, got, self.health_rtol, self.health_atol):
                     healthy = False
                     break
-            if checked == 0:
+            if not checked:
                 healthy = False  # no canary -> cannot verify; do not swap
 
             if not healthy:
                 # Abort: never swap an unverified unit. Originals keep serving.
                 platform.detach_instance(merged)
                 reason = "health check failed" if checked else "no canary traffic captured"
+                if checked:  # no-canary aborts may retry once traffic arrives
+                    with self._lock:
+                        self._quarantined.add((caller, callee))
+                        self._failed_groups.add(frozenset(group))
                 self.merge_log.append(
-                    MergeEvent(time.perf_counter(), tuple(sorted(group)), 0, time.perf_counter() - t0, False, reason)
+                    MergeEvent(time.perf_counter(), tuple(sorted(group)), 0, time.perf_counter() - t0,
+                               False, reason, tuple(checked))
                 )
                 return
 
@@ -140,7 +161,8 @@ class Merger:
             build_s = time.perf_counter() - t0
             self.policy.feedback_merge_cost(build_s)
             self.merge_log.append(
-                MergeEvent(time.perf_counter(), tuple(sorted(group)), freed, build_s, True)
+                MergeEvent(time.perf_counter(), tuple(sorted(group)), freed, build_s, True,
+                           checked_members=tuple(checked))
             )
         finally:
             with self._lock:

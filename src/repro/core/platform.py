@@ -32,21 +32,36 @@ from repro.core.handler import FunctionHandler
 from repro.core.merger import Merger
 from repro.core.policy import FusionPolicy
 from repro.core.registry import RoutingTable
+from repro.scheduler import RequestScheduler
 
 
 class ProvusePlatform:
-    """Base platform: deploy / invoke / observe / fuse."""
+    """Base platform: deploy / invoke / observe / fuse / schedule.
+
+    Two dispatch modes face the client:
+
+    * ``invoke`` — the paper's serial path: one request, executed to
+      completion in (or via) the calling thread.
+    * ``invoke_async`` — returns a Future; the request scheduler coalesces
+      concurrent compatible requests into micro-batches that run as ONE
+      (vmapped) XLA execution on the routed — possibly fused — instance.
+    """
 
     backend_name = "base"
 
     def __init__(self, policy: FusionPolicy | None = None, *, async_build: bool = False,
-                 health_rtol: float = 2e-2, health_atol: float = 1e-2):
+                 health_rtol: float = 2e-2, health_atol: float = 1e-2,
+                 max_batch: int = 8, max_delay_ms: float = 2.0):
         self.registry = RoutingTable()
         self.meter = BillingMeter()
         self.policy = policy or FusionPolicy()
         self.handler = FunctionHandler(self.meter, on_fusion_candidate=self._on_candidate)
         self.merger = Merger(self, self.policy, async_build=async_build,
                              health_rtol=health_rtol, health_atol=health_atol)
+        self.scheduler = RequestScheduler(
+            self._dispatch_batch, max_batch=max_batch, max_delay_ms=max_delay_ms,
+            on_request_done=lambda name, lat_s, k: self.meter.observe_latency(name, lat_s),
+        )
         self._specs: dict[str, FunctionSpec] = {}
         self._shape_cache: dict[tuple, Any] = {}
         self._shape_stack: list[str] = []
@@ -137,21 +152,77 @@ class ProvusePlatform:
         instance.begin_request()
         self.handler.enter(entry, instance)
         try:
-            return instance.execute(entry, args)
-        finally:
+            out = instance.execute(entry, args)
+        except BaseException:
+            # failed attempts are not billed — the retry path would otherwise
+            # double-bill the same request (swap races, redeploys)
+            self.handler.abort(entry)
+            raise
+        else:
             self.handler.exit(entry)
+            return out
+        finally:
             instance.end_request()
 
-    def invoke(self, name: str, *args):
-        """External (client) invocation."""
-        self.handler.record_canary(name, args)
+    def _run_batch(self, instance: FunctionInstance, entry: str, args_list: list[tuple]) -> list:
+        instance.begin_request()
+        self.handler.enter(entry, instance, batch_size=len(args_list))
+        try:
+            out = instance.execute_batch(entry, args_list, max_bucket=self.scheduler.max_batch)
+        except BaseException:
+            self.handler.abort(entry)
+            raise
+        else:
+            self.handler.exit(entry)
+            return out
+        finally:
+            instance.end_request()
+
+    def _invoke_with_retry(self, name: str, args: tuple):
+        """Serial dispatch with swap-race recovery. Also the Merger's canary
+        replay path — no latency observation here, so control-plane traffic
+        never pollutes the external latency percentiles."""
         try:
             try:
                 return self._dispatch_sync(name, args)
             except InvocationError:
-                # fault tolerance: re-provision a fresh instance from the spec
-                self._redeploy(name)
-                return self._dispatch_sync(name, args)
+                # A request can race a merge swap: it resolved the old
+                # instance, the Merger retired it mid-flight. Re-resolving
+                # picks up the new routing; only if THAT fails is the
+                # container actually gone and a fresh one provisioned.
+                try:
+                    return self._dispatch_sync(name, args)
+                except InvocationError:
+                    self._redeploy(name)
+                    return self._dispatch_sync(name, args)
+        finally:
+            self._drain_candidates()
+
+    def invoke(self, name: str, *args):
+        """External (client) invocation — serial path."""
+        self.handler.record_canary(name, args)
+        t0 = time.perf_counter()
+        out = self._invoke_with_retry(name, args)
+        self.meter.observe_latency(name, time.perf_counter() - t0)
+        return out
+
+    def invoke_async(self, name: str, *args) -> Future:
+        """External invocation through the request scheduler. Returns a
+        Future; compatible concurrent requests may execute as one batch."""
+        self.handler.record_canary(name, args)
+        return self.scheduler.submit(name, args)
+
+    def _dispatch_batch(self, name: str, args_list: list[tuple]) -> list:
+        """Scheduler callback: execute one coalesced batch."""
+        try:
+            try:
+                return self._dispatch_batch_impl(name, args_list)
+            except InvocationError:
+                try:  # routing may have swapped mid-flight (see invoke)
+                    return self._dispatch_batch_impl(name, args_list)
+                except InvocationError:
+                    self._redeploy(name)
+                    return self._dispatch_batch_impl(name, args_list)
         finally:
             self._drain_candidates()
 
@@ -198,6 +269,8 @@ class ProvusePlatform:
                 for e in self.merger.merge_log
             ],
             "billing": self.meter.summary(),
+            "latency": self.meter.latency_summary(),
+            "scheduler": self.scheduler.stats(),
         }
 
     # ------------------------------------------------------------- backend API
@@ -208,8 +281,11 @@ class ProvusePlatform:
     def _dispatch_async(self, name: str, args: tuple) -> None:
         raise NotImplementedError
 
+    def _dispatch_batch_impl(self, name: str, args_list: list[tuple]) -> list:
+        raise NotImplementedError
+
     def shutdown(self) -> None:
-        pass
+        self.scheduler.shutdown()
 
 
 class TinyJaxBackend(ProvusePlatform):
@@ -225,6 +301,10 @@ class TinyJaxBackend(ProvusePlatform):
         instance = self.registry.resolve(name)
         return self._run_request(instance, name, args)
 
+    def _dispatch_batch_impl(self, name: str, args_list: list[tuple]) -> list:
+        instance = self.registry.resolve(name)
+        return self._run_batch(instance, name, args_list)
+
     def _dispatch_async(self, name: str, args: tuple) -> None:
         self._async_pool.submit(self._safe_async, name, args)
 
@@ -235,6 +315,7 @@ class TinyJaxBackend(ProvusePlatform):
             pass  # async branches are fire-and-forget; failures are logged by billing absence
 
     def shutdown(self) -> None:
+        super().shutdown()
         self._async_pool.shutdown(wait=True)
 
 
@@ -253,15 +334,23 @@ class _Worker:
             item = self.q.get()
             if item is None:
                 return
-            entry, args, fut = item
+            entry, payload, fut, is_batch = item
             try:
-                fut.set_result(self.platform._run_request(self.instance, entry, args))
+                if is_batch:
+                    fut.set_result(self.platform._run_batch(self.instance, entry, payload))
+                else:
+                    fut.set_result(self.platform._run_request(self.instance, entry, payload))
             except Exception as exc:  # noqa: BLE001
                 fut.set_exception(exc)
 
     def submit(self, entry: str, args: tuple) -> Future:
         fut: Future = Future()
-        self.q.put((entry, args, fut))
+        self.q.put((entry, args, fut, False))
+        return fut
+
+    def submit_batch(self, entry: str, args_list: list[tuple]) -> Future:
+        fut: Future = Future()
+        self.q.put((entry, args_list, fut, True))
         return fut
 
     def stop(self):
@@ -305,11 +394,19 @@ class OrchestratedBackend(ProvusePlatform):
             return self._run_request(instance, name, args)
         return worker.submit(name, args).result()
 
+    def _dispatch_batch_impl(self, name: str, args_list: list[tuple]) -> list:
+        instance = self.registry.resolve(name)
+        worker = self._worker_for(instance)
+        if worker.thread is threading.current_thread():
+            return self._run_batch(instance, name, args_list)
+        return worker.submit_batch(name, args_list).result()
+
     def _dispatch_async(self, name: str, args: tuple) -> None:
         instance = self.registry.resolve(name)
         self._worker_for(instance).submit(name, args)
 
     def shutdown(self) -> None:
+        super().shutdown()
         with self._workers_lock:
             for worker in self._workers.values():
                 worker.stop()

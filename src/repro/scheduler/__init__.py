@@ -1,0 +1,15 @@
+"""Concurrent request scheduling: admission queues + micro-batched dispatch.
+
+The paper measures one request at a time; this package is the platform layer
+that turns *concurrent* external invocations into batched XLA executions
+(ProFaaStinate-style delayed grouping in front of Provuse's fused units).
+"""
+from repro.scheduler.batching import (  # noqa: F401
+    next_batch_bucket,
+    request_key,
+    split_results,
+    stack_requests,
+)
+from repro.scheduler.coalescer import AdmissionQueue, PendingRequest  # noqa: F401
+from repro.scheduler.metrics import LatencyWindow, percentiles_ms  # noqa: F401
+from repro.scheduler.scheduler import RequestScheduler  # noqa: F401

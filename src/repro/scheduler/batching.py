@@ -1,0 +1,49 @@
+"""Request-batching primitives: shape keys, stacking, bucketing.
+
+Two concurrent requests are *compatible* (co-batchable) when they target the
+same function with the same argument structure — same pytree treedef, same
+leaf shapes and dtypes. Compatible requests stack along a NEW leading batch
+axis and run as one vmapped execution; the batch axis is invisible to the
+function's own code, so shape-polymorphic routes (prefill vs decode) keep
+their per-request meaning.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _leaf_sig(leaf) -> tuple:
+    shape = getattr(leaf, "shape", None)
+    dtype = getattr(leaf, "dtype", None)
+    if shape is None or dtype is None:  # plain Python scalar: 0-d weak type
+        return (jnp.shape(leaf), str(jnp.result_type(leaf)))
+    return (tuple(shape), str(dtype))
+
+
+def request_key(name: str, args: tuple) -> tuple:
+    """Admission-queue key: (function, argument-structure). On the hot path
+    for every scheduled request — leaf signatures read `.shape`/`.dtype`
+    directly and only fall back to jnp promotion for Python scalars."""
+    leaves, treedef = jax.tree_util.tree_flatten(args)
+    return (name, str(treedef), tuple(_leaf_sig(l) for l in leaves))
+
+
+def stack_requests(args_list: list[tuple]):
+    """Stack k compatible requests' args along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *args_list)
+
+
+def split_results(out, k: int) -> list:
+    """Scatter a batched output pytree back into k per-request pytrees."""
+    return [jax.tree.map(lambda x: x[i], out) for i in range(k)]
+
+
+def next_batch_bucket(k: int, max_batch: int | None = None) -> int:
+    """Round a batch size up to the next power-of-two bucket (optionally
+    capped at max_batch) so an instance compiles O(log max_batch) batched
+    programs instead of one per observed size; short batches pad up."""
+    b = 1 if k <= 1 else 1 << (k - 1).bit_length()
+    if max_batch is not None:
+        b = min(b, max(1, max_batch))
+    return b

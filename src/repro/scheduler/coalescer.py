@@ -1,0 +1,142 @@
+"""Per-key admission queue with a micro-batching coalescer thread.
+
+Each (function, request-shape) key owns one queue and one dispatcher thread.
+The dispatcher blocks for the first request, then keeps the batch open for up
+to ``max_delay_s`` past that first arrival (ProFaaStinate's "briefly delay to
+group" window), closing early when ``max_batch`` requests have been admitted.
+With ``max_delay_s == 0`` the window degenerates to greedy draining: whatever
+is already queued rides along, nothing waits — batching then costs zero added
+latency under bursty load and the scheduler behaves like serial dispatch when
+requests trickle in one at a time.
+
+A dispatcher that sees no traffic for ``idle_timeout_s`` offers itself back
+via ``on_idle`` (the scheduler drops the queue under its lock unless a
+request raced in) and exits — shape-diverse workloads don't leak threads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Callable
+
+
+@dataclasses.dataclass
+class PendingRequest:
+    args: tuple
+    future: Future
+    t_enqueue: float
+
+
+_STOP = object()
+
+
+class AdmissionQueue:
+    """One key's queue + dispatcher. ``dispatch`` receives (name, [args...])
+    and must return one result per request, in order."""
+
+    def __init__(
+        self,
+        name: str,
+        dispatch: Callable[[str, list[tuple]], list],
+        *,
+        key: tuple = (),
+        max_batch: int,
+        max_delay_s: float,
+        idle_timeout_s: float = 60.0,
+        on_batch_done: Callable[[str, list[PendingRequest], float], None] | None = None,
+        on_idle: Callable[["AdmissionQueue"], bool] | None = None,
+    ):
+        self.name = name
+        self.key = key
+        self._dispatch = dispatch
+        self.max_batch = max(1, int(max_batch))
+        self.max_delay_s = max(0.0, float(max_delay_s))
+        self.idle_timeout_s = idle_timeout_s
+        self._on_batch_done = on_batch_done
+        self._on_idle = on_idle
+        self._q: "queue.Queue" = queue.Queue()
+        self.thread = threading.Thread(target=self._loop, daemon=True, name=f"coalesce-{name}")
+        self.thread.start()
+
+    def put(self, req: PendingRequest) -> None:
+        self._q.put(req)
+
+    def empty(self) -> bool:
+        return self._q.empty()
+
+    def stop(self) -> None:
+        self._q.put(_STOP)
+
+    # ------------------------------------------------------------- internals
+
+    def _collect(self, first: PendingRequest) -> tuple[list[PendingRequest], bool]:
+        """Admit up to max_batch requests within max_delay_s of the first."""
+        batch = [first]
+        deadline = time.perf_counter() + self.max_delay_s
+        stopped = False
+        while len(batch) < self.max_batch:
+            remaining = deadline - time.perf_counter()
+            try:
+                if remaining > 0:
+                    item = self._q.get(timeout=remaining)
+                else:
+                    item = self._q.get_nowait()  # window closed: drain only
+            except queue.Empty:
+                break
+            if item is _STOP:
+                stopped = True
+                break
+            batch.append(item)
+        return batch, stopped
+
+    def _loop(self) -> None:
+        while True:
+            try:
+                item = self._q.get(timeout=self.idle_timeout_s)
+            except queue.Empty:
+                # idle: ask the scheduler to retire us; a concurrent submit
+                # makes it refuse, and we keep serving
+                if self._on_idle is not None and self._on_idle(self):
+                    return
+                continue
+            if item is _STOP:
+                return
+            batch, stopped = self._collect(item)
+            self._run_batch(batch)
+            if stopped:
+                return
+
+    def _run_batch(self, batch: list[PendingRequest]) -> None:
+        try:
+            results = self._dispatch(self.name, [r.args for r in batch])
+            if len(results) != len(batch):
+                raise RuntimeError(
+                    f"batched dispatch for {self.name!r} returned {len(results)} "
+                    f"results for {len(batch)} requests"
+                )
+        except BaseException as exc:  # noqa: BLE001 — every caller must hear about it
+            for r in batch:
+                _resolve(r.future, exc=exc)
+        else:
+            t_done = time.perf_counter()
+            if self._on_batch_done is not None:
+                self._on_batch_done(self.name, batch, t_done)
+            for r, out in zip(batch, results):
+                _resolve(r.future, result=out)
+
+
+def _resolve(future: Future, *, result=None, exc=None) -> None:
+    """Deliver to a future that the client may have cancelled meanwhile —
+    an InvalidStateError must not kill the dispatcher thread (it would
+    orphan the rest of the batch and permanently hang the key's queue)."""
+    try:
+        if exc is not None:
+            future.set_exception(exc)
+        else:
+            future.set_result(result)
+    except Exception:
+        if not future.cancelled():
+            raise

@@ -1,0 +1,64 @@
+"""Shared latency metrics: bounded sliding window + percentile reporting.
+
+One implementation serves both latency sinks — the BillingMeter (all external
+traffic, serial and scheduled) and the RequestScheduler (queue-level view,
+usable standalone without a platform).
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+
+
+def percentiles_ms(samples_s, points=(50, 95, 99)) -> dict:
+    """p50/p95/p99 (milliseconds) via nearest-rank on a sorted copy."""
+    out = {f"p{p}_ms": 0.0 for p in points}
+    n = len(samples_s)
+    if not n:
+        return out
+    ordered = sorted(samples_s)
+    for p in points:
+        rank = min(n - 1, max(0, int(round(p / 100.0 * n)) - 1))
+        out[f"p{p}_ms"] = ordered[rank] * 1e3
+    return out
+
+
+class LatencyWindow:
+    """Thread-safe bounded window of request latencies. Tracks the earliest
+    request start and latest completion so `snapshot()` can report sustained
+    throughput alongside tail percentiles."""
+
+    def __init__(self, maxlen: int = 200_000):
+        self._lock = threading.Lock()
+        self._samples: collections.deque = collections.deque(maxlen=maxlen)
+        self._count = 0
+        self._t_first: float | None = None
+        self._t_last = 0.0
+
+    def observe(self, seconds: float, t_done: float | None = None) -> None:
+        t_done = time.perf_counter() if t_done is None else t_done
+        with self._lock:
+            self._samples.append(seconds)
+            self._count += 1
+            t_start = t_done - seconds
+            if self._t_first is None or t_start < self._t_first:
+                self._t_first = t_start
+            if t_done > self._t_last:
+                self._t_last = t_done
+
+    def reset(self) -> None:
+        with self._lock:
+            self._samples.clear()
+            self._count = 0
+            self._t_first = None
+            self._t_last = 0.0
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            samples = list(self._samples)
+            count = self._count
+            span = (self._t_last - self._t_first) if self._t_first is not None else 0.0
+        out = {"requests": count, "throughput_rps": count / span if span > 0 else 0.0}
+        out.update(percentiles_ms(samples))
+        return out

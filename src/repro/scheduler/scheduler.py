@@ -1,0 +1,125 @@
+"""RequestScheduler: the front door for concurrent invocations.
+
+``submit(name, args)`` returns a Future immediately; behind it, requests are
+routed to a per-(function, shape) :class:`AdmissionQueue` whose coalescer
+groups them into micro-batches and hands each batch to the platform's batched
+dispatch path. The scheduler is backend-agnostic — it only knows the dispatch
+callable — and tracks end-to-end (admission -> completion) latency per
+request plus batch-size occupancy, the numbers `stats()` reports as
+p50/p95/p99 and throughput.
+
+Queue lifecycle: dispatcher threads are created lazily on a key's first
+request and retire themselves after ``idle_timeout_s`` without traffic, so
+shape-diverse workloads don't accumulate idle threads. All queue-map
+mutations (submit, retire, shutdown) serialize on one lock — a request can
+never be enqueued behind a stop sentinel or into a retired queue.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from concurrent.futures import Future
+from typing import Callable
+
+from repro.scheduler.batching import request_key
+from repro.scheduler.coalescer import AdmissionQueue, PendingRequest
+from repro.scheduler.metrics import LatencyWindow, percentiles_ms  # noqa: F401 — re-exported
+
+_BATCH_WINDOW = 200_000  # bounded batch-size history
+
+
+class RequestScheduler:
+    def __init__(
+        self,
+        dispatch_batch: Callable[[str, list[tuple]], list],
+        *,
+        max_batch: int = 8,
+        max_delay_ms: float = 2.0,
+        idle_timeout_s: float = 60.0,
+        on_request_done: Callable[[str, float, int], None] | None = None,
+    ):
+        self._dispatch = dispatch_batch
+        self.max_batch = max(1, int(max_batch))
+        self.max_delay_s = max(0.0, float(max_delay_ms)) / 1e3
+        self.idle_timeout_s = idle_timeout_s
+        self._on_request_done = on_request_done
+        self._queues: dict[tuple, AdmissionQueue] = {}
+        self._lock = threading.Lock()
+        self._closed = False
+        self._latency = LatencyWindow()
+        self._batch_sizes: collections.deque = collections.deque(maxlen=_BATCH_WINDOW)
+        self._batches = 0
+
+    # ----------------------------------------------------------------- API
+
+    def submit(self, name: str, args: tuple) -> Future:
+        req = PendingRequest(args, Future(), time.perf_counter())
+        key = request_key(name, args)
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("scheduler is shut down")
+            q = self._queues.get(key)
+            if q is None:
+                q = AdmissionQueue(
+                    name,
+                    self._dispatch,
+                    key=key,
+                    max_batch=self.max_batch,
+                    max_delay_s=self.max_delay_s,
+                    idle_timeout_s=self.idle_timeout_s,
+                    on_batch_done=self._record_batch,
+                    on_idle=self._retire_queue,
+                )
+                self._queues[key] = q
+            q.put(req)  # same lock as retire/shutdown: never lands post-stop
+        return req.future
+
+    def shutdown(self, timeout: float = 10.0) -> None:
+        with self._lock:
+            self._closed = True
+            queues = list(self._queues.values())
+            for q in queues:
+                q.stop()
+        for q in queues:
+            q.thread.join(timeout)
+
+    # ------------------------------------------------------------ lifecycle
+
+    def _retire_queue(self, q: AdmissionQueue) -> bool:
+        """Idle-timeout callback from a dispatcher thread: drop the queue if
+        no request snuck in; the dispatcher exits on True."""
+        with self._lock:
+            if not q.empty():
+                return False
+            if self._queues.get(q.key) is q:
+                del self._queues[q.key]
+            return True
+
+    # ------------------------------------------------------------- metrics
+
+    def _record_batch(self, name: str, batch: list[PendingRequest], t_done: float) -> None:
+        k = len(batch)
+        with self._lock:
+            self._batch_sizes.append(k)
+            self._batches += 1
+        for r in batch:
+            self._latency.observe(t_done - r.t_enqueue, t_done)
+            if self._on_request_done is not None:
+                self._on_request_done(name, t_done - r.t_enqueue, k)
+
+    def stats(self) -> dict:
+        with self._lock:
+            sizes = list(self._batch_sizes)
+            batches = self._batches
+            n_keys = len(self._queues)
+        out = self._latency.snapshot()
+        out.update(
+            {
+                "batches": batches,
+                "queues": n_keys,
+                "mean_batch": (sum(sizes) / len(sizes)) if sizes else 0.0,
+                "max_batch_seen": max(sizes) if sizes else 0,
+            }
+        )
+        return out

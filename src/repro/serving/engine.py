@@ -256,6 +256,14 @@ class ServingEngine:
         inputs = {"tokens": tokens}
         return self.platform.invoke(self.entry, inputs, cur_len, caches)
 
+    def decode_step_async(self, tokens, cur_len, caches):
+        """Scheduled decode step: returns a Future of (logits, caches).
+        Concurrent clients decoding with the same shapes coalesce into one
+        micro-batched execution on the (possibly fused) chain."""
+        if self.cfg.family == "audio":
+            return self.platform.invoke_async(self.dec_name, tokens, cur_len, caches)
+        return self.platform.invoke_async(self.entry, {"tokens": tokens}, cur_len, caches)
+
     def generate(self, inputs: dict, steps: int):
         """Greedy generation; returns (tokens (B, steps), per-token seconds)."""
         import time

@@ -1,49 +1,54 @@
-"""Property tests (hypothesis) for the fusion policy + union-find groups."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+"""Property tests for the fusion policy + union-find groups.
+
+Hand-rolled seeded property loops (no optional `hypothesis` dependency —
+tier-1 must collect on a bare jax+pytest environment). Each loop draws many
+random cases from a fixed-seed RNG and checks the same invariants the
+original hypothesis strategies expressed.
+"""
+import random
 
 from repro.core.handler import EdgeStats
 from repro.core.policy import FusionPolicy, UnionFind
 
-names = st.sampled_from([f"f{i}" for i in range(8)])
+NAMES = [f"f{i}" for i in range(8)]
 
 
-@given(st.lists(st.tuples(names, names), max_size=30))
-@settings(max_examples=60, deadline=None)
-def test_union_find_partition_invariants(pairs):
-    uf = UnionFind()
-    for a, b in pairs:
-        uf.union(a, b)
-    seen = {x for ab in pairs for x in ab}
-    # reflexive + symmetric + transitive: groups partition the elements
-    for x in seen:
-        gx = uf.group(x)
-        assert x in gx
-        for y in gx:
-            assert uf.group(y) == gx
-    # union implies same group
-    for a, b in pairs:
-        assert uf.find(a) == uf.find(b)
+def test_union_find_partition_invariants():
+    rng = random.Random(0xC0FFEE)
+    for _ in range(60):
+        pairs = [(rng.choice(NAMES), rng.choice(NAMES)) for _ in range(rng.randint(0, 30))]
+        uf = UnionFind()
+        for a, b in pairs:
+            uf.union(a, b)
+        seen = {x for ab in pairs for x in ab}
+        # reflexive + symmetric + transitive: groups partition the elements
+        for x in seen:
+            gx = uf.group(x)
+            assert x in gx
+            for y in gx:
+                assert uf.group(y) == gx
+        # union implies same group
+        for a, b in pairs:
+            assert uf.find(a) == uf.find(b)
 
 
-@given(
-    sync=st.integers(0, 10),
-    wait_ms=st.floats(0.0, 50.0),
-    min_obs=st.integers(1, 5),
-    horizon=st.integers(1, 1000),
-    cost=st.floats(0.0, 5.0),
-)
-@settings(max_examples=80, deadline=None)
-def test_policy_decision_consistency(sync, wait_ms, min_obs, horizon, cost):
-    policy = FusionPolicy(min_observations=min_obs, amortization_horizon=horizon, merge_cost_s=cost)
-    stats = EdgeStats(sync_count=sync, total_wait_s=sync * wait_ms / 1e3)
-    d = policy.decide("a", "b", stats, "t", "t")
-    if d.fuse:
-        assert sync >= min_obs
-        assert stats.mean_wait_s * horizon >= cost
-        assert {"a", "b"} <= set(d.group)
-    if sync < min_obs:
-        assert not d.fuse
+def test_policy_decision_consistency():
+    rng = random.Random(1234)
+    for _ in range(80):
+        sync = rng.randint(0, 10)
+        wait_ms = rng.uniform(0.0, 50.0)
+        min_obs = rng.randint(1, 5)
+        horizon = rng.randint(1, 1000)
+        cost = rng.uniform(0.0, 5.0)
+        policy = FusionPolicy(min_observations=min_obs, amortization_horizon=horizon, merge_cost_s=cost)
+        stats = EdgeStats(sync_count=sync, total_wait_s=sync * wait_ms / 1e3)
+        d = policy.decide("a", "b", stats, "t", "t")
+        if d.fuse:
+            assert sync >= min_obs
+            assert stats.mean_wait_s * horizon >= cost
+            assert {"a", "b"} <= set(d.group)
+        if sync < min_obs:
+            assert not d.fuse
 
 
 def test_policy_cross_trust_never_fuses():

@@ -43,8 +43,11 @@ def test_training_learns_affine_stream(tmp_path):
     cfg = reduced_config(get_arch("llama3.2-1b"))
     _, step_fn, state0, make_data = build(tmp_path, cfg)
     loop = TrainLoop(step_fn, make_data, CheckpointManager(str(tmp_path / "c")), ckpt_every=0)
-    _, hist = loop.run(state0, 15)
-    assert hist[-1]["loss"] < hist[0]["loss"] * 0.8
+    _, hist = loop.run(state0, 30)
+    # single-step losses are noisy on the tiny config; compare 5-step windows
+    first = sum(h["loss"] for h in hist[:5]) / 5
+    last = sum(h["loss"] for h in hist[-5:]) / 5
+    assert last < first * 0.8, f"no learning: {first:.2f} -> {last:.2f}"
 
 
 def test_straggler_detection():
