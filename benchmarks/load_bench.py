@@ -10,19 +10,31 @@ makes the fused unit serve many at once.
 Closed loop (default): C client threads, each with its own KV cache, decode
 as fast as responses return for --steps iterations.
 Open loop (--rate R): a single generator submits `invoke_async` arrivals at
-R req/s (uniform spacing) for --duration seconds and waits for completions —
-latency then includes queueing behind the instance, the classic
-open-vs-closed distinction.
+R req/s for --duration seconds and waits for completions — latency then
+includes queueing behind the instance, the classic open-vs-closed
+distinction. --pattern shapes the arrivals: `uniform` spacing, `bursty`
+(back-to-back groups of --burst with --intra-gap-ms inside a burst), or
+`trickle` (synonym for uniform at a rate whose gap exceeds any batching
+window — the worst case for a static window).
+
+--adaptive runs the feedback-window comparison: the bursty and trickle
+scenarios each execute twice — static window (--max-delay-ms, the PR 1
+behavior) vs adaptive (same initial window, per-key retuning) — and the
+occupancy / tail-latency deltas are printed. --smoke is the CI gate: a tiny
+closed-loop run that fails loudly when coalescing stops working.
 
 Usage:
     PYTHONPATH=src python benchmarks/load_bench.py --concurrency 8
     PYTHONPATH=src python benchmarks/load_bench.py --concurrency 8 --backend orchestrated
     PYTHONPATH=src python benchmarks/load_bench.py --rate 200 --duration 5 --modes fused-batched
+    PYTHONPATH=src python benchmarks/load_bench.py --adaptive
+    PYTHONPATH=src python benchmarks/load_bench.py --smoke
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import threading
 import time
 
@@ -40,12 +52,13 @@ BACKENDS = {"tinyjax": TinyJaxBackend, "orchestrated": OrchestratedBackend}
 MODES = ("unfused-serial", "unfused-batched", "fused-serial", "fused-batched")
 
 
-def build_engine(args, fused: bool):
+def build_engine(args, fused: bool, adaptive: bool = False):
     cfg = reduced_config(get_arch(args.arch))
     model = build_model(cfg)
     policy = FusionPolicy(min_observations=2, merge_cost_s=0.0, enabled=fused)
     platform = BACKENDS[args.backend](
-        policy, max_batch=args.max_batch or args.concurrency, max_delay_ms=args.max_delay_ms
+        policy, max_batch=args.max_batch or args.concurrency, max_delay_ms=args.max_delay_ms,
+        adaptive=adaptive,
     )
     engine = ServingEngine(model, platform, max_len=args.max_len)
     return engine, platform
@@ -135,18 +148,41 @@ def run_closed_loop(args, mode: str) -> dict:
         platform.shutdown()
 
 
-def run_open_loop(args, mode: str) -> dict:
+def arrival_offsets(args):
+    """Submit offsets (seconds from start) for one open-loop run. `uniform`
+    and `trickle` space arrivals at 1/rate; `bursty` fires back-to-back
+    groups of --burst (spaced --intra-gap-ms inside the group) with the
+    same long-run rate."""
+    if args.pattern == "bursty":
+        burst = max(1, args.burst)
+        interval = burst / args.rate
+        gap = args.intra_gap_ms / 1e3
+        t = 0.0
+        while t < args.duration:
+            for j in range(burst):
+                yield t + j * gap
+            t += interval
+    else:
+        interval = 1.0 / args.rate
+        t = 0.0
+        while t < args.duration:
+            yield t
+            t += interval
+
+
+def run_open_loop(args, mode: str, adaptive: bool = False) -> dict:
     fused = mode.startswith("fused")
-    engine, platform = build_engine(args, fused)
+    engine, platform = build_engine(args, fused, adaptive=adaptive)
     try:
         warm(engine)
         clients = [Client(engine, i, args.prompt_len) for i in range(args.concurrency)]
-        # warm the batch buckets so open-loop timing excludes compiles
+        # warm the batch buckets so open-loop timing excludes compiles, then
+        # drop the warmup from the stats and the controllers' learned state —
+        # the measured occupancy/tails/windows must reflect measured traffic
         futs = [engine.decode_step_async(c.tokens, c.cur_len, c.caches) for c in clients]
         for f in futs:
             f.result()
-        interval = 1.0 / args.rate
-        deadline = time.perf_counter() + args.duration
+        platform.scheduler.reset_stats()
         pending = []
         lats: list[float] = []
         lats_lock = threading.Lock()
@@ -160,17 +196,12 @@ def run_open_loop(args, mode: str) -> dict:
                     lats.append(dt)
             return cb
 
-        i = 0
-        t_next = time.perf_counter()
         t0 = time.perf_counter()
-        while time.perf_counter() < deadline:
+        for i, off in enumerate(arrival_offsets(args)):
             now = time.perf_counter()
-            if now < t_next:
-                time.sleep(min(t_next - now, interval))
-                continue
-            t_next += interval
+            if now < t0 + off:
+                time.sleep(t0 + off - now)
             c = clients[i % len(clients)]
-            i += 1
             # open loop: fire-and-record, do not wait for the response
             fut = engine.decode_step_async(c.tokens, c.cur_len, c.caches)
             fut.add_done_callback(stamp_completion(time.perf_counter()))
@@ -178,18 +209,95 @@ def run_open_loop(args, mode: str) -> dict:
         for fut in pending:
             fut.result()
         elapsed = time.perf_counter() - t0
+        # fut.result() returns before that future's done-callbacks are
+        # guaranteed to have run — join on the counter so the percentile
+        # snapshot isn't short a few tail samples
+        join_deadline = time.perf_counter() + 5.0
+        while time.perf_counter() < join_deadline:
+            with lats_lock:
+                if len(lats) >= len(pending):
+                    break
+            time.sleep(0.001)
+        sched = platform.scheduler.stats()
+        max_batch = platform.scheduler.max_batch
         return {
             "mode": mode,
             "loop": "open",
+            "pattern": args.pattern,
+            "window": "adaptive" if adaptive else "static",
             "offered_rps": args.rate,
             "requests": len(pending),
             "elapsed_s": round(elapsed, 3),
             "throughput_rps": round(len(pending) / elapsed, 2),
             **{k: round(v, 3) for k, v in percentiles_ms(lats).items()},
-            "scheduler": platform.scheduler.stats(),
+            "mean_batch": round(sched["mean_batch"], 3),
+            "occupancy": round(sched["mean_batch"] / max_batch, 3),
+            "scheduler": sched,
         }
     finally:
         platform.shutdown()
+
+
+def run_adaptive_compare(args) -> dict:
+    """The feedback-window demonstration: bursty and trickle arrivals, each
+    served with the static --max-delay-ms window and with adaptive retuning
+    seeded at the same value. The win a single static window cannot have
+    both ways: on bursts the adaptive window grows (occupancy up at equal or
+    better tails), on trickle it decays to ~0 (no queueing tax on lone
+    requests)."""
+    import copy
+
+    scenarios = {
+        "bursty": dict(pattern="bursty", rate=args.rate, burst=args.burst,
+                       intra_gap_ms=args.intra_gap_ms),
+        "trickle": dict(pattern="trickle", rate=args.trickle_rate, burst=1,
+                        intra_gap_ms=0.0),
+    }
+    out: dict = {}
+    for scen, overrides in scenarios.items():
+        for label, adaptive in (("static", False), ("adaptive", True)):
+            a = copy.copy(args)
+            for k, v in overrides.items():
+                setattr(a, k, v)
+            res = run_open_loop(a, "fused-batched", adaptive=adaptive)
+            out[f"{scen}/{label}"] = res
+            print(f"[{scen:>7}/{label:<8}] occupancy {res['occupancy']:.2f} "
+                  f"(mean batch {res['mean_batch']:.2f})   p50 {res['p50_ms']:7.1f} ms   "
+                  f"p95 {res['p95_ms']:7.1f} ms   ({res['requests']} reqs)")
+    b_s, b_a = out["bursty/static"], out["bursty/adaptive"]
+    t_s, t_a = out["trickle/static"], out["trickle/adaptive"]
+    summary = {
+        "bursty_occupancy_static": b_s["occupancy"],
+        "bursty_occupancy_adaptive": b_a["occupancy"],
+        "bursty_p95_static_ms": b_s["p95_ms"],
+        "bursty_p95_adaptive_ms": b_a["p95_ms"],
+        "trickle_p50_static_ms": t_s["p50_ms"],
+        "trickle_p50_adaptive_ms": t_a["p50_ms"],
+        "trickle_added_ms": round(t_a["p50_ms"] - max(t_s["p50_ms"] - args.max_delay_ms, 0.0), 3),
+    }
+    print(f"\nbursty : occupancy {b_s['occupancy']:.2f} -> {b_a['occupancy']:.2f}   "
+          f"p95 {b_s['p95_ms']:.1f} -> {b_a['p95_ms']:.1f} ms")
+    print(f"trickle: p50 {t_s['p50_ms']:.1f} -> {t_a['p50_ms']:.1f} ms "
+          f"(static window was {args.max_delay_ms:.1f} ms; adaptive decays it to ~0)")
+    out["summary"] = summary
+    return out
+
+
+def run_smoke(args) -> int:
+    """CI gate: a few seconds of closed-loop traffic on the tiny model. Fails
+    (exit 1) when coalescing stops happening or throughput collapses to
+    zero — scheduler regressions then fail the workflow, not just tests."""
+    args.concurrency = min(args.concurrency, 4)
+    args.steps, args.warmup_steps = 10, 3
+    args.prompt_len, args.max_len = 4, 48
+    res = run_closed_loop(args, "fused-batched")
+    sched = res["scheduler"] or {}
+    print(f"[smoke] {res['throughput_rps']:.1f} req/s, p95 {res['p95_ms']:.1f} ms, "
+          f"mean batch {sched.get('mean_batch', 0):.2f} over {sched.get('batches', 0)} batches")
+    ok = res["throughput_rps"] > 0 and sched.get("mean_batch", 0.0) > 1.05
+    if not ok:
+        print("[smoke] FAIL: scheduler no longer coalesces concurrent traffic")
+    return 0 if ok else 1
 
 
 def main():
@@ -205,9 +313,36 @@ def main():
     ap.add_argument("--max-delay-ms", type=float, default=4.0, help="micro-batch window")
     ap.add_argument("--rate", type=float, default=0.0, help=">0 switches to open loop at this req/s")
     ap.add_argument("--duration", type=float, default=5.0, help="open-loop run time (s)")
+    ap.add_argument("--pattern", default="uniform", choices=("uniform", "bursty", "trickle"),
+                    help="open-loop arrival pattern")
+    ap.add_argument("--burst", type=int, default=8, help="bursty: arrivals per burst")
+    ap.add_argument("--intra-gap-ms", type=float, default=1.0, help="bursty: spacing inside a burst")
+    ap.add_argument("--trickle-rate", type=float, default=15.0,
+                    help="--adaptive: req/s of the trickle scenario (gap must exceed any window)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="run the static-vs-adaptive window comparison on bursty + trickle arrivals")
+    ap.add_argument("--smoke", action="store_true", help="tiny CI sanity run (exit 1 on regression)")
     ap.add_argument("--modes", nargs="*", default=["fused-serial", "fused-batched"], choices=MODES)
     ap.add_argument("--json", action="store_true", help="emit machine-readable results")
     args = ap.parse_args()
+
+    if args.smoke:
+        sys.exit(run_smoke(args))
+    if args.adaptive:
+        if args.rate <= 0:
+            # bursts of --burst whose span outlives the static window: the
+            # static window fragments each burst into several executions,
+            # the adaptive one grows to pack it whole — and because each
+            # burst drains before the next, the adaptive wait is bounded by
+            # the burst span, never by queueing behind a knife-edge load
+            args.rate = 160.0
+        out = run_adaptive_compare(args)
+        if args.json:
+            for r in out.values():
+                if isinstance(r, dict):
+                    r.pop("scheduler", None)
+            print(json.dumps(out, indent=2))
+        return
 
     results = []
     for mode in args.modes:

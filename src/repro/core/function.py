@@ -291,6 +291,14 @@ class FunctionInstance:
                 and key[2] == skey and key[3] >= k
             ]
         bucket = min(fitting) if fitting else next_batch_bucket(k, max_bucket)
+        if bucket < k:
+            # Non-power-of-two max_bucket clamps below k (e.g. 6 requests,
+            # cap 6 -> bucket 4): run power-of-two chunks instead of minting
+            # a never-reused bucket-6 program.
+            out: list = []
+            for i in range(0, k, bucket):
+                out.extend(self.execute_batch(entry, args_list[i : i + bucket], max_bucket))
+            return out
         ce = self._get_batched(entry, args_list[0], bucket)
         if ce is None:
             return [self.execute(entry, a) for a in args_list]

@@ -18,11 +18,14 @@ The handler also:
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 import time
 from typing import Any, Callable
 
 from repro.core.billing import BillingMeter, InvocationRecord
+
+_RECENT_WAITS = 64  # bounded per-edge wait history for the tail estimate
 
 
 @dataclasses.dataclass
@@ -31,9 +34,25 @@ class EdgeStats:
     async_count: int = 0
     total_wait_s: float = 0.0
 
+    def __post_init__(self):
+        # Deliberately NOT a dataclass field: asdict()/replace() snapshots
+        # stay plain scalars (JSON-serializable stats, cheap copies).
+        self.recent_waits: list[float] = []
+
     @property
     def mean_wait_s(self) -> float:
         return self.total_wait_s / self.sync_count if self.sync_count else 0.0
+
+    @property
+    def p95_wait_s(self) -> float:
+        """Nearest-rank p95 over the recent sync waits — the fusion policy's
+        promote rule keys on tail blocking, which a mean over a mostly-fast
+        edge hides. Falls back to the mean when no history is retained."""
+        if not self.recent_waits:
+            return self.mean_wait_s
+        ordered = sorted(self.recent_waits)
+        rank = min(len(ordered), max(1, math.ceil(0.95 * len(ordered))))
+        return ordered[rank - 1]
 
 
 @dataclasses.dataclass
@@ -119,6 +138,9 @@ class FunctionHandler:
             if sync:
                 st.sync_count += 1
                 st.total_wait_s += wait_s
+                st.recent_waits.append(wait_s)
+                if len(st.recent_waits) > _RECENT_WAITS:
+                    del st.recent_waits[0]
                 notify = True
             else:
                 st.async_count += 1

@@ -84,9 +84,22 @@ class Merger:
         stats = self.platform.handler.edges.get((caller, callee))
         if stats is None:
             return
+        with self._lock:
+            # before the (costlier) policy decision: quarantined or already
+            # in-flight edges are re-submitted on every sync observation of
+            # a hot chain — they must not pay for scheduler snapshots
+            if (caller, callee) in self._inflight or (caller, callee) in self._quarantined:
+                return
         spec_a = self.platform.spec_of(caller)
         spec_b = self.platform.spec_of(callee)
-        decision = self.policy.decide(caller, callee, stats, spec_a.trust_domain, spec_b.trust_domain)
+        # Live scheduler feedback (queue depth, occupancy, tail latency)
+        # modulates the decision: saturated chains wait, cold slow ones jump.
+        # Passed lazily — decide only snapshots it past its cheap early-outs.
+        signals_fn = getattr(self.platform, "scheduler_signals", None)
+        signals = (lambda: signals_fn((caller, callee))) if signals_fn is not None else None
+        decision = self.policy.decide(
+            caller, callee, stats, spec_a.trust_domain, spec_b.trust_domain, signals=signals
+        )
         if not decision.fuse:
             return
         with self._lock:

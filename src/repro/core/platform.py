@@ -51,7 +51,8 @@ class ProvusePlatform:
 
     def __init__(self, policy: FusionPolicy | None = None, *, async_build: bool = False,
                  health_rtol: float = 2e-2, health_atol: float = 1e-2,
-                 max_batch: int = 8, max_delay_ms: float = 2.0):
+                 max_batch: int = 8, max_delay_ms: float = 2.0,
+                 adaptive: bool = False, adaptive_config=None):
         self.registry = RoutingTable()
         self.meter = BillingMeter()
         self.policy = policy or FusionPolicy()
@@ -60,6 +61,7 @@ class ProvusePlatform:
                              health_rtol=health_rtol, health_atol=health_atol)
         self.scheduler = RequestScheduler(
             self._dispatch_batch, max_batch=max_batch, max_delay_ms=max_delay_ms,
+            adaptive=adaptive, adaptive_config=adaptive_config,
             on_request_done=lambda name, lat_s, k: self.meter.observe_latency(name, lat_s),
         )
         self._specs: dict[str, FunctionSpec] = {}
@@ -206,11 +208,17 @@ class ProvusePlatform:
         self.meter.observe_latency(name, time.perf_counter() - t0)
         return out
 
-    def invoke_async(self, name: str, *args) -> Future:
+    def invoke_async(self, name: str, *args, priority: int = 0) -> Future:
         """External invocation through the request scheduler. Returns a
-        Future; compatible concurrent requests may execute as one batch."""
+        Future; compatible concurrent requests may execute as one batch.
+        ``priority=PRIORITY_HIGH`` requests jump queued normal traffic and
+        close an open batching window early (SLO admission)."""
         self.handler.record_canary(name, args)
-        return self.scheduler.submit(name, args)
+        return self.scheduler.submit(name, args, priority=priority)
+
+    def scheduler_signals(self, names):
+        """Live scheduler feedback for the fusion policy (Merger.submit)."""
+        return self.scheduler.signals_for(names)
 
     def _dispatch_batch(self, name: str, args_list: list[tuple]) -> list:
         """Scheduler callback: execute one coalesced batch."""

@@ -15,6 +15,9 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+from typing import Callable
+
+from repro.scheduler.adaptive import SchedulerSignals
 
 
 class UnionFind:
@@ -55,12 +58,30 @@ class FusionPolicy:
     merge_cost_s: assumed cost of one merge (retrace+recompile+healthcheck);
     measured values are fed back by the Merger after each merge.
     amortization_horizon: invocations over which the merge must pay off.
+
+    Scheduler-feedback knobs (used when `decide` receives live
+    :class:`SchedulerSignals` from the request scheduler):
+    saturation_occupancy/saturation_depth: a chain whose batches already
+    run at least this full with at least this many requests queued is
+    *saturated* — micro-batching is absorbing the load, and the merge's
+    recompile stall lands exactly when clients are waiting, so the
+    projected saving must beat ``saturation_penalty x`` the merge cost.
+    promote_wait_s: a *cold* (unsaturated) chain whose per-edge sync-wait
+    tail (p95) reaches this long gets promoted — half the observation floor
+    and ``promote_discount x`` the merge cost — because per-request blocking
+    dominates and fusion removes it directly. The chain's end-to-end p95
+    gates this: blocking must be a meaningful share of observed latency.
     """
 
     min_observations: int = 3
     amortization_horizon: int = 500
     merge_cost_s: float = 2.0
     enabled: bool = True
+    saturation_occupancy: float = 0.85
+    saturation_depth: int = 1
+    saturation_penalty: float = 4.0
+    promote_wait_s: float = 0.05
+    promote_discount: float = 0.5
 
     def __post_init__(self):
         self.groups = UnionFind()
@@ -68,10 +89,24 @@ class FusionPolicy:
         self._fused_edges: set[tuple[str, str]] = set()
 
     def feedback_merge_cost(self, seconds: float) -> None:
-        # exponential moving average of observed merge costs
-        self.merge_cost_s = 0.5 * self.merge_cost_s + 0.5 * seconds
+        # exponential moving average of observed merge costs; `decide` reads
+        # merge_cost_s under the lock, so the read-modify-write takes it too
+        with self._lock:
+            self.merge_cost_s = 0.5 * self.merge_cost_s + 0.5 * seconds
 
-    def decide(self, caller: str, callee: str, stats, trust_a: str, trust_b: str) -> FusionDecision:
+    def decide(
+        self,
+        caller: str,
+        callee: str,
+        stats,
+        trust_a: str,
+        trust_b: str,
+        signals: SchedulerSignals | Callable[[], SchedulerSignals] | None = None,
+    ) -> FusionDecision:
+        """``signals``: a :class:`SchedulerSignals`, or a zero-arg callable
+        returning one — resolved only past the cheap early-outs so hot
+        unfusable edges (observed on every sync call) don't pay for a
+        scheduler snapshot per invocation."""
         with self._lock:
             if not self.enabled:
                 return FusionDecision(False, "fusion disabled")
@@ -81,16 +116,45 @@ class FusionPolicy:
                 return FusionDecision(False, f"trust domains differ ({trust_a} vs {trust_b})")
             if self.groups.find(caller) == self.groups.find(callee):
                 return FusionDecision(False, "already in same fusion group")
-            if stats.sync_count < self.min_observations:
+            if stats.sync_count < max(1, self.min_observations // 2):
+                # below even the promoted floor: no signal can change this
                 return FusionDecision(False, f"only {stats.sync_count} observations")
+            min_obs = self.min_observations
+            required_cost = self.merge_cost_s
+            note = ""
+            if callable(signals):
+                signals = signals()
+            if signals is not None:
+                saturated = (
+                    signals.mean_occupancy >= self.saturation_occupancy
+                    and signals.queue_depth >= self.saturation_depth
+                )
+                # Promotion keys on the edge's own SYNC-WAIT tail — the time
+                # fusion actually removes. End-to-end p95 (queueing + compute)
+                # only gates it: a chain whose latency is dominated by slow
+                # compute, not blocking, gains nothing from an early merge.
+                edge_wait_s = getattr(stats, "p95_wait_s", stats.mean_wait_s)
+                blocking_matters = (
+                    signals.p95_ms == 0.0 or edge_wait_s >= 0.2 * signals.p95_ms / 1e3
+                )
+                if saturated:
+                    required_cost *= self.saturation_penalty
+                    note = " [deprioritized: chain saturated]"
+                elif edge_wait_s >= self.promote_wait_s and blocking_matters:
+                    required_cost *= self.promote_discount
+                    min_obs = max(1, min_obs // 2)
+                    note = " [promoted: cold chain, long sync waits]"
+            if stats.sync_count < min_obs:
+                return FusionDecision(False, f"only {stats.sync_count} observations{note}")
             projected_saving = stats.mean_wait_s * self.amortization_horizon
-            if projected_saving < self.merge_cost_s:
+            if projected_saving < required_cost:
                 return FusionDecision(
                     False,
-                    f"not amortizable: saving {projected_saving:.3f}s < cost {self.merge_cost_s:.3f}s",
+                    f"not amortizable: saving {projected_saving:.3f}s "
+                    f"< cost {required_cost:.3f}s{note}",
                 )
             group = self.groups.group(caller) | self.groups.group(callee) | {caller, callee}
-            return FusionDecision(True, "sync edge hot + amortizable", frozenset(group))
+            return FusionDecision(True, f"sync edge hot + amortizable{note}", frozenset(group))
 
     def commit(self, caller: str, callee: str) -> frozenset[str]:
         with self._lock:

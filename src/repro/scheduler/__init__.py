@@ -2,8 +2,17 @@
 
 The paper measures one request at a time; this package is the platform layer
 that turns *concurrent* external invocations into batched XLA executions
-(ProFaaStinate-style delayed grouping in front of Provuse's fused units).
+(ProFaaStinate-style delayed grouping in front of Provuse's fused units),
+with per-key feedback-retuned batching windows (Fusionize++-style iteration)
+and two-level SLO-priority admission.
 """
+from repro.scheduler.adaptive import (  # noqa: F401
+    PRIORITY_HIGH,
+    PRIORITY_NORMAL,
+    AdaptiveConfig,
+    AdaptiveWindow,
+    SchedulerSignals,
+)
 from repro.scheduler.batching import (  # noqa: F401
     next_batch_bucket,
     request_key,

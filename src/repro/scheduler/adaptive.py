@@ -1,0 +1,177 @@
+"""Feedback-driven micro-batch window control (Fusionize++-style iteration).
+
+The static ``max_delay_ms`` knob from PR 1 forces one trade-off on every
+traffic shape: a long window taxes trickling clients with queueing delay
+they buy nothing for, a short window lets bursts slip through in fragments.
+:class:`AdaptiveWindow` closes the loop instead — each admission key owns a
+controller that watches what its batches actually looked like (EWMA of
+inter-arrival gaps and batch occupancy) and retunes the key's window after
+every batch:
+
+* **serial trickle** — the smoothed gap exceeds even the largest allowed
+  window, so waiting cannot catch a second request: the window decays
+  multiplicatively to ``min_delay_s`` (~0 added latency, greedy draining);
+* **dense arrivals, low occupancy** — batches close before enough requests
+  arrive: the window grows toward the gap-derived target
+  ``(target_occupancy * max_batch - 1) * gap``, bounded by ``max_delay_s``;
+* **batches close full** — the gap estimate is tiny, so the same target
+  shrinks the window back: a saturated key never holds requests longer
+  than it takes to fill a batch.
+
+A relative hysteresis dead-band plus bounded multiplicative steps keep the
+window from flapping batch-to-batch on noisy arrivals.
+
+:class:`SchedulerSignals` is the packet of live scheduler state (queue
+depth, occupancy, per-function tail latency) the platform feeds into
+``FusionPolicy.decide`` — the paper's sync-edge counts decide *what* could
+fuse; these signals decide *when* a merge is worth the control-plane stall.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+#: Priority levels for SLO-aware admission. A request submitted at
+#: ``PRIORITY_HIGH`` is served ahead of queued normal traffic and closes the
+#: current micro-batch window early instead of waiting it out.
+PRIORITY_NORMAL = 0
+PRIORITY_HIGH = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerSignals:
+    """Live scheduler state for one (caller, callee) chain, consumed by the
+    fusion policy: hot-but-saturated chains deprioritize merges (the stall
+    hurts most exactly when batching is already absorbing the load), cold
+    chains with long waits promote them."""
+
+    queue_depth: int = 0        # pending requests across the chain's keys
+    mean_occupancy: float = 0.0  # mean batch size / max_batch, 0..1
+    p95_ms: float = 0.0          # worst per-function p95 latency in the chain
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveConfig:
+    """Knobs for the per-key window controller.
+
+    target_occupancy: fill fraction the controller steers batches toward;
+        the window target is the time for that many arrivals at the
+        smoothed rate.
+    min_delay_s / max_delay_s: hard bounds of the retuned window.
+    alpha: EWMA smoothing for arrival gaps and occupancy.
+    grow / shrink: bounded multiplicative step per retune.
+    hysteresis: relative dead-band — desired values within ±hysteresis of
+        the current window leave it untouched (no per-batch flapping).
+    floor_s: windows shrinking below this snap to min_delay_s (a
+        sub-floor window buys nothing but timer churn).
+    """
+
+    target_occupancy: float = 0.75
+    min_delay_s: float = 0.0
+    max_delay_s: float = 0.020
+    alpha: float = 0.3
+    grow: float = 1.6
+    shrink: float = 0.6
+    hysteresis: float = 0.2
+    floor_s: float = 0.00025
+
+
+class AdaptiveWindow:
+    """One admission key's window controller. Single-writer: only the key's
+    dispatcher thread calls :meth:`observe_batch`; ``snapshot()`` readers see
+    torn-free floats under the GIL."""
+
+    def __init__(self, max_batch: int, initial_delay_s: float, config: AdaptiveConfig | None = None):
+        self.cfg = config or AdaptiveConfig()
+        self.max_batch = max(1, int(max_batch))
+        self.delay_s = min(max(float(initial_delay_s), self.cfg.min_delay_s), self.cfg.max_delay_s)
+        self.retunes = 0
+        self._ewma_gap_s: float | None = None
+        self._ewma_intra_s: float | None = None
+        self._ewma_occupancy: float | None = None
+        self._last_arrival_t: float | None = None
+
+    def reset(self, initial_delay_s: float | None = None) -> None:
+        """Forget learned traffic state (benchmark warmup isolation);
+        optionally re-seed the window."""
+        if initial_delay_s is not None:
+            self.delay_s = min(max(float(initial_delay_s), self.cfg.min_delay_s), self.cfg.max_delay_s)
+        self._ewma_gap_s = None
+        self._ewma_intra_s = None
+        self._ewma_occupancy = None
+        self._last_arrival_t = None
+
+    def observe_batch(self, arrival_ts: list[float], closed_full: bool) -> float:
+        """Feed one closed batch's arrival timestamps; returns the retuned
+        window (seconds). Gaps are measured across batch boundaries too, so
+        a string of singleton batches still yields a rate estimate."""
+        a = self.cfg.alpha
+        ts = sorted(arrival_ts)
+        gaps = []
+        if self._last_arrival_t is not None and ts:
+            gaps.append(max(0.0, ts[0] - self._last_arrival_t))
+        gaps.extend(t1 - t0 for t0, t1 in zip(ts, ts[1:]))
+        if ts:
+            self._last_arrival_t = ts[-1]
+        for g in gaps:
+            self._ewma_gap_s = g if self._ewma_gap_s is None else (1 - a) * self._ewma_gap_s + a * g
+            if g < self.cfg.max_delay_s:
+                # "catchable" gaps only: the intra-burst spacing estimate that
+                # drives idle_close_s — burst-boundary gaps would inflate it
+                self._ewma_intra_s = (
+                    g if self._ewma_intra_s is None else (1 - a) * self._ewma_intra_s + a * g
+                )
+        occ = len(ts) / self.max_batch
+        self._ewma_occupancy = occ if self._ewma_occupancy is None else (1 - a) * self._ewma_occupancy + a * occ
+        new = self._retune(closed_full)
+        if new != self.delay_s:
+            self.retunes += 1
+            self.delay_s = new
+        return self.delay_s
+
+    def _retune(self, closed_full: bool) -> float:
+        cfg, cur = self.cfg, self.delay_s
+        gap = self._ewma_gap_s
+        if gap is None:
+            return cur
+        if gap >= cfg.max_delay_s:
+            # trickle: even the longest window can't catch one more arrival
+            desired = cfg.min_delay_s
+        else:
+            # time for (target_occupancy * max_batch) arrivals; the first
+            # request opens the window, so one fewer gap
+            need = max(0.0, cfg.target_occupancy * self.max_batch - 1.0)
+            desired = min(cfg.max_delay_s, max(cfg.min_delay_s, need * gap))
+            if (
+                desired > cur
+                and self._ewma_occupancy is not None
+                and self._ewma_occupancy >= cfg.target_occupancy
+            ):
+                desired = cur  # batches already fill to target: growth buys nothing
+        step_floor = cfg.max_delay_s / 32.0
+        if desired > cur * (1.0 + cfg.hysteresis):
+            return min(desired, max(cur * cfg.grow, step_floor))
+        if desired < cur * (1.0 - cfg.hysteresis) or (desired < cur and closed_full):
+            new = max(desired, cur * cfg.shrink)
+            return cfg.min_delay_s if new < cfg.floor_s else new
+        return cur
+
+    def idle_close_s(self) -> float | None:
+        """Early-close cutoff for an OPEN window: when no arrival lands
+        within ~3 smoothed intra-burst gaps, the burst this window was
+        grown for is over — holding the collected requests for the rest of
+        the window is pure convoy tax. None until a spacing estimate exists
+        (then the window alone governs)."""
+        if self._ewma_intra_s is None:
+            return None
+        return min(self.cfg.max_delay_s, max(3.0 * self._ewma_intra_s, 1e-3))
+
+    def snapshot(self) -> dict:
+        idle = self.idle_close_s()
+        return {
+            "window_ms": self.delay_s * 1e3,
+            "ewma_gap_ms": (self._ewma_gap_s or 0.0) * 1e3,
+            "ewma_occupancy": self._ewma_occupancy or 0.0,
+            "idle_close_ms": (idle or 0.0) * 1e3,
+            "retunes": self.retunes,
+        }

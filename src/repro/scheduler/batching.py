@@ -39,11 +39,24 @@ def split_results(out, k: int) -> list:
     return [jax.tree.map(lambda x: x[i], out) for i in range(k)]
 
 
+def largest_pow2_le(n: int) -> int:
+    """Largest power of two <= n (n floored at 1). The shared clamp behind
+    the bucket invariant: the scheduler's max_batch and the bucket cap must
+    agree, or admitted batches outgrow the compiled bucket set."""
+    return 1 << (max(1, int(n)).bit_length() - 1)
+
+
 def next_batch_bucket(k: int, max_batch: int | None = None) -> int:
     """Round a batch size up to the next power-of-two bucket (optionally
     capped at max_batch) so an instance compiles O(log max_batch) batched
-    programs instead of one per observed size; short batches pad up."""
+    programs instead of one per observed size; short batches pad up.
+
+    The cap itself clamps to the largest power-of-two <= max_batch: a
+    non-power-of-two cap (e.g. 6) must not mint a one-off bucket-6 program
+    that no other batch size reuses — an extra mid-traffic compile for zero
+    reuse. Batches larger than the clamped cap run as bucket-sized chunks
+    (see FunctionInstance.execute_batch)."""
     b = 1 if k <= 1 else 1 << (k - 1).bit_length()
     if max_batch is not None:
-        b = min(b, max(1, max_batch))
+        b = min(b, largest_pow2_le(max_batch))
     return b

@@ -9,6 +9,13 @@ is already queued rides along, nothing waits — batching then costs zero added
 latency under bursty load and the scheduler behaves like serial dispatch when
 requests trickle in one at a time.
 
+Admission is a two-level priority queue: requests submitted at
+``PRIORITY_HIGH`` are popped ahead of queued normal traffic, and their
+arrival *closes the window early* — an SLO-bound request never waits out a
+batching delay tuned for throughput. With an :class:`AdaptiveWindow`
+attached, the dispatcher feeds every closed batch back to the controller and
+picks up the retuned ``max_delay_s`` for the next window.
+
 A dispatcher that sees no traffic for ``idle_timeout_s`` offers itself back
 via ``on_idle`` (the scheduler drops the queue under its lock unless a
 request raced in) and exits — shape-diverse workloads don't leak threads.
@@ -16,11 +23,14 @@ request raced in) and exits — shape-diverse workloads don't leak threads.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import queue
 import threading
 import time
 from concurrent.futures import Future
 from typing import Callable
+
+from repro.scheduler.adaptive import AdaptiveWindow
 
 
 @dataclasses.dataclass
@@ -28,9 +38,13 @@ class PendingRequest:
     args: tuple
     future: Future
     t_enqueue: float
+    priority: int = 0
 
 
 _STOP = object()
+#: Sort key priority for the stop sentinel: below every real request, so a
+#: shutdown drains already-admitted traffic before the dispatcher exits.
+_STOP_PRIORITY = -1
 
 
 class AdmissionQueue:
@@ -46,6 +60,7 @@ class AdmissionQueue:
         max_batch: int,
         max_delay_s: float,
         idle_timeout_s: float = 60.0,
+        adaptive: AdaptiveWindow | None = None,
         on_batch_done: Callable[[str, list[PendingRequest], float], None] | None = None,
         on_idle: Callable[["AdmissionQueue"], bool] | None = None,
     ):
@@ -55,47 +70,72 @@ class AdmissionQueue:
         self.max_batch = max(1, int(max_batch))
         self.max_delay_s = max(0.0, float(max_delay_s))
         self.idle_timeout_s = idle_timeout_s
+        self.adaptive = adaptive
         self._on_batch_done = on_batch_done
         self._on_idle = on_idle
-        self._q: "queue.Queue" = queue.Queue()
+        # Two-level admission: entries order by (-priority, seq) — high
+        # priority first, FIFO within a level. The seq tiebreak is unique, so
+        # comparison never reaches the (uncomparable) PendingRequest payload.
+        self._q: "queue.PriorityQueue" = queue.PriorityQueue()
+        self._seq = itertools.count()
         self.thread = threading.Thread(target=self._loop, daemon=True, name=f"coalesce-{name}")
         self.thread.start()
 
     def put(self, req: PendingRequest) -> None:
-        self._q.put(req)
+        self._q.put((-req.priority, next(self._seq), req))
 
     def empty(self) -> bool:
         return self._q.empty()
 
+    def depth(self) -> int:
+        return self._q.qsize()
+
     def stop(self) -> None:
-        self._q.put(_STOP)
+        self._q.put((-_STOP_PRIORITY, next(self._seq), _STOP))
 
     # ------------------------------------------------------------- internals
 
     def _collect(self, first: PendingRequest) -> tuple[list[PendingRequest], bool]:
-        """Admit up to max_batch requests within max_delay_s of the first."""
+        """Admit up to max_batch requests within max_delay_s of the first.
+        A high-priority request — leading or admitted mid-window — closes
+        the window immediately: the already-collected batch dispatches now."""
         batch = [first]
-        deadline = time.perf_counter() + self.max_delay_s
+        delay = 0.0 if first.priority > 0 else self.max_delay_s
+        deadline = time.perf_counter() + delay
         stopped = False
         while len(batch) < self.max_batch:
             remaining = deadline - time.perf_counter()
+            timeout = remaining
+            if self.adaptive is not None and timeout > 0:
+                # idle-close: a grown window is for catching a burst in
+                # flight; once arrivals pause longer than the smoothed
+                # intra-burst spacing allows, waiting out the rest of the
+                # window just convoys the collected requests
+                idle_cut = self.adaptive.idle_close_s()
+                if idle_cut is not None and idle_cut < timeout:
+                    timeout = idle_cut
             try:
-                if remaining > 0:
-                    item = self._q.get(timeout=remaining)
+                if timeout > 0:
+                    item = self._q.get(timeout=timeout)[2]
                 else:
-                    item = self._q.get_nowait()  # window closed: drain only
+                    item = self._q.get_nowait()[2]  # window closed: drain only
             except queue.Empty:
-                break
+                break  # window expired or burst went quiet: serve the batch
             if item is _STOP:
                 stopped = True
                 break
             batch.append(item)
+            if item.priority > 0:
+                # SLO early close: stop WAITING. The deadline collapses to
+                # now, so already-queued requests still drain in (free
+                # batching) but nothing holds the urgent request further.
+                deadline = time.perf_counter()
         return batch, stopped
 
     def _loop(self) -> None:
         while True:
             try:
-                item = self._q.get(timeout=self.idle_timeout_s)
+                item = self._q.get(timeout=self.idle_timeout_s)[2]
             except queue.Empty:
                 # idle: ask the scheduler to retire us; a concurrent submit
                 # makes it refuse, and we keep serving
@@ -105,6 +145,10 @@ class AdmissionQueue:
             if item is _STOP:
                 return
             batch, stopped = self._collect(item)
+            if self.adaptive is not None:
+                self.max_delay_s = self.adaptive.observe_batch(
+                    [r.t_enqueue for r in batch], len(batch) >= self.max_batch
+                )
             self._run_batch(batch)
             if stopped:
                 return
@@ -122,10 +166,15 @@ class AdmissionQueue:
                 _resolve(r.future, exc=exc)
         else:
             t_done = time.perf_counter()
-            if self._on_batch_done is not None:
-                self._on_batch_done(self.name, batch, t_done)
+            # Futures FIRST, metrics second: a raising metrics sink must
+            # never strand a batch of clients blocked on unresolved futures.
             for r, out in zip(batch, results):
                 _resolve(r.future, result=out)
+            if self._on_batch_done is not None:
+                try:
+                    self._on_batch_done(self.name, batch, t_done)
+                except Exception:  # noqa: BLE001 — observability is best-effort
+                    pass
 
 
 def _resolve(future: Future, *, result=None, exc=None) -> None:

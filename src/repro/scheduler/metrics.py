@@ -7,20 +7,24 @@ usable standalone without a platform).
 from __future__ import annotations
 
 import collections
+import math
 import threading
 import time
 
 
 def percentiles_ms(samples_s, points=(50, 95, 99)) -> dict:
-    """p50/p95/p99 (milliseconds) via nearest-rank on a sorted copy."""
+    """p50/p95/p99 (milliseconds) via the textbook nearest-rank definition:
+    rank = ceil(p/100 * n), 1-indexed. Explicit ceil — Python's round() is
+    half-even, which lands one rank low whenever p/100 * n hits an exact
+    half (e.g. p50 of 5 samples picked the 2nd instead of the 3rd)."""
     out = {f"p{p}_ms": 0.0 for p in points}
     n = len(samples_s)
     if not n:
         return out
     ordered = sorted(samples_s)
     for p in points:
-        rank = min(n - 1, max(0, int(round(p / 100.0 * n)) - 1))
-        out[f"p{p}_ms"] = ordered[rank] * 1e3
+        rank = min(n, max(1, math.ceil(p / 100.0 * n)))
+        out[f"p{p}_ms"] = ordered[rank - 1] * 1e3
     return out
 
 

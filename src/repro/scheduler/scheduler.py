@@ -8,6 +8,17 @@ callable — and tracks end-to-end (admission -> completion) latency per
 request plus batch-size occupancy, the numbers `stats()` reports as
 p50/p95/p99 and throughput.
 
+With ``adaptive=True`` each queue gets its own :class:`AdaptiveWindow`
+controller seeded at ``max_delay_ms``: the batching window then retunes
+itself per key from observed arrival rate and occupancy instead of staying a
+static knob. ``submit(..., priority=PRIORITY_HIGH)`` routes through the
+queues' high-priority level and closes open windows early (SLO admission).
+
+The scheduler is also a *signal source* for the fusion policy:
+``signals_for(names)`` snapshots queue depth, mean batch occupancy, and the
+worst per-function p95 across a chain — the live feedback that decides
+whether a merge's control-plane stall is worth paying right now.
+
 Queue lifecycle: dispatcher threads are created lazily on a key's first
 request and retire themselves after ``idle_timeout_s`` without traffic, so
 shape-diverse workloads don't accumulate idle threads. All queue-map
@@ -17,16 +28,25 @@ never be enqueued behind a stop sentinel or into a retired queue.
 from __future__ import annotations
 
 import collections
+import dataclasses
 import threading
 import time
 from concurrent.futures import Future
 from typing import Callable
 
-from repro.scheduler.batching import request_key
+from repro.scheduler.adaptive import AdaptiveConfig, AdaptiveWindow, SchedulerSignals
+from repro.scheduler.batching import largest_pow2_le, request_key
 from repro.scheduler.coalescer import AdmissionQueue, PendingRequest
 from repro.scheduler.metrics import LatencyWindow, percentiles_ms  # noqa: F401 — re-exported
 
 _BATCH_WINDOW = 200_000  # bounded batch-size history
+_PER_NAME_WINDOW = 8_192  # per-function latency history (tail estimate only)
+_RECENT_BATCHES = 256  # per-function recent batch sizes: the "right now"
+# occupancy the fusion policy's saturation guard keys on — an all-time
+# average would stay cold for hours after traffic actually saturates
+_SIGNALS_TTL_S = 0.05  # signals_for memo: a hot unfused edge asks on every
+# sync observation; sorting the latency window per request would put an
+# O(n log n) snapshot on the data path for a control-plane answer
 
 
 class RequestScheduler:
@@ -37,37 +57,65 @@ class RequestScheduler:
         max_batch: int = 8,
         max_delay_ms: float = 2.0,
         idle_timeout_s: float = 60.0,
+        adaptive: bool = False,
+        adaptive_config: AdaptiveConfig | None = None,
         on_request_done: Callable[[str, float, int], None] | None = None,
     ):
         self._dispatch = dispatch_batch
-        self.max_batch = max(1, int(max_batch))
+        # clamp to the largest power of two <= max_batch: the coalescer then
+        # never forms a batch the pow2 bucket set can't serve in one
+        # execution (a batch of 6 against buckets {1,2,4} would dispatch
+        # twice, forever — worse than the one-off compile it avoids)
+        self.max_batch = largest_pow2_le(max_batch)
         self.max_delay_s = max(0.0, float(max_delay_ms)) / 1e3
         self.idle_timeout_s = idle_timeout_s
+        self.adaptive = bool(adaptive) or adaptive_config is not None
+        if self.adaptive and adaptive_config is None:
+            adaptive_config = AdaptiveConfig()
+            if self.max_delay_s > adaptive_config.max_delay_s / 2:
+                # a seed near/above the default cap must not be silently
+                # clamped — leave headroom to grow past what was asked for
+                adaptive_config = dataclasses.replace(
+                    adaptive_config, max_delay_s=2.0 * self.max_delay_s
+                )
+        self.adaptive_config = adaptive_config
         self._on_request_done = on_request_done
         self._queues: dict[tuple, AdmissionQueue] = {}
         self._lock = threading.Lock()
         self._closed = False
         self._latency = LatencyWindow()
+        self._per_name: dict[str, LatencyWindow] = {}
+        self._recent_by_name: dict[str, collections.deque] = {}
         self._batch_sizes: collections.deque = collections.deque(maxlen=_BATCH_WINDOW)
         self._batches = 0
+        self._signals_cache: dict[tuple, tuple[float, SchedulerSignals]] = {}
 
     # ----------------------------------------------------------------- API
 
-    def submit(self, name: str, args: tuple) -> Future:
-        req = PendingRequest(args, Future(), time.perf_counter())
+    def submit(self, name: str, args: tuple, *, priority: int = 0) -> Future:
+        req = PendingRequest(args, Future(), time.perf_counter(), priority=int(priority))
         key = request_key(name, args)
         with self._lock:
             if self._closed:
                 raise RuntimeError("scheduler is shut down")
             q = self._queues.get(key)
             if q is None:
+                controller = (
+                    AdaptiveWindow(self.max_batch, self.max_delay_s, self.adaptive_config)
+                    if self.adaptive
+                    else None
+                )
+                # the controller clamps its seed into [min, max]_delay_s;
+                # the queue's first window must honor the same bounds
+                first_delay = controller.delay_s if controller is not None else self.max_delay_s
                 q = AdmissionQueue(
                     name,
                     self._dispatch,
                     key=key,
                     max_batch=self.max_batch,
-                    max_delay_s=self.max_delay_s,
+                    max_delay_s=first_delay,
                     idle_timeout_s=self.idle_timeout_s,
+                    adaptive=controller,
                     on_batch_done=self._record_batch,
                     on_idle=self._retire_queue,
                 )
@@ -103,16 +151,85 @@ class RequestScheduler:
         with self._lock:
             self._batch_sizes.append(k)
             self._batches += 1
+            win = self._per_name.get(name)
+            if win is None:
+                win = self._per_name[name] = LatencyWindow(maxlen=_PER_NAME_WINDOW)
+            recent = self._recent_by_name.get(name)
+            if recent is None:
+                recent = self._recent_by_name[name] = collections.deque(maxlen=_RECENT_BATCHES)
+            recent.append(k)
         for r in batch:
-            self._latency.observe(t_done - r.t_enqueue, t_done)
+            lat = t_done - r.t_enqueue
+            self._latency.observe(lat, t_done)
+            win.observe(lat, t_done)
             if self._on_request_done is not None:
-                self._on_request_done(name, t_done - r.t_enqueue, k)
+                try:
+                    self._on_request_done(name, lat, k)
+                except Exception:  # noqa: BLE001 — a raising billing/metrics sink
+                    pass  # must not lose the rest of the batch's observations
+
+    def signals_for(self, names) -> SchedulerSignals:
+        """Live feedback for the fusion policy about the chain ``names``:
+        summed queue depth over the chain's keys, mean occupancy of the
+        chain's RECENT batches (last _RECENT_BATCHES per function — the
+        saturation guard must see now, not an all-time average diluted by
+        hours of idle history), and the worst per-function p95."""
+        names = (names,) if isinstance(names, str) else tuple(names)
+        now = time.perf_counter()
+        with self._lock:
+            hit = self._signals_cache.get(names)
+            if hit is not None and now - hit[0] < _SIGNALS_TTL_S:
+                return hit[1]
+            depth = sum(q.depth() for key, q in self._queues.items() if key[0] in names)
+            sizes = [s for n in names for s in self._recent_by_name.get(n, ())]
+            windows = [self._per_name[n] for n in names if n in self._per_name]
+        mean_occ = (sum(sizes) / len(sizes)) / self.max_batch if sizes else 0.0
+        p95 = max((w.snapshot()["p95_ms"] for w in windows), default=0.0)
+        sig = SchedulerSignals(queue_depth=depth, mean_occupancy=mean_occ, p95_ms=p95)
+        with self._lock:
+            if len(self._signals_cache) > 256:  # bounded: chains are few
+                self._signals_cache.clear()
+            self._signals_cache[names] = (now, sig)
+        return sig
+
+    def reset_stats(self) -> None:
+        """Forget latency/batch history and learned adaptive state; live
+        queues keep serving and windows re-seed at (clamped) max_delay_s.
+        Benchmarks call this after warmup so compiles and warmup bursts
+        don't pollute the measured occupancy, tails, or the controllers'
+        EWMAs. Call while traffic is quiescent (warmup responses collected):
+        a dispatcher mid-batch would apply one retune from pre-reset state."""
+        with self._lock:
+            self._batch_sizes.clear()
+            self._batches = 0
+            self._per_name = {}
+            self._recent_by_name = {}
+            self._signals_cache = {}
+            queues = list(self._queues.values())
+        self._latency.reset()
+        for q in queues:
+            if q.adaptive is not None:
+                q.adaptive.reset(self.max_delay_s)
+                q.max_delay_s = q.adaptive.delay_s
+
+    def window_snapshot(self) -> list[dict]:
+        """Per-queue view of the (possibly retuned) batching windows."""
+        with self._lock:
+            queues = list(self._queues.values())
+        out = []
+        for q in queues:
+            row = {"name": q.name, "max_delay_ms": q.max_delay_s * 1e3, "depth": q.depth()}
+            if q.adaptive is not None:
+                row.update(q.adaptive.snapshot())
+            out.append(row)
+        return out
 
     def stats(self) -> dict:
         with self._lock:
             sizes = list(self._batch_sizes)
             batches = self._batches
             n_keys = len(self._queues)
+            queues = list(self._queues.values())
         out = self._latency.snapshot()
         out.update(
             {
@@ -122,4 +239,11 @@ class RequestScheduler:
                 "max_batch_seen": max(sizes) if sizes else 0,
             }
         )
+        if self.adaptive:
+            delays = [q.max_delay_s * 1e3 for q in queues]
+            out["adaptive"] = {
+                "window_min_ms": round(min(delays), 4) if delays else 0.0,
+                "window_max_ms": round(max(delays), 4) if delays else 0.0,
+                "retunes": sum(q.adaptive.retunes for q in queues if q.adaptive is not None),
+            }
         return out

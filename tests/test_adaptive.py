@@ -1,0 +1,338 @@
+"""Adaptive micro-batch windows, SLO-priority admission, and the scheduler
+signals the fusion policy consumes. No jax on the hot paths — pure scheduler
+mechanics with synthetic dispatch functions, tier-1 fast."""
+import threading
+import time
+from concurrent.futures import Future, wait
+
+import pytest
+
+from repro.scheduler import (
+    PRIORITY_HIGH,
+    AdaptiveConfig,
+    AdaptiveWindow,
+    RequestScheduler,
+    SchedulerSignals,
+)
+
+# ------------------------------------------------------- controller (no threads)
+
+
+def test_window_grows_on_dense_arrivals_with_low_occupancy():
+    cfg = AdaptiveConfig(max_delay_s=0.020)
+    win = AdaptiveWindow(max_batch=8, initial_delay_s=0.001, config=cfg)
+    # singleton batches arriving 2ms apart: dense traffic the 1ms window misses
+    t = 0.0
+    for _ in range(30):
+        win.observe_batch([t], closed_full=False)
+        t += 0.002
+    assert win.delay_s > 0.004, "window must grow toward the occupancy target"
+    # steady state: the gap-derived target is (0.75*8 - 1) * 2ms = 10ms
+    assert win.delay_s <= cfg.max_delay_s
+
+
+def test_window_decays_to_zero_on_serial_trickle():
+    cfg = AdaptiveConfig(max_delay_s=0.020)
+    win = AdaptiveWindow(max_batch=8, initial_delay_s=0.020, config=cfg)
+    t = 0.0
+    for _ in range(30):
+        win.observe_batch([t], closed_full=False)
+        t += 0.100  # gap far beyond any allowed window: waiting buys nothing
+    assert win.delay_s == cfg.min_delay_s, "trickle must decay the window to ~0"
+
+
+def test_window_shrinks_when_batches_close_full():
+    cfg = AdaptiveConfig(max_delay_s=0.020)
+    win = AdaptiveWindow(max_batch=4, initial_delay_s=0.020, config=cfg)
+    t = 0.0
+    for _ in range(30):
+        win.observe_batch([t, t + 1e-4, t + 2e-4, t + 3e-4], closed_full=True)
+        t += 0.005
+    # arrivals fill a batch in well under a millisecond; holding 20ms is waste
+    assert win.delay_s < 0.010
+
+
+def test_window_hysteresis_prevents_flapping():
+    cfg = AdaptiveConfig(max_delay_s=0.020)
+    win = AdaptiveWindow(max_batch=8, initial_delay_s=0.002, config=cfg)
+    t = 0.0
+    for _ in range(40):  # stationary traffic: EWMA converges, window settles
+        win.observe_batch([t, t + 0.002, t + 0.004], closed_full=False)
+        t += 0.010
+    settled = win.delay_s
+    retunes_before = win.retunes
+    for _ in range(20):
+        win.observe_batch([t, t + 0.002, t + 0.004], closed_full=False)
+        t += 0.010
+    assert win.retunes == retunes_before, "stationary traffic must not flap the window"
+    assert win.delay_s == settled
+
+
+def test_window_growth_stops_at_target_occupancy():
+    """Once batches fill to target, a grown window buys nothing more — the
+    gap-derived target must not keep inflating the wait."""
+    cfg = AdaptiveConfig(max_delay_s=0.050, target_occupancy=0.75)
+    win = AdaptiveWindow(max_batch=5, initial_delay_s=0.004, config=cfg)
+    t = 0.0
+    for _ in range(30):  # batches of 4/5 = 0.8, above target; arrivals 4ms apart
+        win.observe_batch([t, t + 0.004, t + 0.008, t + 0.012], closed_full=False)
+        t += 0.024
+    assert win.delay_s == 0.004, "at-target occupancy must freeze growth"
+
+
+def test_window_reset_forgets_learned_state():
+    cfg = AdaptiveConfig(max_delay_s=0.020)
+    win = AdaptiveWindow(max_batch=8, initial_delay_s=0.010, config=cfg)
+    t = 0.0
+    for _ in range(10):
+        win.observe_batch([t], closed_full=False)
+        t += 0.100
+    assert win.delay_s == cfg.min_delay_s  # trickle decayed it
+    win.reset(0.010)
+    assert win.delay_s == 0.010
+    assert win.snapshot()["ewma_gap_ms"] == 0.0
+
+
+def test_default_config_cap_stretches_with_large_seed():
+    """adaptive=True with max_delay_ms above the default 20ms cap must not
+    silently clamp the operator's window — the cap stretches to 2x seed."""
+    sched = RequestScheduler(lambda n, a: [x[0] for x in a], max_delay_ms=50.0, adaptive=True)
+    try:
+        assert sched.adaptive_config.max_delay_s == pytest.approx(0.100)
+    finally:
+        sched.shutdown()
+    # small seeds keep the stock config
+    sched = RequestScheduler(lambda n, a: [x[0] for x in a], max_delay_ms=2.0, adaptive=True)
+    try:
+        assert sched.adaptive_config.max_delay_s == pytest.approx(AdaptiveConfig().max_delay_s)
+    finally:
+        sched.shutdown()
+
+
+def test_reset_stats_clears_history_but_keeps_serving():
+    sched = RequestScheduler(lambda n, a: [x[0] for x in a], max_batch=4, max_delay_ms=5.0,
+                             adaptive=True)
+    try:
+        wait([sched.submit("f", (i,)) for i in range(8)], timeout=5)
+        assert sched.stats()["batches"] > 0
+        sched.reset_stats()
+        st = sched.stats()
+        assert st["batches"] == 0 and st["requests"] == 0 and st["mean_batch"] == 0.0
+        assert sched.signals_for("f").mean_occupancy == 0.0
+        assert sched.submit("f", (9,)).result(timeout=5) == 9  # queues still live
+    finally:
+        sched.shutdown()
+
+
+def test_idle_close_tracks_intra_burst_spacing():
+    """The early-close cutoff follows the smoothed INTRA-burst gap; burst
+    boundary gaps (>= the window cap) must not inflate it."""
+    cfg = AdaptiveConfig(max_delay_s=0.020)
+    win = AdaptiveWindow(max_batch=8, initial_delay_s=0.002, config=cfg)
+    assert win.idle_close_s() is None  # no estimate yet: window governs alone
+    t = 0.0
+    for _ in range(10):  # bursts spaced 1ms inside, 37ms apart
+        win.observe_batch([t, t + 0.001, t + 0.002, t + 0.003], closed_full=False)
+        t += 0.040
+    ic = win.idle_close_s()
+    assert ic is not None and 0.001 <= ic <= 0.006, ic  # ~3x the 1ms spacing
+
+
+def test_window_bounds_respected():
+    cfg = AdaptiveConfig(min_delay_s=0.0005, max_delay_s=0.004)
+    win = AdaptiveWindow(max_batch=8, initial_delay_s=0.050, config=cfg)
+    assert win.delay_s == cfg.max_delay_s  # initial clamps into [min, max]
+    t = 0.0
+    for _ in range(30):  # dense arrivals push the target above the cap
+        win.observe_batch([t, t + 1e-3], closed_full=False)
+        t += 2e-3
+    assert cfg.min_delay_s <= win.delay_s <= cfg.max_delay_s
+
+
+# ------------------------------------------------------- scheduler integration
+
+
+def test_adaptive_scheduler_converges_bursty_grows_trickle_decays():
+    """The satellite convergence check, end to end through real dispatcher
+    threads: dense arrivals grow the retuned window above its seed; a serial
+    trickle decays it to ~0 so lone requests stop paying the window tax."""
+    # trickle: one request every 30ms against a 20ms-max window
+    sched = RequestScheduler(
+        lambda name, a: [x[0] for x in a], max_batch=4, max_delay_ms=20.0,
+        adaptive=True, adaptive_config=AdaptiveConfig(max_delay_s=0.020),
+    )
+    try:
+        t_lone = []
+        for i in range(12):
+            t0 = time.perf_counter()
+            sched.submit("f", (i,)).result(timeout=5)
+            t_lone.append(time.perf_counter() - t0)
+            time.sleep(0.03)
+        windows = sched.window_snapshot()
+        assert windows and windows[0]["max_delay_ms"] < 1.0, windows
+        # decayed window: the last lone requests return without the ~20ms wait
+        assert min(t_lone[-3:]) < 0.010, t_lone
+    finally:
+        sched.shutdown()
+
+    # bursty: 3ms-spaced arrivals against a 1ms seed window
+    sched = RequestScheduler(
+        lambda name, a: (time.sleep(0.005), [x[0] for x in a])[1],
+        max_batch=8, max_delay_ms=1.0,
+        adaptive=True, adaptive_config=AdaptiveConfig(max_delay_s=0.050),
+    )
+    try:
+        futs = []
+        for i in range(60):
+            futs.append(sched.submit("f", (i,)))
+            time.sleep(0.003)
+        done, not_done = wait(futs, timeout=30)
+        assert not not_done
+        windows = sched.window_snapshot()
+        assert windows and windows[0]["max_delay_ms"] > 2.0, windows
+        st = sched.stats()
+        assert st["mean_batch"] > 1.5, st
+        assert st["adaptive"]["retunes"] > 0
+    finally:
+        sched.shutdown()
+
+
+def test_high_priority_closes_window_early():
+    """SLO admission: a PRIORITY_HIGH arrival must not wait out a long
+    batching window — it closes the window and the whole batch dispatches."""
+    sched = RequestScheduler(lambda name, a: [x[0] for x in a], max_batch=8, max_delay_ms=2000.0)
+    try:
+        t0 = time.perf_counter()
+        normal = [sched.submit("f", (i,)) for i in range(3)]
+        time.sleep(0.02)  # let the window open on the normal traffic
+        urgent = sched.submit("f", (99,), priority=PRIORITY_HIGH)
+        done, not_done = wait(normal + [urgent], timeout=5)
+        elapsed = time.perf_counter() - t0
+        assert not not_done
+        assert urgent.result() == 99
+        assert elapsed < 1.0, f"2s window must close early on priority ({elapsed:.3f}s)"
+    finally:
+        sched.shutdown()
+
+
+def test_high_priority_leads_immediately():
+    """A high-priority FIRST request opens no window at all: greedy drain."""
+    sched = RequestScheduler(lambda name, a: [x[0] for x in a], max_batch=8, max_delay_ms=2000.0)
+    try:
+        t0 = time.perf_counter()
+        assert sched.submit("f", (1,), priority=PRIORITY_HIGH).result(timeout=5) == 1
+        assert time.perf_counter() - t0 < 1.0
+    finally:
+        sched.shutdown()
+
+
+def test_high_priority_jumps_queued_backlog():
+    """While the dispatcher is busy, a late PRIORITY_HIGH submit must be
+    admitted into the next batch ahead of earlier normal requests."""
+    order = []
+    gate = threading.Event()
+
+    def dispatch(name, args_list):
+        if not gate.is_set():
+            gate.set()
+            time.sleep(0.1)  # first batch holds the dispatcher; backlog forms
+        else:
+            order.extend(a[0] for a in args_list)
+        return [a[0] for a in args_list]
+
+    URGENT = 99
+    sched = RequestScheduler(dispatch, max_batch=2, max_delay_ms=0.0)
+    try:
+        first = sched.submit("f", (0,))
+        gate.wait(timeout=5)
+        normals = [sched.submit("f", (i,)) for i in range(1, 5)]
+        urgent = sched.submit("f", (URGENT,), priority=PRIORITY_HIGH)
+        done, not_done = wait([first, urgent] + normals, timeout=5)
+        assert not not_done
+        assert order[0] == URGENT, order
+    finally:
+        sched.shutdown()
+
+
+# ------------------------------------------------------------- signals
+
+
+def test_signals_for_reports_depth_occupancy_p95():
+    release = threading.Event()
+
+    def dispatch(name, args_list):
+        release.wait(timeout=5)
+        return [a[0] for a in args_list]
+
+    sched = RequestScheduler(dispatch, max_batch=4, max_delay_ms=0.0)
+    try:
+        futs = [sched.submit("f", (i,)) for i in range(6)]
+        time.sleep(0.05)  # dispatcher blocked on the first batch; rest queue up
+        sig = sched.signals_for(("f", "g"))
+        assert sig.queue_depth > 0
+        release.set()
+        done, not_done = wait(futs, timeout=5)
+        assert not not_done
+        sig = sched.signals_for("f")
+        assert 0.0 < sig.mean_occupancy <= 1.0
+        assert sig.p95_ms > 0.0
+        # unknown functions: clean zeros, not KeyErrors
+        empty = sched.signals_for(("nope",))
+        assert empty.queue_depth == 0 and empty.p95_ms == 0.0
+    finally:
+        release.set()
+        sched.shutdown()
+
+
+def test_signals_default_is_inert():
+    s = SchedulerSignals()
+    assert s.queue_depth == 0 and s.mean_occupancy == 0.0 and s.p95_ms == 0.0
+
+
+def test_signals_for_is_memoized_briefly():
+    """A hot unfused edge asks for signals on every sync observation; the
+    snapshot (which sorts the latency window) is memoized for a short TTL
+    so the control-plane answer stays off the data path's critical cost."""
+    sched = RequestScheduler(lambda n, a: [x[0] for x in a], max_batch=4, max_delay_ms=0.0)
+    try:
+        wait([sched.submit("f", (i,)) for i in range(4)], timeout=5)
+        t0 = time.perf_counter()
+        first = sched.signals_for("f")
+        assert first.p95_ms > 0
+        wait([sched.submit("f", (9,))], timeout=5)
+        second = sched.signals_for("f")
+        if time.perf_counter() - t0 < 0.04:  # guard: a machine stall can expire the TTL
+            assert second is first  # within TTL: cached object
+        time.sleep(0.06)
+        assert sched.signals_for("f") is not first  # TTL elapsed: recomputed
+    finally:
+        sched.shutdown()
+
+
+def test_max_batch_clamps_to_pow2():
+    sched = RequestScheduler(lambda n, a: [x[0] for x in a], max_batch=6)
+    try:
+        assert sched.max_batch == 4
+    finally:
+        sched.shutdown()
+    sched = RequestScheduler(lambda n, a: [x[0] for x in a], max_batch=8)
+    try:
+        assert sched.max_batch == 8
+    finally:
+        sched.shutdown()
+
+
+def test_explicit_config_cap_clamps_first_window_too():
+    """An explicit AdaptiveConfig whose cap is below the max_delay_ms seed
+    must bound the queue's FIRST window, not just retuned ones."""
+    cfg = AdaptiveConfig(max_delay_s=0.010)
+    sched = RequestScheduler(lambda n, a: [x[0] for x in a], max_delay_ms=50.0,
+                             adaptive=True, adaptive_config=cfg)
+    try:
+        t0 = time.perf_counter()
+        assert sched.submit("f", (1,)).result(timeout=5) == 1
+        assert time.perf_counter() - t0 < 0.045, "first window must honor the 10ms cap"
+        for row in sched.window_snapshot():
+            assert row["max_delay_ms"] <= 10.0 + 1e-6
+    finally:
+        sched.shutdown()

@@ -1,0 +1,75 @@
+"""Benchmark-backed acceptance checks for the adaptive batching window.
+
+Runs the same code paths as `benchmarks/load_bench.py --adaptive` (bursty and
+trickle open-loop scenarios, static vs adaptive window) and asserts the
+headline claims: on bursts, adaptive occupancy beats the static window at
+equal-or-better p95; on a serial trickle, the adaptive window decays so the
+static window's per-request queueing tax disappears. Marked slow — four full
+engine builds + compiles; run with `-m slow`.
+"""
+import argparse
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "benchmarks"))
+
+import load_bench  # noqa: E402
+
+
+def bench_args(**overrides) -> argparse.Namespace:
+    base = dict(
+        arch="llama3.2-1b", backend="tinyjax", concurrency=8, steps=48,
+        warmup_steps=8, prompt_len=8, max_len=96, max_batch=0,
+        max_delay_ms=4.0, rate=160.0, duration=2.5, pattern="bursty",
+        burst=8, intra_gap_ms=1.0, trickle_rate=15.0, adaptive=False,
+        smoke=False, modes=["fused-batched"], json=False,
+    )
+    base.update(overrides)
+    return argparse.Namespace(**base)
+
+
+def _retry_once(check):
+    """Timing assertions on a 2-core shared box get one retry: a transient
+    scheduler hiccup must not fail the suite, a real regression still does."""
+    try:
+        check()
+    except AssertionError:
+        check()
+
+
+@pytest.mark.slow
+def test_adaptive_window_beats_static_on_bursty_and_trickle():
+    def check():
+        args = bench_args(max_delay_ms=4.0, duration=4.0)
+        out = load_bench.run_adaptive_compare(args)
+        s = out["summary"]
+        # bursty: the grown window packs fuller batches at parity-or-better
+        # p95 (1.25x headroom: the tail on a 2-core shared box jitters by
+        # more than the effect of the window itself)
+        assert s["bursty_occupancy_adaptive"] > s["bursty_occupancy_static"], s
+        assert s["bursty_p95_adaptive_ms"] <= s["bursty_p95_static_ms"] * 1.25, s
+        # all requests completed in every cell
+        for cell in ("bursty/static", "bursty/adaptive", "trickle/static", "trickle/adaptive"):
+            assert out[cell]["requests"] > 0
+
+    _retry_once(check)
+
+
+@pytest.mark.slow
+def test_adaptive_trickle_sheds_the_static_window_tax():
+    def check():
+        # a deliberately heavy static window makes the tax unambiguous vs noise
+        args = bench_args(max_delay_ms=25.0, duration=2.5, trickle_rate=12.0)
+        out = load_bench.run_adaptive_compare(args)
+        t_s, t_a = out["trickle/static"], out["trickle/adaptive"]
+        # static: every lone request waits out the 25ms window; adaptive decays it
+        assert t_a["p50_ms"] < t_s["p50_ms"] - 0.4 * args.max_delay_ms, (t_s, t_a)
+
+    _retry_once(check)
+
+
+@pytest.mark.slow
+def test_smoke_mode_passes_on_healthy_scheduler():
+    assert load_bench.run_smoke(bench_args()) == 0

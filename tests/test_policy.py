@@ -6,9 +6,11 @@ random cases from a fixed-seed RNG and checks the same invariants the
 original hypothesis strategies expressed.
 """
 import random
+import threading
 
 from repro.core.handler import EdgeStats
 from repro.core.policy import FusionPolicy, UnionFind
+from repro.scheduler import SchedulerSignals
 
 NAMES = [f"f{i}" for i in range(8)]
 
@@ -77,3 +79,135 @@ def test_merge_cost_feedback_moves_estimate():
     policy = FusionPolicy(merge_cost_s=2.0)
     policy.feedback_merge_cost(0.0)
     assert policy.merge_cost_s == 1.0
+
+
+class _CountingLock:
+    """threading.Lock wrapper that counts acquisitions."""
+
+    def __init__(self):
+        self.inner = threading.Lock()
+        self.acquisitions = 0
+
+    def __enter__(self):
+        self.inner.acquire()
+        self.acquisitions += 1
+        return self
+
+    def __exit__(self, *exc):
+        self.inner.release()
+        return False
+
+
+def test_feedback_merge_cost_takes_the_decide_lock():
+    """Regression (PR 2): feedback_merge_cost updated merge_cost_s WITHOUT
+    self._lock while decide() read it under the lock — a racing async-build
+    Merger thread could publish a half-applied EWMA. The write must go
+    through the same lock decide uses."""
+    policy = FusionPolicy(merge_cost_s=2.0)
+    lock = _CountingLock()
+    policy._lock = lock
+    policy.feedback_merge_cost(1.0)
+    assert lock.acquisitions == 1, "feedback_merge_cost must hold the policy lock"
+    assert policy.merge_cost_s == 1.5
+
+
+def test_concurrent_feedback_and_decide_keep_estimate_consistent():
+    """Hammer feedback_merge_cost from several threads while decide() spins.
+    With every feedback feeding the same value v, the EWMA fixed point is v:
+    any deviation means a torn read-modify-write."""
+    policy = FusionPolicy(min_observations=1, merge_cost_s=0.5, amortization_horizon=100)
+    stats = EdgeStats(sync_count=10, total_wait_s=1.0)
+    stop = threading.Event()
+    errors = []
+
+    def feeder():
+        while not stop.is_set():
+            policy.feedback_merge_cost(0.5)
+
+    def decider():
+        while not stop.is_set():
+            d = policy.decide("a", "b", stats, "t", "t")
+            if not d.fuse:  # saving 10s >> cost 0.5s: must always fuse
+                errors.append(d.reason)
+
+    threads = [threading.Thread(target=feeder) for _ in range(3)]
+    threads += [threading.Thread(target=decider) for _ in range(2)]
+    for t in threads:
+        t.start()
+    import time
+
+    time.sleep(0.3)
+    stop.set()
+    for t in threads:
+        t.join(timeout=5)
+    assert not errors, errors[:3]
+    assert policy.merge_cost_s == 0.5
+
+
+# ------------------------------------------------------- scheduler signals
+
+
+def _hot_edge(wait_s=0.01, count=100):
+    return EdgeStats(sync_count=count, total_wait_s=wait_s * count)
+
+
+def test_saturated_chain_deprioritizes_merge():
+    """Full batches + queued backlog: micro-batching is already absorbing the
+    load, so the merge stall must clear a (much) higher amortization bar."""
+    policy = FusionPolicy(min_observations=1, merge_cost_s=2.0, amortization_horizon=500,
+                          saturation_penalty=4.0)
+    stats = _hot_edge(wait_s=0.01)  # saving 5s: beats 2.0, not 8.0
+    assert policy.decide("a", "b", stats, "t", "t").fuse
+    saturated = SchedulerSignals(queue_depth=8, mean_occupancy=0.95, p95_ms=5.0)
+    d = policy.decide("a", "b", stats, "t", "t", signals=saturated)
+    assert not d.fuse and "saturated" in d.reason
+    # clearly amortizable even at the penalized bar: still fuses
+    big = _hot_edge(wait_s=0.1)  # saving 50s > 8.0
+    assert policy.decide("a", "b", big, "t", "t", signals=saturated).fuse
+
+
+def test_cold_chain_with_long_waits_promotes_merge():
+    """Low occupancy + long tail waits: blocking dominates, fusion removes it
+    — the policy halves the observation floor and discounts the cost."""
+    policy = FusionPolicy(min_observations=4, merge_cost_s=2.0, amortization_horizon=500,
+                          promote_wait_s=0.05, promote_discount=0.5)
+    # 2 observations of 100ms waits: below the floor without signals
+    stats = EdgeStats(sync_count=2, total_wait_s=0.2)
+    assert not policy.decide("a", "b", stats, "t", "t").fuse
+    cold = SchedulerSignals(queue_depth=0, mean_occupancy=0.1, p95_ms=120.0)
+    d = policy.decide("a", "b", stats, "t", "t", signals=cold)
+    assert d.fuse and "promoted" in d.reason
+    # fast cold chains (short waits) are NOT promoted
+    quick = EdgeStats(sync_count=2, total_wait_s=0.002)
+    idle = SchedulerSignals(queue_depth=0, mean_occupancy=0.1, p95_ms=1.0)
+    assert not policy.decide("a", "b", quick, "t", "t", signals=idle).fuse
+
+
+def test_exec_slow_chain_with_tiny_sync_waits_is_not_promoted():
+    """A chain whose p95 is dominated by slow COMPUTE (not blocking) must not
+    get the promote discount — fusion removes sync waits, not model math.
+    The trigger is the edge's own sync-wait tail, gated by its share of the
+    end-to-end p95."""
+    policy = FusionPolicy(min_observations=4, merge_cost_s=2.0, amortization_horizon=500,
+                          promote_wait_s=0.05, promote_discount=0.5)
+    # sync waits are a tiny slice of a 300ms end-to-end p95
+    stats = EdgeStats(sync_count=2, total_wait_s=0.004)
+    slow_exec = SchedulerSignals(queue_depth=0, mean_occupancy=0.1, p95_ms=300.0)
+    assert not policy.decide("a", "b", stats, "t", "t", signals=slow_exec).fuse
+    # long sync waits that are ALSO a tiny share of p95: blocked by the gate
+    waits = EdgeStats(sync_count=2, total_wait_s=0.12)  # 60ms mean waits
+    huge_p95 = SchedulerSignals(queue_depth=0, mean_occupancy=0.1, p95_ms=2000.0)
+    d = policy.decide("a", "b", waits, "t", "t", signals=huge_p95)
+    assert not d.fuse and "promoted" not in d.reason
+
+
+def test_edge_stats_p95_wait_tracks_tail_not_mean():
+    st = EdgeStats()
+    for w in [0.001] * 18 + [0.5]:  # 19 samples: rank ceil(0.95*19)=19 = the outlier
+        st.sync_count += 1
+        st.total_wait_s += w
+        st.recent_waits.append(w)
+    assert st.mean_wait_s < 0.03
+    assert st.p95_wait_s == 0.5
+    st2 = EdgeStats(sync_count=3, total_wait_s=0.3)
+    assert st2.p95_wait_s == st2.mean_wait_s  # no history: falls back to mean

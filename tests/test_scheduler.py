@@ -27,9 +27,38 @@ def test_percentiles_ms_nearest_rank():
     assert percentiles_ms([]) == {"p50_ms": 0.0, "p95_ms": 0.0, "p99_ms": 0.0}
 
 
+def test_percentiles_ms_ceil_rank_pinned():
+    """Explicit ceil-based nearest rank: rank = ceil(p/100 * n), 1-indexed.
+    Python's round() is half-even and landed one rank low on exact halves
+    (p50 of 5 samples used to report the 2nd sample, not the median)."""
+    five = [i / 1e3 for i in (1, 2, 3, 4, 5)]
+    p = percentiles_ms(five)
+    assert p["p50_ms"] == pytest.approx(3.0)  # true median, was 2.0
+    assert p["p95_ms"] == pytest.approx(5.0)
+    ten = [i / 1e3 for i in range(1, 11)]
+    p = percentiles_ms(ten)
+    assert p["p50_ms"] == pytest.approx(5.0)  # ceil(0.5*10) = rank 5
+    assert p["p95_ms"] == pytest.approx(10.0)  # ceil(9.5) = rank 10
+    assert p["p99_ms"] == pytest.approx(10.0)
+    assert percentiles_ms([0.004], points=(50,))["p50_ms"] == pytest.approx(4.0)
+
+
 def test_next_batch_bucket_pow2_capped():
     assert [next_batch_bucket(k, 8) for k in (1, 2, 3, 5, 8, 9, 30)] == [1, 2, 4, 8, 8, 8, 8]
     assert [next_batch_bucket(k) for k in (1, 3, 5, 9)] == [1, 4, 8, 16]  # uncapped
+
+
+def test_next_batch_bucket_non_pow2_cap_never_leaks_odd_bucket():
+    """A non-power-of-two max_batch must clamp to the largest power of two
+    BELOW it — bucket 6 would be a one-off compile nothing else reuses."""
+    assert [next_batch_bucket(k, 6) for k in (1, 2, 3, 4, 5, 6, 9)] == [1, 2, 4, 4, 4, 4, 4]
+    assert [next_batch_bucket(k, 12) for k in (5, 9, 12)] == [8, 8, 8]
+    assert next_batch_bucket(3, 1) == 1
+    for cap in range(1, 33):
+        for k in range(1, 40):
+            b = next_batch_bucket(k, cap)
+            assert b & (b - 1) == 0, f"bucket {b} (k={k}, cap={cap}) not a power of two"
+            assert b <= cap
 
 
 def test_stack_then_split_roundtrips_requests():
@@ -110,6 +139,54 @@ def test_dispatch_exception_reaches_every_future():
         sched.shutdown()
 
 
+def test_raising_metrics_callback_cannot_hang_futures():
+    """Regression (PR 2): `_run_batch` used to invoke on_batch_done BEFORE
+    resolving futures and outside the try — one raising metrics sink (e.g. a
+    billing meter) stranded every client in the batch on an unresolved
+    future forever. Futures resolve first; metrics failures are swallowed."""
+    def bad_sink(name, lat_s, k):
+        raise RuntimeError("billing meter exploded")
+
+    def dispatch(name, args_list):
+        time.sleep(0.02)  # hold the dispatcher so submits coalesce
+        return [a[0] * 10 for a in args_list]
+
+    sched = make_scheduler(dispatch, on_request_done=bad_sink)
+    try:
+        futs = [sched.submit("f", (i,)) for i in range(6)]
+        done, not_done = wait(futs, timeout=5)
+        assert not not_done, "a raising metrics callback must not hang client futures"
+        assert [f.result() for f in futs] == [i * 10 for i in range(6)]
+        # the dispatcher thread survived and keeps serving the key
+        assert sched.submit("f", (7,)).result(timeout=5) == 70
+    finally:
+        sched.shutdown()
+
+
+def test_raising_on_batch_done_resolves_futures_and_keeps_dispatcher():
+    """Same invariant one layer down, with the batch-level callback itself
+    raising (the scheduler's _record_batch is only one possible sink)."""
+    from repro.scheduler import AdmissionQueue, PendingRequest
+    from concurrent.futures import Future
+
+    def boom(name, batch, t_done):
+        raise ValueError("metrics sink down")
+
+    q = AdmissionQueue("f", lambda name, args_list: [a[0] for a in args_list],
+                       max_batch=4, max_delay_s=0.02, on_batch_done=boom)
+    try:
+        reqs = [PendingRequest((i,), Future(), time.perf_counter()) for i in range(3)]
+        for r in reqs:
+            q.put(r)
+        done, not_done = wait([r.future for r in reqs], timeout=5)
+        assert not not_done
+        assert [r.future.result() for r in reqs] == [0, 1, 2]
+        assert q.thread.is_alive()
+    finally:
+        q.stop()
+        q.thread.join(timeout=5)
+
+
 def test_result_count_mismatch_is_an_error():
     sched = make_scheduler(lambda name, args_list: [0])  # always one result
     try:
@@ -164,6 +241,37 @@ def test_batched_matches_serial_on_leaf(backend_cls):
         for f, r in zip(futs, ref):
             np.testing.assert_allclose(np.asarray(f.result()), np.asarray(r), rtol=1e-5, atol=1e-6)
         assert p.scheduler.stats()["max_batch_seen"] > 1
+    finally:
+        p.shutdown()
+
+
+def test_non_pow2_max_batch_clamps_and_chunks_pow2():
+    """A non-power-of-two max_batch must never mint a bucket-6 program (a
+    one-off compile nothing reuses). Two layers enforce it: the scheduler
+    clamps max_batch to the largest power of two below it (batches of 6
+    never form), and execute_batch — for direct callers — splits oversized
+    batches into power-of-two chunks."""
+    p = TinyJaxBackend(FusionPolicy(enabled=False), max_batch=6, max_delay_ms=60.0)
+    try:
+        assert p.scheduler.max_batch == 4  # clamped at construction
+        w = jnp.asarray(np.random.RandomState(2).randn(8, 8).astype(np.float32) * 0.1)
+        p.deploy(FunctionSpec("leaf", lambda ctx, params, x: jnp.tanh(x @ params), w))
+        xs = [jnp.full((2, 8), float(i) / 5) for i in range(6)]
+        ref = [p.invoke("leaf", x) for x in xs]
+        futs = [p.invoke_async("leaf", x) for x in xs]
+        done, not_done = wait(futs, timeout=60)
+        assert not not_done
+        for f, r in zip(futs, ref):
+            np.testing.assert_allclose(np.asarray(f.result()), np.asarray(r), rtol=1e-5, atol=1e-6)
+        # the chunk fallback: a direct 6-request execute_batch runs as 4+2
+        inst = p.registry.resolve("leaf")
+        out = inst.execute_batch("leaf", [(x,) for x in xs], max_bucket=6)
+        for got, r in zip(out, ref):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(r), rtol=1e-5, atol=1e-6)
+        buckets = [key[3] for key in inst._compiled if len(key) == 4 and key[0] == "__batch__"]
+        assert buckets, "batched buckets must have compiled"
+        for b in buckets:
+            assert b & (b - 1) == 0, f"non-power-of-two bucket {b} compiled"
     finally:
         p.shutdown()
 
