@@ -37,6 +37,7 @@ import json
 import sys
 import threading
 import time
+from concurrent.futures import TimeoutError as FuturesTimeout
 
 import jax
 import jax.numpy as jnp
@@ -283,6 +284,217 @@ def run_adaptive_compare(args) -> dict:
     return out
 
 
+def run_churn(args, *, smoke: bool = False) -> dict:
+    """Fission demonstration: a phase-shift workload on the orchestrated
+    backend (each execution unit = one pod).
+
+    Phase 1 — a hot synchronous chain H -> L (serial traffic): the platform
+    observes the blocking edge and fuses {H, L} into one unit (the merge is
+    queued on the reconciler and lands in the post-phase trough).
+    Phase 2 — traffic turns concurrent and *direct*: heavy open-loop H
+    arrivals oversubscribe the single fused pod while light L arrivals
+    starve behind its FIFO. The scheduler's signals (occupancy ~1, queue
+    depth) feed FusionPolicy.decide_split, the control plane executes the
+    fission epoch, and L's delivered throughput recovers on its own pod.
+
+    Asserts (hard): the merge AND the split both happened, with the regret
+    reason recorded; every submitted request resolved (zero dropped or hung
+    futures across all epoch transitions). The recovery ratio is printed
+    always and enforced only in the full (non-smoke) run.
+    """
+    from repro.core import FunctionSpec
+
+    duration = 2.5 if smoke else max(4.0, args.duration)
+    rate_l = 100.0
+    # Two-stage host calibration so the scenario saturates at ANY host
+    # speed without outrunning the single-thread submit loop: first size H's
+    # compute (fori_loop iteration count — constant compile cost) so one
+    # batch-of-4 costs ~80ms on THIS host, then derive H's offered rate from
+    # the fused pod's measured capacity (1.4x oversubscription, below).
+    wh = jnp.asarray(np.random.RandomState(0).randn(256, 256).astype(np.float32) * 0.05)
+    wl = jnp.asarray(np.random.RandomState(1).randn(256, 256).astype(np.float32) * 0.05)
+    probe_iters, target_batch_s = 200, 0.080
+    probe = jax.jit(
+        lambda v: jax.lax.fori_loop(0, probe_iters, lambda i, h: jnp.tanh(h @ wh), v)
+    )
+    xb = jnp.ones((4, 8, 256), jnp.float32)
+    probe(xb).block_until_ready()  # compile
+    trials = []
+    for _ in range(3):  # best-of-3: contention only ever ADDS time
+        t_p = time.perf_counter()
+        probe(xb).block_until_ready()
+        trials.append(time.perf_counter() - t_p)
+    probe_s = max(min(trials), 1e-4)
+    heavy_iters = max(100, int(probe_iters * target_batch_s / probe_s))
+
+    # Saturation here is depth-dominant: the oversubscribed pod's queue
+    # grows without bound, while mean occupancy blends H's full batches
+    # with L's pre-starvation singletons (~0.33 at phase-2 onset) — an
+    # occupancy-heavy threshold would make the trigger timing bimodal.
+    # min_group_age_s also gives the starvation ~a second to become visible
+    # so the measured recovery reflects a real collapse, not an early exit.
+    policy = FusionPolicy(
+        min_observations=2, merge_cost_s=0.0,
+        split_occupancy=0.3, split_depth=10, split_sustain=3,
+        min_group_age_s=0.5, remerge_backoff_s=300.0,
+    )
+    platform = BACKENDS["orchestrated"](
+        policy, max_batch=4, max_delay_ms=2.0, adaptive=True,
+        fission=True, fission_interval_s=0.1, trough_merges=True, max_defer_s=1.0,
+    )
+
+    def fn_h(ctx, params, x):
+        h = jax.lax.fori_loop(0, heavy_iters, lambda i, v: jnp.tanh(v @ params), x)
+        return ctx.call("L", h)
+
+    def fn_l(ctx, params, x):
+        return jnp.tanh(x @ params)
+
+    try:
+        platform.deploy(FunctionSpec("H", fn_h, wh))
+        platform.deploy(FunctionSpec("L", fn_l, wl))
+        x = jnp.ones((8, 256), jnp.float32)
+
+        # --- phase 1: hot sync chain -> fuse (reconciler lands it in the trough)
+        for _ in range(4):
+            platform.invoke("H", x)
+        platform.merger.wait_idle()
+        merges = [m for m in platform.merger.merge_log if m.healthy]
+        assert merges and set(merges[-1].members) == {"H", "L"}, "phase 1 must fuse {H, L}"
+
+        # warm the fused unit's batch buckets so phase 2 measures traffic, not
+        # compiles, then measure one warm batch to size the overload
+        for name in ("H", "L"):
+            futs = [platform.invoke_async(name, x) for _ in range(4)]
+            for f in futs:
+                f.result()
+        walls = []
+        for _ in range(3):  # best-of-3: an overestimated batch cost would
+            t_m = time.perf_counter()  # undersize rate_h and never saturate
+            futs = [platform.invoke_async("H", x) for _ in range(4)]
+            for f in futs:
+                f.result()
+            walls.append(time.perf_counter() - t_m)
+        capacity_rps = 4.0 / max(min(walls), 1e-3)
+        # heavy_iters calibration pins capacity near 50 rps, so this stays
+        # far below what the submit loop can offer; 300 is a sanity clamp,
+        # not a working bound (a binding cap would defeat the saturation)
+        rate_h = min(300.0, max(20.0, 1.6 * capacity_rps))
+        platform.scheduler.reset_stats()
+
+        # --- phase 2: concurrent direct traffic; H oversubscribes the fused pod
+        done: list[tuple[str, float]] = []
+        done_lock = threading.Lock()
+        failures: list[BaseException] = []
+
+        def stamp(name):
+            def cb(fut):
+                exc = fut.exception()
+                t = time.perf_counter()
+                with done_lock:
+                    if exc is not None:
+                        failures.append(exc)
+                    else:
+                        done.append((name, t))
+            return cb
+
+        pending = []
+        t0 = time.perf_counter()
+        next_h, next_l = 0.0, 0.0
+        # Offer traffic until ~1.5s past the observed split (bounded), so the
+        # post-split recovery window always exists — a split landing near the
+        # end of a fixed window would leave nothing to measure and flake CI.
+        hard_cap = duration + 4.0
+        split_seen_at: float | None = None
+        while True:
+            now = time.perf_counter() - t0
+            if split_seen_at is None and any(s.healthy for s in platform.merger.split_log):
+                split_seen_at = now
+            if now >= hard_cap:
+                break
+            if split_seen_at is not None and now >= max(duration, split_seen_at + 1.5):
+                break
+            if now >= next_h:
+                fut = platform.invoke_async("H", x)
+                fut.add_done_callback(stamp("H"))
+                pending.append(fut)
+                next_h += 1.0 / rate_h
+            if now >= next_l:
+                fut = platform.invoke_async("L", x)
+                fut.add_done_callback(stamp("L"))
+                pending.append(fut)
+                next_l += 1.0 / rate_l
+            time.sleep(max(0.0, min(next_h, next_l) - (time.perf_counter() - t0)))
+        t_submit_end = time.perf_counter()
+
+        hung = 0
+        # ONE shared drain budget: a real hang regression must fail fast
+        # with the churn diagnostic, not serialize a fresh timeout per
+        # stranded future until the CI job itself is killed
+        wait_deadline = time.perf_counter() + 120.0
+        for fut in pending:
+            try:
+                fut.result(timeout=max(0.0, wait_deadline - time.perf_counter()))
+            except FuturesTimeout:
+                hung += 1
+            except Exception:
+                pass  # already counted via the done-callback
+        # done-callbacks fire after result() returns; join on the counter
+        deadline = time.perf_counter() + 5.0
+        while time.perf_counter() < deadline:
+            with done_lock:
+                if len(done) + len(failures) >= len(pending):
+                    break
+            time.sleep(0.001)
+
+        splits = [s for s in platform.merger.split_log if s.healthy]
+        stats = platform.stats()
+        assert splits, "phase 2 must split the saturated fused group"
+        split_t = splits[0].t_completed
+        assert not failures, f"requests failed across epoch transitions: {failures[:3]}"
+        assert hung == 0, f"{hung} requests hung across epoch transitions"
+
+        # L's delivered throughput: starved behind the fused pod's FIFO
+        # before the split, back at its offered rate after it
+        settle = 0.5  # post-split compile/settling excluded from the rate
+        l_pre = [t for (n, t) in done if n == "L" and t0 <= t < split_t]
+        l_post = [t for (n, t) in done if n == "L" and split_t + settle <= t <= t_submit_end]
+        pre_rate = len(l_pre) / max(split_t - t0, 1e-9)
+        post_span = max(t_submit_end - (split_t + settle), 1e-9)
+        post_rate = len(l_post) / post_span
+        # floor the denominator at 1 req/s: total pre-split starvation
+        # (pre_rate 0) is the strongest possible recovery, not a 1e11x ratio
+        recovery = post_rate / max(pre_rate, 1.0)
+        out = {
+            "mode": "churn",
+            "requests": len(pending),
+            "failed": len(failures),
+            "hung": hung,
+            "merge_epoch": merges[-1].epoch,
+            "split_epoch": splits[0].epoch,
+            "split_reason": splits[0].reason,
+            "epoch": stats["lifecycle"]["epoch"],
+            "l_rate_pre_split": round(pre_rate, 1),
+            "l_rate_post_split": round(post_rate, 1),
+            "recovery": round(recovery, 2),
+        }
+        print(f"[churn] merge @epoch {out['merge_epoch']} -> split @epoch {out['split_epoch']} "
+              f"({out['split_reason']})")
+        print(f"[churn] L throughput {pre_rate:.1f} -> {post_rate:.1f} req/s "
+              f"({recovery:.2f}x recovery), {len(pending)} requests, "
+              f"0 failed, 0 hung, final epoch {out['epoch']} "
+              f"(H offered {rate_h:.0f} rps vs ~{capacity_rps:.0f} rps capacity)")
+        assert split_t < t_submit_end, "split must land while traffic is still offered"
+        # the smoke floor is loose (shared CI boxes); the full run is a demo
+        # and must show a real recovery
+        assert recovery >= (1.2 if smoke else 1.3), (
+            f"fission must recover the starved member's throughput (got {recovery:.2f}x)"
+        )
+        return out
+    finally:
+        platform.shutdown()
+
+
 def run_smoke(args) -> int:
     """CI gate: a few seconds of closed-loop traffic on the tiny model. Fails
     (exit 1) when coalescing stops happening or throughput collapses to
@@ -297,6 +509,19 @@ def run_smoke(args) -> int:
     ok = res["throughput_rps"] > 0 and sched.get("mean_batch", 0.0) > 1.05
     if not ok:
         print("[smoke] FAIL: scheduler no longer coalesces concurrent traffic")
+    # churn gate: merge -> saturate -> split under load, no dropped/hung
+    # futures. One retry, same policy as the slow-marked timing tests: on a
+    # 2-core shared box the saturation trigger can flake (~10%) on probe
+    # noise; a real regression fails both attempts.
+    try:
+        run_churn(args, smoke=True)
+    except AssertionError:
+        print("[smoke] churn attempt 1 flaked; retrying once")
+        try:
+            run_churn(args, smoke=True)
+        except AssertionError as exc:
+            print(f"[smoke] FAIL (churn): {exc}")
+            ok = False
     return 0 if ok else 1
 
 
@@ -322,12 +547,19 @@ def main():
     ap.add_argument("--adaptive", action="store_true",
                     help="run the static-vs-adaptive window comparison on bursty + trickle arrivals")
     ap.add_argument("--smoke", action="store_true", help="tiny CI sanity run (exit 1 on regression)")
+    ap.add_argument("--churn", action="store_true",
+                    help="fission demo: merge -> saturate -> split under load (orchestrated)")
     ap.add_argument("--modes", nargs="*", default=["fused-serial", "fused-batched"], choices=MODES)
     ap.add_argument("--json", action="store_true", help="emit machine-readable results")
     args = ap.parse_args()
 
     if args.smoke:
         sys.exit(run_smoke(args))
+    if args.churn:
+        out = run_churn(args)
+        if args.json:
+            print(json.dumps(out, indent=2))
+        return
     if args.adaptive:
         if args.rate <= 0:
             # bursts of --burst whose span outlives the static window: the

@@ -7,9 +7,10 @@ from repro.core.errors import (  # noqa: F401
     ProvuseError,
     UnknownFunctionError,
 )
-from repro.core.function import FunctionInstance, FunctionSpec  # noqa: F401
+from repro.core.function import FunctionInstance, FunctionSpec, InstanceState  # noqa: F401
 from repro.core.handler import FunctionHandler  # noqa: F401
-from repro.core.merger import MergeEvent, Merger  # noqa: F401
+from repro.core.lifecycle import ControlPlane, EpochEvent  # noqa: F401
+from repro.core.merger import GroupRecord, MergeEvent, Merger, SplitEvent  # noqa: F401
 from repro.core.platform import OrchestratedBackend, ProvusePlatform, TinyJaxBackend  # noqa: F401
-from repro.core.policy import FusionDecision, FusionPolicy  # noqa: F401
+from repro.core.policy import FusionDecision, FusionPolicy, SplitDecision  # noqa: F401
 from repro.scheduler import RequestScheduler  # noqa: F401

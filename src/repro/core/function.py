@@ -70,10 +70,17 @@ def _struct_key(tree) -> tuple:
 
 
 class InstanceState(enum.Enum):
-    DEPLOYING = "deploying"
+    """Control-plane lifecycle: PROVISIONING (being built/compiled) ->
+    READY (health-checked, not yet routed) -> SERVING (routed) ->
+    DRAINING (displaced, in-flight requests finishing) -> RETIRED (drained,
+    memory freed). Transitions are driven by the ControlPlane's epoch
+    publishes; see repro.core.lifecycle."""
+
+    PROVISIONING = "provisioning"
     READY = "ready"
+    SERVING = "serving"
     DRAINING = "draining"
-    TERMINATED = "terminated"
+    RETIRED = "retired"
 
 
 @dataclasses.dataclass
@@ -102,6 +109,17 @@ def _finalize_compiled(compiled, t0: float) -> CompiledEntry:
     return CompiledEntry(compiled, temp, code, out, time.perf_counter() - t0)
 
 
+def _footprint_bytes(params, compiled: dict) -> int:
+    """One instance's live footprint: container runtime constant + weights +
+    compiled-program workspace/code/output buffers. Shared by the live
+    `resident_bytes` metric and `retire`'s freed-bytes accounting so the RAM
+    the control plane reports freed is exactly the RAM it was counting."""
+    total = INSTANCE_RUNTIME_OVERHEAD_BYTES + tree_bytes(params)
+    for ce in compiled.values():
+        total += ce.temp_bytes + ce.code_bytes + ce.output_bytes
+    return total
+
+
 class FunctionInstance:
     """One running execution unit hosting >= 1 functions ("members")."""
 
@@ -116,7 +134,7 @@ class FunctionInstance:
         self.instance_id = f"inst{seq}[{'+'.join(sorted(specs))}]"
         self.platform = platform
         self.params: dict[str, Any] = {n: s.params for n, s in specs.items()}
-        self.state = InstanceState.DEPLOYING
+        self.state = InstanceState.PROVISIONING
         self._compiled: dict[tuple, CompiledEntry] = {}
         self._eager_entries: set[tuple] = set()
         self._batch_unsupported: set[tuple] = set()
@@ -131,9 +149,21 @@ class FunctionInstance:
     def mark_ready(self):
         self.state = InstanceState.READY
 
+    def mark_serving(self):
+        """Routed by an epoch publish (called under the routing lock)."""
+        if self.state != InstanceState.RETIRED:
+            self.state = InstanceState.SERVING
+
+    def begin_drain(self):
+        """Displaced by an epoch publish (called under the routing lock, in
+        the same critical section that removed this instance's last route)."""
+        with self._lock:
+            if self.state != InstanceState.RETIRED:
+                self.state = InstanceState.DRAINING
+
     def begin_request(self):
         with self._lock:
-            if self.state not in (InstanceState.READY, InstanceState.DEPLOYING, InstanceState.DRAINING):
+            if self.state == InstanceState.RETIRED:
                 raise InvocationError(f"{self.instance_id} is {self.state.value}")
             self._active += 1
             self._idle_event.clear()
@@ -146,14 +176,27 @@ class FunctionInstance:
 
     def retire(self, timeout: float = 30.0) -> int:
         """Drain in-flight requests, terminate, free weights. Returns bytes
-        freed (the RAM the fusion reclaims)."""
-        self.state = InstanceState.DRAINING
-        self._idle_event.wait(timeout)
-        freed = self.resident_bytes()
-        self.state = InstanceState.TERMINATED
-        self.params = {}
-        self._compiled = {}
-        return freed
+        freed (the RAM the fusion reclaims).
+
+        The RETIRED flip and the in-flight check share the instance lock, so
+        a request that slipped past resolution cannot begin AFTER the params
+        are freed: either it begins while DRAINING (and retire keeps
+        waiting), or it finds RETIRED and raises InvocationError into the
+        platform's re-resolve retry path."""
+        self.begin_drain()
+        if self.state == InstanceState.RETIRED:
+            return 0  # idempotent: already drained and freed
+        deadline = time.perf_counter() + timeout
+        while True:
+            with self._lock:
+                if self._active == 0 or time.perf_counter() >= deadline:
+                    self.state = InstanceState.RETIRED
+                    params, compiled = self.params, self._compiled
+                    self.params = {}
+                    self._compiled = {}
+                    break
+            self._idle_event.wait(max(0.0, deadline - time.perf_counter()))
+        return _footprint_bytes(params, compiled)
 
     # ----------------------------------------------------------- compile
 
@@ -313,13 +356,10 @@ class FunctionInstance:
         """Live footprint of this execution unit: the container runtime
         constant + weights + compiled-program workspace (temp arena),
         generated code, and output staging buffers."""
-        if self.state == InstanceState.TERMINATED:
+        if self.state == InstanceState.RETIRED:
             return 0
-        total = INSTANCE_RUNTIME_OVERHEAD_BYTES + tree_bytes(self.params)
         with self._lock:
-            for ce in self._compiled.values():
-                total += ce.temp_bytes + ce.code_bytes + ce.output_bytes
-        return total
+            return _footprint_bytes(self.params, self._compiled)
 
     def __repr__(self):
         return f"<{self.instance_id} {self.state.value} members={sorted(self.members)}>"

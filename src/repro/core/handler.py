@@ -17,6 +17,7 @@ The handler also:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 import threading
@@ -26,6 +27,33 @@ from typing import Any, Callable
 from repro.core.billing import BillingMeter, InvocationRecord
 
 _RECENT_WAITS = 64  # bounded per-edge wait history for the tail estimate
+_RECENT_TS = 256  # bounded per-edge / per-function timestamp history: the
+# fission regret path must see whether an edge or a member is hot NOW —
+# all-time counters stay "hot" forever after traffic moves away
+RECENT_WINDOW_S = 5.0  # default lookback for the windowed rates
+
+
+def _windowed_rate(ts, window_s: float, now: float) -> float:
+    """Events/s over the trailing window from a bounded timestamp deque.
+    When the deque overflowed INSIDE the window (high-rate source: 256
+    entries can span well under 5s), the denominator is the span the deque
+    actually covers — dividing the capped count by the full window would
+    clamp every hot source to maxlen/window_s (~51 req/s) and compress the
+    rate ratios the divergence check compares."""
+    if not ts:
+        return 0.0
+    cutoff = now - window_s
+    count = sum(1 for t in ts if t >= cutoff)
+    if count == 0:
+        return 0.0
+    span = window_s
+    maxlen = getattr(ts, "maxlen", None)
+    if maxlen is not None and len(ts) == maxlen and ts[0] >= cutoff:
+        # ONLY an overflowed deque truncates the window. Shortening the span
+        # just because the oldest retained sample is recent would turn a
+        # function's first two requests into a thousands-req/s reading.
+        span = max(now - ts[0], 1e-6)
+    return count / span
 
 
 @dataclasses.dataclass
@@ -38,6 +66,14 @@ class EdgeStats:
         # Deliberately NOT a dataclass field: asdict()/replace() snapshots
         # stay plain scalars (JSON-serializable stats, cheap copies).
         self.recent_waits: list[float] = []
+        self.recent_ts: collections.deque[float] = collections.deque(maxlen=_RECENT_TS)
+
+    def recent_sync_rate(self, window_s: float = RECENT_WINDOW_S, now: float | None = None) -> float:
+        """Sync observations per second over the trailing ``window_s`` — the
+        *windowed* view of edge heat: a chain whose traffic moved away reads
+        ~0 here while sync_count stays frozen at its all-time total."""
+        now = time.perf_counter() if now is None else now
+        return _windowed_rate(self.recent_ts, window_s, now)
 
     @property
     def mean_wait_s(self) -> float:
@@ -71,6 +107,14 @@ class FunctionHandler:
         self.on_fusion_candidate = on_fusion_candidate
         self.edges: dict[tuple[str, str], EdgeStats] = {}
         self.canaries: dict[str, tuple] = {}
+        # Per-function recent EXTERNAL demand timestamps (stamped by the
+        # platform's client entry points, NOT by internal chain dispatches or
+        # canary replays): the fission policy's traffic-divergence check
+        # reads the direct demand a member sees RIGHT NOW. Counting internal
+        # dispatches here would poison the pre-merge baseline — a chain
+        # callee served by inlined calls post-merge would look like a member
+        # whose clients left, and every healthy chain would split.
+        self._recent_calls: dict[str, collections.deque] = {}
         self._lock = threading.Lock()
         self._tls = threading.local()
 
@@ -139,6 +183,7 @@ class FunctionHandler:
                 st.sync_count += 1
                 st.total_wait_s += wait_s
                 st.recent_waits.append(wait_s)
+                st.recent_ts.append(time.perf_counter())
                 if len(st.recent_waits) > _RECENT_WAITS:
                     del st.recent_waits[0]
                 notify = True
@@ -147,12 +192,54 @@ class FunctionHandler:
         if notify and self.on_fusion_candidate is not None:
             self.on_fusion_candidate(caller, callee)
 
+    def note_demand(self, function: str) -> None:
+        """One unit of direct external demand (a client invoke/invoke_async)
+        landed on ``function`` — the platform's entry points call this;
+        internal function-to-function dispatches and control-plane canary
+        replays deliberately do not."""
+        with self._lock:
+            recent = self._recent_calls.get(function)
+            if recent is None:
+                recent = self._recent_calls[function] = collections.deque(maxlen=_RECENT_TS)
+            recent.append(time.perf_counter())
+
+    def recent_rate(self, function: str, window_s: float = RECENT_WINDOW_S) -> float:
+        """Direct external demand (requests/s) on this function over the
+        trailing window — the per-member signal the fission divergence check
+        compares against its commit-time baseline."""
+        now = time.perf_counter()
+        with self._lock:
+            recent = self._recent_calls.get(function)
+            return _windowed_rate(recent, window_s, now) if recent else 0.0
+
+    def recent_inbound_rate(self, function: str, exclude=frozenset(),
+                            window_s: float = RECENT_WINDOW_S) -> float:
+        """Windowed rate of synchronous dispatches INTO ``function`` from
+        callers outside ``exclude`` — demand a fused member receives from
+        other execution units, invisible to `recent_rate` (eager-glue calls
+        are not client traffic). The fission divergence check sums this with
+        the direct rate so a member fed by an external caller never reads
+        cold. Calls from inside ``exclude`` (the member's own fusion group)
+        are inlined post-merge and must not count either way."""
+        now = time.perf_counter()
+        with self._lock:
+            return sum(
+                st.recent_sync_rate(window_s, now=now)
+                for (caller, callee), st in self.edges.items()
+                if callee == function and caller not in exclude
+            )
+
     def sync_edges(self) -> dict[tuple[str, str], EdgeStats]:
         with self._lock:
             return {k: dataclasses.replace(v) for k, v in self.edges.items() if v.sync_count}
 
     def stats(self) -> dict:
+        now = time.perf_counter()
         with self._lock:
             return {
-                f"{a}->{b}": dataclasses.asdict(v) for (a, b), v in sorted(self.edges.items())
+                f"{a}->{b}": {
+                    **dataclasses.asdict(v),
+                    "recent_sync_rate": round(v.recent_sync_rate(now=now), 3),
+                }
+                for (a, b), v in sorted(self.edges.items())
             }

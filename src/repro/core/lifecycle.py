@@ -1,0 +1,289 @@
+"""The control plane: instance lifecycle + generation-versioned routing epochs.
+
+Every routing mutation the platform performs — deploy, merge swap, redeploy,
+split (fission) — is an *epoch transition*: an atomic publish against the
+routing table that, under ONE lock,
+
+  1. flips every affected route to its new instance,
+  2. marks the newly-routed instances SERVING,
+  3. marks displaced instances that are no longer routed anywhere DRAINING,
+
+then (outside the lock) drains and retires the displaced instances. Because
+steps 1–3 share the routing table's lock with ``resolve``, a concurrent
+request can never resolve a DRAINING instance: an instance only enters
+DRAINING in the same critical section that removes its last route.
+
+The instance state machine (:class:`repro.core.function.InstanceState`):
+
+    PROVISIONING -> READY -> SERVING -> DRAINING -> RETIRED
+
+PROVISIONING while the unit is being built/compiled, READY once health-checked
+but not yet routed, SERVING while routed, DRAINING after displacement while
+in-flight requests finish, RETIRED once drained and its memory freed.
+
+The control plane also owns the *reconciler*: a background thread that
+executes queued transitions (deferred merges, fission splits) during observed
+traffic troughs — the scheduler's arrival-gap EWMAs say when the platform is
+quiet enough that a recompile stall lands on nobody (ProFaaStinate's
+deferral, applied to control-plane work). Every queued transition carries a
+``max_defer_s`` deadline so a platform that never troughs still converges.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import TYPE_CHECKING, Callable
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.function import FunctionInstance
+
+_EVENT_LOG_MAX = 512  # bounded epoch history (stats() reports the tail)
+
+
+@dataclasses.dataclass
+class EpochEvent:
+    """One routing-epoch transition, as recorded in ``platform.stats()``."""
+
+    epoch: int
+    kind: str  # "deploy" | "merge" | "split" | "redeploy"
+    names: tuple[str, ...]
+    reason: str = ""
+    retired: tuple[str, ...] = ()  # instance_ids drained + retired by this epoch
+    freed_bytes: int = 0
+    t_completed: float = 0.0
+    deferred_s: float = 0.0  # how long the reconciler held it for a trough
+
+
+@dataclasses.dataclass
+class _QueuedTransition:
+    action: Callable[[], None]
+    kind: str
+    names: tuple[str, ...]
+    reason: str
+    t_enqueued: float
+    deadline: float
+
+
+class ControlPlane:
+    """Owns epoch transitions, instance lifecycle, and the reconciler.
+
+    ``trough_quiet_s`` / ``trough_gap_mult`` parameterize the scheduler's
+    trough test (see :meth:`RequestScheduler.is_trough`); ``max_defer_s`` is
+    the default deadline after which a queued transition runs trough or not.
+    """
+
+    def __init__(self, platform, registry, *, tick_s: float = 0.02,
+                 max_defer_s: float = 1.0, trough_quiet_s: float = 0.01,
+                 trough_gap_mult: float = 3.0, drain_timeout_s: float = 0.5):
+        self.platform = platform
+        self.registry = registry
+        self.tick_s = tick_s
+        self.max_defer_s = max_defer_s
+        self.drain_timeout_s = drain_timeout_s
+        self.trough_quiet_s = trough_quiet_s
+        self.trough_gap_mult = trough_gap_mult
+        self.events: collections.deque[EpochEvent] = collections.deque(maxlen=_EVENT_LOG_MAX)
+        self._events_lock = threading.Lock()
+        self._queue: collections.deque[_QueuedTransition] = collections.deque()
+        self._queue_lock = threading.Lock()
+        self._idle_cv = threading.Condition(self._queue_lock)
+        self._executing = 0
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._tick_hooks: list[Callable[[], None]] = []
+
+    # --------------------------------------------------------------- epochs
+
+    @property
+    def epoch(self) -> int:
+        """Current routing generation (bumps only on actual route changes)."""
+        return self.registry.version
+
+    def publish(self, routes: dict[str, "FunctionInstance"], *, kind: str,
+                reason: str = "", expect: dict[str, "FunctionInstance"] | None = None,
+                deferred_s: float = 0.0) -> EpochEvent | None:
+        """Atomically publish a new routing epoch.
+
+        ``routes`` maps every affected function name to the instance that will
+        serve it from this epoch on. ``expect`` (optional) is a compare-and-swap
+        guard: if any named route no longer points at the expected instance —
+        another transition raced this one — nothing is published and ``None``
+        is returned so the caller can abort its transaction.
+
+        Displaced instances that end up routed nowhere are marked DRAINING
+        inside the publish critical section (so a concurrent ``resolve`` can
+        never return a DRAINING instance) and then drained + retired outside
+        the lock. Returns the recorded :class:`EpochEvent`.
+        """
+        platform = self.platform
+        registry = self.registry
+        with registry.mutex:
+            if expect is not None:
+                for name, inst in expect.items():
+                    if registry.get(name) is not inst:
+                        return None
+            displaced = registry.publish(routes)
+            for inst in {id(i): i for i in routes.values()}.values():
+                inst.mark_serving()
+            still_routed = {id(i) for i in registry.live_instances()}
+            doomed = [
+                inst
+                for inst in {id(v): v for v in displaced.values()}.values()
+                if id(inst) not in still_routed
+            ]
+            for inst in doomed:
+                inst.begin_drain()
+            epoch = registry.version
+        # Drain + retirement happen OUTSIDE the routing lock. Two barriers
+        # compose here: queued scheduler requests re-resolve the NEW routes at
+        # dispatch (nothing queued can reach a displaced instance), and each
+        # displaced instance's retire() waits out the requests already inside
+        # it. A scheduler-wide quiesce would be wrong here — under saturation
+        # (exactly when fission publishes) some batch is ALWAYS in flight, and
+        # an epoch that waits for a globally empty pipe never lands.
+        freed = 0
+        for inst in doomed:
+            freed += platform.retire_instance(inst)
+        event = EpochEvent(
+            epoch=epoch, kind=kind, names=tuple(sorted(routes)), reason=reason,
+            retired=tuple(i.instance_id for i in doomed), freed_bytes=freed,
+            t_completed=time.perf_counter(), deferred_s=round(deferred_s, 4),
+        )
+        with self._events_lock:
+            self.events.append(event)
+        return event
+
+    # ----------------------------------------------------------- reconciler
+
+    def enqueue(self, action: Callable[[], None], *, kind: str, names=(),
+                reason: str = "", max_defer_s: float | None = None) -> None:
+        """Queue a transition for the reconciler: it executes at the next
+        observed traffic trough, or unconditionally once ``max_defer_s`` has
+        elapsed — control-plane stalls land in quiet gaps when quiet gaps
+        exist, and bounded-late otherwise."""
+        defer = self.max_defer_s if max_defer_s is None else max_defer_s
+        now = time.perf_counter()
+        item = _QueuedTransition(action, kind, tuple(names), reason, now, now + defer)
+        with self._queue_lock:
+            self._queue.append(item)
+        self._ensure_thread()
+        self._wake.set()
+
+    def add_tick_hook(self, hook: Callable[[], None]) -> None:
+        """Run ``hook`` on every reconciler tick (fission evaluation lives
+        here — regret detection is control-plane work, never data-path)."""
+        self._tick_hooks.append(hook)
+        self._ensure_thread()
+
+    def queued_transitions(self) -> int:
+        with self._queue_lock:
+            return len(self._queue)
+
+    def is_trough(self) -> bool:
+        scheduler = getattr(self.platform, "scheduler", None)
+        if scheduler is None:
+            return True
+        return scheduler.is_trough(
+            min_quiet_s=self.trough_quiet_s, gap_mult=self.trough_gap_mult
+        )
+
+    def run_pending(self, *, force: bool = False) -> int:
+        """Execute queued transitions whose moment has come (trough observed
+        or deadline passed; ``force=True`` runs everything now). Returns the
+        number executed. The reconciler thread calls this each tick; tests
+        and synchronous platforms may call it directly."""
+        ran = 0
+        while True:
+            now = time.perf_counter()
+            with self._queue_lock:
+                if not self._queue:
+                    return ran
+                head = self._queue[0]
+                due = force or now >= head.deadline
+                if not due:
+                    # trough test outside this lock would race other pops;
+                    # it is cheap (scheduler snapshot) so keep it inline
+                    due = self.is_trough()
+                if not due:
+                    return ran
+                self._queue.popleft()
+                self._executing += 1
+            try:
+                # drain barrier before a deferred transition: wait (bounded)
+                # for the affected functions' in-flight batches to clear so
+                # the control-plane stall starts on a drained pipe — at a
+                # trough this returns immediately, past the deadline it gives
+                # up after drain_timeout_s rather than stall the transition
+                scheduler = getattr(self.platform, "scheduler", None)
+                if scheduler is not None and head.names:
+                    scheduler.quiesce(
+                        head.names, timeout=self.drain_timeout_s, include_queued=False
+                    )
+                head.action()
+            except Exception:  # noqa: BLE001 — a failed transition must not
+                pass  # kill the reconciler; the action logs its own outcome
+            finally:
+                with self._idle_cv:
+                    self._executing -= 1
+                    self._idle_cv.notify_all()
+            ran += 1
+
+    def wait_idle(self, timeout: float = 120.0) -> bool:
+        """Block until no transition is queued OR executing (the reconciler
+        may have popped one and be mid-build). Returns False on timeout."""
+        deadline = time.perf_counter() + timeout
+        with self._idle_cv:
+            while self._queue or self._executing:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    return False
+                self._idle_cv.wait(min(remaining, 0.05))
+        return True
+
+    def _ensure_thread(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            return
+        self._thread = threading.Thread(
+            target=self._loop, daemon=True, name="lifecycle-reconciler"
+        )
+        self._thread.start()
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            self._wake.wait(timeout=self.tick_s)
+            self._wake.clear()
+            if self._stop.is_set():
+                return
+            for hook in list(self._tick_hooks):
+                try:
+                    hook()
+                except Exception:  # noqa: BLE001
+                    pass
+            self.run_pending()
+
+    def shutdown(self, timeout: float = 5.0) -> None:
+        self._stop.set()
+        self._wake.set()
+        th = self._thread
+        if th is not None and th.is_alive():
+            th.join(timeout)
+
+    # -------------------------------------------------------------- metrics
+
+    def stats(self) -> dict:
+        with self._events_lock:
+            events = list(self.events)[-32:]
+        with self.registry.mutex:
+            states = {
+                inst.instance_id: inst.state.value
+                for inst in self.registry.live_instances()
+            }
+        return {
+            "epoch": self.epoch,
+            "instance_states": states,
+            "queued_transitions": self.queued_transitions(),
+            "events": [dataclasses.asdict(e) for e in events],
+        }

@@ -39,6 +39,37 @@ class MergeEvent:
     # health check — each replay is one extra (control-plane) invocation on
     # the billing meter, so tests can account for merge traffic exactly.
     checked_members: tuple[str, ...] = ()
+    epoch: int = 0  # routing epoch this merge published (0: never swapped)
+
+
+@dataclasses.dataclass
+class SplitEvent:
+    """One fission transaction: a fused group rebuilt as per-partition units."""
+
+    t_completed: float
+    members: tuple[str, ...]
+    partition: tuple[tuple[str, ...], ...]
+    healthy: bool
+    reason: str = ""
+    checked_members: tuple[str, ...] = ()
+    epoch: int = 0
+    build_s: float = 0.0
+
+
+@dataclasses.dataclass
+class GroupRecord:
+    """Control-plane memory of one committed fusion group — everything the
+    regret check needs to decide the merge should be undone."""
+
+    members: frozenset[str]
+    instance: FunctionInstance
+    committed_t: float
+    epoch: int
+    # Pre-merge per-member tails/rates snapshotted at commit: the regret
+    # comparison is always against what the platform looked like BEFORE it
+    # fused, never against an aspiration.
+    baseline_p95_ms: dict[str, float] = dataclasses.field(default_factory=dict)
+    baseline_rates: dict[str, float] = dataclasses.field(default_factory=dict)
 
 
 def _allclose_tree(a, b, rtol: float, atol: float) -> bool:
@@ -76,6 +107,16 @@ class Merger:
         self._failed_groups: set[frozenset[str]] = set()
         self._lock = threading.Lock()
         self._threads: list[threading.Thread] = []
+        self.split_log: list[SplitEvent] = []
+        self._groups: dict[frozenset[str], GroupRecord] = {}
+        # (member set, partition) pairs whose rebuilt units FAILED the split
+        # health check. Like _failed_groups for merges: the rebuilt programs
+        # are pure functions of the specs, so retrying the SAME partition
+        # fails identically — without this, a persistent regret signal would
+        # rebuild + recompile + re-check the doomed partition on every
+        # reconciler tick. Keyed per partition: a different partition of the
+        # same group builds different units and deserves its own attempt.
+        self._failed_splits: set[tuple[frozenset[str], frozenset[frozenset[str]]]] = set()
 
     # ------------------------------------------------------------ entry
 
@@ -108,24 +149,73 @@ class Merger:
             if frozenset(decision.group) in self._failed_groups:
                 return  # another edge already proved this exact unit unhealthy
             self._inflight.add((caller, callee))
-        if self.async_build:
+        lifecycle = getattr(self.platform, "lifecycle", None)
+        if lifecycle is not None and getattr(self.platform, "trough_merges", False):
+            # Deferred merge: the reconciler runs the build+swap at the next
+            # observed traffic trough (or after its max-defer deadline), so
+            # the recompile stall lands in a quiet gap instead of mid-burst.
+            t_queued = time.perf_counter()
+            lifecycle.enqueue(
+                lambda: self._do_merge(caller, callee, decision.group,
+                                       deferred_s=time.perf_counter() - t_queued,
+                                       revalidate=True),
+                kind="merge", names=tuple(sorted(decision.group)),
+                reason=decision.reason,
+            )
+        elif self.async_build:
             th = threading.Thread(target=self._do_merge, args=(caller, callee, decision.group), daemon=True)
-            self._threads.append(th)
+            with self._lock:
+                # prune-on-submit keeps the list bounded under sustained
+                # async_build traffic; append under the SAME lock wait_idle
+                # snapshots under (append/prune used to race it)
+                self._threads = [t for t in self._threads if t.is_alive()]
+                self._threads.append(th)
             th.start()
         else:
             self._do_merge(caller, callee, decision.group)
 
     def wait_idle(self, timeout: float = 120.0) -> None:
-        for th in self._threads:
+        lifecycle = getattr(self.platform, "lifecycle", None)
+        if lifecycle is not None and getattr(self.platform, "trough_merges", False):
+            # run anything still queued now, then wait out transitions the
+            # reconciler already popped and is mid-way through executing
+            lifecycle.run_pending(force=True)
+            lifecycle.wait_idle(timeout)
+        with self._lock:
+            threads = list(self._threads)
+        for th in threads:
             th.join(timeout)
-        self._threads = [t for t in self._threads if t.is_alive()]
+        with self._lock:
+            self._threads = [t for t in self._threads if t.is_alive()]
 
     # ------------------------------------------------------------ merge
 
-    def _do_merge(self, caller: str, callee: str, group: frozenset[str]) -> None:
+    def _do_merge(self, caller: str, callee: str, group: frozenset[str],
+                  deferred_s: float = 0.0, revalidate: bool = False) -> None:
         t0 = time.perf_counter()
         platform = self.platform
         try:
+            if revalidate:
+                # Deferred merges re-run the decision at execution time: up
+                # to max_defer_s passed since decide(), during which a split
+                # may have put these edges into remerge backoff or the group
+                # may have changed shape — publishing the stale group would
+                # bypass the flap hysteresis and desync policy from routing.
+                stats = platform.handler.edges.get((caller, callee))
+                if stats is None:
+                    return
+                decision = self.policy.decide(
+                    caller, callee, stats,
+                    platform.spec_of(caller).trust_domain,
+                    platform.spec_of(callee).trust_domain,
+                )
+                if not decision.fuse:
+                    return
+                with self._lock:
+                    if frozenset(decision.group) in self._failed_groups:
+                        return  # the (possibly re-shaped) group is already
+                        # proven unhealthy — don't pay the build again
+                group = decision.group
             specs = {name: platform.spec_of(name) for name in group}
             merged = FunctionInstance(specs, platform)
             platform.attach_instance(merged)
@@ -160,23 +250,230 @@ class Merger:
                 )
                 return
 
-            merged.mark_ready()
-            displaced = platform.registry.swap(group, merged)
-            self.policy.commit(caller, callee)
+            # --- pre-merge baseline snapshot: what regret will compare against ---
+            scheduler = getattr(platform, "scheduler", None)
+            baseline_p95 = {
+                m: (scheduler.recent_p95_ms(m) if scheduler is not None else 0.0)
+                for m in group
+            }
+            baseline_rates = {m: self._member_demand(m, group) for m in group}
 
-            # --- retire originals no longer routed anywhere ---
-            still_live = {id(i) for i in platform.registry.live_instances()}
-            freed = 0
-            for inst in {id(v): v for v in displaced.values()}.values():
-                if id(inst) not in still_live and inst is not merged:
-                    freed += platform.retire_instance(inst)
+            merged.mark_ready()
+            # Epoch transaction: atomic route publish + lifecycle transitions
+            # (merged -> SERVING, unrouted originals -> DRAINING under the
+            # routing lock), then drain + retire outside it.
+            event = platform.lifecycle.publish(
+                {name: merged for name in group}, kind="merge",
+                reason=f"fused {caller}->{callee}", deferred_s=deferred_s,
+            )
+            self.policy.commit(caller, callee)
+            freed = event.freed_bytes
+
+            with self._lock:
+                # the new group subsumes any committed subgroup's record (its
+                # instance was displaced by this very publish)
+                for members in [k for k in self._groups if k <= frozenset(group)]:
+                    del self._groups[members]
+                self._groups[frozenset(group)] = GroupRecord(
+                    members=frozenset(group), instance=merged,
+                    committed_t=time.perf_counter(), epoch=event.epoch,
+                    baseline_p95_ms=baseline_p95, baseline_rates=baseline_rates,
+                )
 
             build_s = time.perf_counter() - t0
             self.policy.feedback_merge_cost(build_s)
             self.merge_log.append(
                 MergeEvent(time.perf_counter(), tuple(sorted(group)), freed, build_s, True,
-                           checked_members=tuple(checked))
+                           checked_members=tuple(checked), epoch=event.epoch)
             )
         finally:
             with self._lock:
                 self._inflight.discard((caller, callee))
+
+    # ------------------------------------------------------------ fission
+
+    def committed_groups(self) -> list[GroupRecord]:
+        with self._lock:
+            return list(self._groups.values())
+
+    def _member_demand(self, member: str, group) -> float:
+        """Demand one fused member sees: direct client traffic plus sync
+        dispatches from units OUTSIDE the group (calls from inside the group
+        are inlined post-merge and excluded both pre and post so baseline
+        and current measure the same thing)."""
+        handler = self.platform.handler
+        return handler.recent_rate(member) + handler.recent_inbound_rate(
+            member, exclude=group
+        )
+
+    def evaluate_splits(self) -> list[SplitEvent]:
+        """Regret pass over every committed fusion group (reconciler-tick
+        work, never data-path): gather live signals, ask the policy's
+        ``decide_split``, and execute any split it orders. Returns the split
+        events performed."""
+        platform = self.platform
+        events: list[SplitEvent] = []
+        for rec in self.committed_groups():
+            routed = {m: platform.registry.get(m) for m in rec.members}
+            if any(inst is not rec.instance for inst in routed.values()):
+                # superseded by a later merge or redeploy — drop the record
+                with self._lock:
+                    if self._groups.get(rec.members) is rec:
+                        del self._groups[rec.members]
+                continue
+            signals_fn = getattr(platform, "scheduler_signals", None)
+            signals = signals_fn(tuple(sorted(rec.members))) if signals_fn else None
+            scheduler = getattr(platform, "scheduler", None)
+            rates = {m: self._member_demand(m, rec.members) for m in rec.members}
+            current_p95 = max(
+                (scheduler.recent_p95_ms(m) for m in rec.members), default=0.0
+            ) if scheduler is not None else 0.0
+            decision = self.policy.decide_split(
+                rec.members,
+                signals=signals,
+                member_rates=rates,
+                baseline_rates=rec.baseline_rates,
+                baseline_p95_ms=max(rec.baseline_p95_ms.values(), default=0.0),
+                current_p95_ms=current_p95,
+                age_s=time.perf_counter() - rec.committed_t,
+            )
+            if decision.split:
+                event = self.split(rec.members, decision.partition, reason=decision.reason)
+                if event is not None:
+                    events.append(event)
+        return events
+
+    def split(self, members, partition, reason: str = "") -> SplitEvent | None:
+        """Fission transaction: rebuild the fused group as one execution unit
+        per partition cell, health-check each rebuilt unit against the fused
+        unit's canaries, and epoch-swap them in (retiring the fused unit).
+
+        Returns the SplitEvent, or None when the group is no longer routed as
+        expected (a concurrent merge/redeploy won the race — the publish is
+        guarded by compare-and-swap, so a stale split aborts cleanly)."""
+        t0 = time.perf_counter()
+        platform = self.platform
+        members = frozenset(members)
+        cells = [frozenset(c) for c in partition]
+        covered = frozenset().union(*cells) if cells else frozenset()
+        if covered != members or sum(len(c) for c in cells) != len(members):
+            raise ValueError(f"partition {cells!r} does not partition {sorted(members)!r}")
+        if len(cells) < 2:
+            return None  # a single cell is not a split
+        with self._lock:
+            if (members, frozenset(cells)) in self._failed_splits:
+                return None  # this exact partition already proved unhealthy
+            rec = self._groups.get(members)
+        fused = rec.instance if rec is not None else platform.registry.get(next(iter(members)))
+        if fused is None or any(platform.registry.get(m) is not fused for m in members):
+            return None  # group already superseded
+
+        if not any(platform.handler.canary(m) is not None for m in members):
+            # nothing to verify against — refuse before paying for the
+            # rebuilds (may retry once traffic has produced a canary)
+            event = SplitEvent(
+                time.perf_counter(), tuple(sorted(members)),
+                tuple(tuple(sorted(c)) for c in cells), False,
+                "no canary traffic captured", (), build_s=time.perf_counter() - t0,
+            )
+            self.split_log.append(event)
+            return event
+
+        units: dict[frozenset, FunctionInstance] = {}
+        try:
+            for cell in cells:
+                specs = {m: platform.spec_of(m) for m in cell}
+                unit = FunctionInstance(specs, platform)
+                platform.attach_instance(unit)
+                units[cell] = unit
+
+            # --- health check: each rebuilt unit must reproduce the fused
+            # unit's outputs on the captured canaries (the fused unit IS the
+            # live reference — it is what clients have been getting answers
+            # from). Holding a request slot on the fused unit keeps a
+            # concurrent epoch transition from retiring it (and freeing its
+            # params) mid-check.
+            fused.begin_request()
+            healthy = True
+            checked: list[str] = []
+            try:
+                for cell in cells:
+                    for m in sorted(cell):
+                        canary = platform.handler.canary(m)
+                        if canary is None:
+                            continue
+                        if units[cell].get_compiled(m, canary) is None:
+                            # Boundary entry: replaying it would dispatch the
+                            # outbound call through live routing — i.e. queue
+                            # behind the saturated fused pod this split exists
+                            # to relieve, blocking the reconciler for the
+                            # backlog's duration and polluting edge stats and
+                            # billing with control-plane traffic. Co-members'
+                            # self-contained entries cover the rebuilt units;
+                            # compiling it here still pre-warms the post-split
+                            # eager fallback's entry cache.
+                            continue
+                        ref = fused.execute(m, canary)
+                        got = units[cell].execute(m, canary)
+                        checked.append(m)
+                        if not _allclose_tree(ref, got, self.health_rtol, self.health_atol):
+                            healthy = False
+                            break
+                    if not healthy:
+                        break
+            finally:
+                fused.end_request()
+            if not healthy or not checked:
+                for unit in units.values():
+                    platform.detach_instance(unit)
+                if not healthy:  # deterministic: this partition cannot pass
+                    with self._lock:
+                        self._failed_splits.add((members, frozenset(cells)))
+                event = SplitEvent(
+                    time.perf_counter(), tuple(sorted(members)),
+                    tuple(tuple(sorted(c)) for c in cells), False,
+                    "health check failed" if not healthy else "no self-contained entry to verify",
+                    tuple(checked), build_s=time.perf_counter() - t0,
+                )
+                self.split_log.append(event)
+                return event
+
+            for unit in units.values():
+                unit.mark_ready()
+            routes = {m: units[cell] for cell in cells for m in cell}
+            epoch_event = platform.lifecycle.publish(
+                routes, kind="split", reason=reason,
+                expect={m: fused for m in members},
+            )
+            if epoch_event is None:
+                # routing moved underneath us (raced a merge/redeploy): abort
+                for unit in units.values():
+                    platform.detach_instance(unit)
+                return None
+        except BaseException:
+            # an unexpected failure (fused unit retired mid-check, compile
+            # error) must not leak attached units — on the orchestrated
+            # backend each would pin a worker thread forever
+            for unit in units.values():
+                platform.detach_instance(unit)
+            raise
+        self.policy.dissolve(cells)
+        with self._lock:
+            self._groups.pop(members, None)
+            # multi-member cells remain committed groups in their own right:
+            # their members still share one unit and can split again later
+            for cell in cells:
+                if len(cell) > 1:
+                    self._groups[cell] = GroupRecord(
+                        members=cell, instance=units[cell],
+                        committed_t=time.perf_counter(), epoch=epoch_event.epoch,
+                        baseline_p95_ms={m: v for m, v in (rec.baseline_p95_ms if rec else {}).items() if m in cell},
+                        baseline_rates={m: v for m, v in (rec.baseline_rates if rec else {}).items() if m in cell},
+                    )
+        event = SplitEvent(
+            time.perf_counter(), tuple(sorted(members)),
+            tuple(tuple(sorted(c)) for c in cells), True, reason,
+            tuple(checked), epoch=epoch_event.epoch, build_s=time.perf_counter() - t0,
+        )
+        self.split_log.append(event)
+        return event

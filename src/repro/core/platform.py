@@ -29,6 +29,7 @@ from repro.core.context import AbstractContext
 from repro.core.errors import DeploymentError, InvocationError, UnknownFunctionError
 from repro.core.function import FunctionInstance, FunctionSpec, InstanceState, _struct_key, _structs_of
 from repro.core.handler import FunctionHandler
+from repro.core.lifecycle import ControlPlane
 from repro.core.merger import Merger
 from repro.core.policy import FusionPolicy
 from repro.core.registry import RoutingTable
@@ -52,11 +53,20 @@ class ProvusePlatform:
     def __init__(self, policy: FusionPolicy | None = None, *, async_build: bool = False,
                  health_rtol: float = 2e-2, health_atol: float = 1e-2,
                  max_batch: int = 8, max_delay_ms: float = 2.0,
-                 adaptive: bool = False, adaptive_config=None):
+                 adaptive: bool = False, adaptive_config=None,
+                 fission: bool = False, fission_interval_s: float = 0.25,
+                 trough_merges: bool = False, max_defer_s: float = 1.0):
         self.registry = RoutingTable()
         self.meter = BillingMeter()
         self.policy = policy or FusionPolicy()
         self.handler = FunctionHandler(self.meter, on_fusion_candidate=self._on_candidate)
+        # Control plane: every deploy/merge/split/redeploy is an epoch
+        # transition published through here; the reconciler thread (started
+        # lazily) executes deferred transitions during traffic troughs.
+        self.lifecycle = ControlPlane(self, self.registry, max_defer_s=max_defer_s)
+        # trough_merges: promoted merges queue on the reconciler and run at
+        # the next observed trough instead of stalling live traffic.
+        self.trough_merges = trough_merges
         self.merger = Merger(self, self.policy, async_build=async_build,
                              health_rtol=health_rtol, health_atol=health_atol)
         self.scheduler = RequestScheduler(
@@ -64,6 +74,15 @@ class ProvusePlatform:
             adaptive=adaptive, adaptive_config=adaptive_config,
             on_request_done=lambda name, lat_s, k: self.meter.observe_latency(name, lat_s),
         )
+        # fission: the reconciler periodically runs the regret check
+        # (Merger.evaluate_splits) so a merge the live signals say was a
+        # mistake gets reversed — see FusionPolicy.decide_split. Registered
+        # after the scheduler exists: the hook starts the reconciler thread,
+        # which reads scheduler signals.
+        self._fission_interval_s = fission_interval_s
+        self._last_fission_eval = 0.0
+        if fission:
+            self.lifecycle.add_tick_hook(self._fission_tick)
         self._specs: dict[str, FunctionSpec] = {}
         self._shape_cache: dict[tuple, Any] = {}
         self._shape_stack: list[str] = []
@@ -87,7 +106,7 @@ class ProvusePlatform:
         instance = FunctionInstance({spec.name: spec}, self)
         self.attach_instance(instance)
         instance.mark_ready()
-        self.registry.register(spec.name, instance)
+        self.lifecycle.publish({spec.name: instance}, kind="deploy", reason="deploy")
         return instance
 
     def spec_of(self, name: str) -> FunctionSpec:
@@ -203,6 +222,7 @@ class ProvusePlatform:
     def invoke(self, name: str, *args):
         """External (client) invocation — serial path."""
         self.handler.record_canary(name, args)
+        self.handler.note_demand(name)
         t0 = time.perf_counter()
         out = self._invoke_with_retry(name, args)
         self.meter.observe_latency(name, time.perf_counter() - t0)
@@ -214,6 +234,7 @@ class ProvusePlatform:
         ``priority=PRIORITY_HIGH`` requests jump queued normal traffic and
         close an open batching window early (SLO admission)."""
         self.handler.record_canary(name, args)
+        self.handler.note_demand(name)
         return self.scheduler.submit(name, args, priority=priority)
 
     def scheduler_signals(self, names):
@@ -239,7 +260,19 @@ class ProvusePlatform:
         fresh = FunctionInstance({name: spec}, self)
         self.attach_instance(fresh)
         fresh.mark_ready()
-        self.registry.register(name, fresh)
+        # Epoch transition: the displaced (dead-routed) instance is drained
+        # AND retired — before the control plane owned this, the old worker
+        # thread stayed alive and ram_bytes() kept counting the corpse.
+        self.lifecycle.publish({name: fresh}, kind="redeploy", reason=f"redeploy {name}")
+
+    def _fission_tick(self) -> None:
+        """Reconciler-tick hook: rate-limited regret evaluation over the
+        committed fusion groups (control-plane work, off the data path)."""
+        now = time.perf_counter()
+        if now - self._last_fission_eval < self._fission_interval_s:
+            return
+        self._last_fission_eval = now
+        self.merger.evaluate_splits()
 
     def remote_call(self, caller_instance: FunctionInstance, caller_fn: str, callee: str, args: tuple):
         """Blocking function-to-function dispatch (runs inside the caller's
@@ -273,9 +306,23 @@ class ProvusePlatform:
                     "freed_bytes": e.freed_bytes,
                     "build_s": round(e.build_s, 4),
                     "healthy": e.healthy,
+                    "epoch": e.epoch,
+                    "reason": e.reason,
                 }
                 for e in self.merger.merge_log
             ],
+            "splits": [
+                {
+                    "members": e.members,
+                    "partition": e.partition,
+                    "healthy": e.healthy,
+                    "epoch": e.epoch,
+                    "reason": e.reason,
+                    "build_s": round(e.build_s, 4),
+                }
+                for e in self.merger.split_log
+            ],
+            "lifecycle": self.lifecycle.stats(),
             "billing": self.meter.summary(),
             "latency": self.meter.latency_summary(),
             "scheduler": self.scheduler.stats(),
@@ -293,6 +340,7 @@ class ProvusePlatform:
         raise NotImplementedError
 
     def shutdown(self) -> None:
+        self.lifecycle.shutdown()
         self.scheduler.shutdown()
 
 

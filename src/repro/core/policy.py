@@ -15,7 +15,8 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Callable
+import time
+from typing import Callable, Iterable
 
 from repro.scheduler.adaptive import SchedulerSignals
 
@@ -43,12 +44,32 @@ class UnionFind:
         root = self.find(x)
         return frozenset(m for m in self._parent if self.find(m) == root)
 
+    def split_cells(self, cells: Iterable[frozenset[str]]) -> None:
+        """Dissolve one group into the given partition cells: members of a
+        cell stay unioned with each other and disconnected from every other
+        cell. Only valid when the cells' union is a complete group (no
+        outside member roots through it) — which is how fission uses it."""
+        for cell in cells:
+            root = min(cell)
+            for member in cell:
+                self._parent[member] = root
+
 
 @dataclasses.dataclass
 class FusionDecision:
     fuse: bool
     reason: str
     group: frozenset[str] = frozenset()
+
+
+@dataclasses.dataclass
+class SplitDecision:
+    split: bool
+    reason: str
+    # Partition of the fused group's members: each cell becomes one rebuilt
+    # execution unit (singletons for saturation/tail regret; hot singletons +
+    # one cold residual cell for traffic divergence).
+    partition: tuple[frozenset[str], ...] = ()
 
 
 @dataclasses.dataclass
@@ -82,11 +103,38 @@ class FusionPolicy:
     saturation_penalty: float = 4.0
     promote_wait_s: float = 0.05
     promote_discount: float = 0.5
+    # ---- fission (reversible fusion) knobs ----
+    # split_occupancy/split_depth/split_sustain: a fused group whose batches
+    # run at least split_occupancy full with split_depth+ requests queued for
+    # split_sustain consecutive regret evaluations is *saturated*: its one
+    # serialized unit has become the bottleneck, so fission rebuilds
+    # per-partition units to win back parallel dispatch.
+    # regret_p95_factor: post-merge tail regret — the group splits when its
+    # recent p95 exceeds this multiple of the pre-merge baseline snapshotted
+    # at commit time.
+    # cold_rate_ratio: traffic-divergence regret — members whose recent
+    # request rate fell below this fraction of the hottest member's are
+    # "cold"; hot members split out as singletons, cold ones stay co-located.
+    # min_group_age_s / remerge_backoff_s: hysteresis. A fresh merge cannot
+    # split before min_group_age_s (no reacting to its own swap transient),
+    # and a split group's edges cannot re-merge within remerge_backoff_s —
+    # together they bound merge<->split flapping to one transition per
+    # backoff period even under pathological oscillating load.
+    fission_enabled: bool = True
+    split_occupancy: float = 0.9
+    split_depth: int = 2
+    split_sustain: int = 3
+    regret_p95_factor: float = 1.5
+    cold_rate_ratio: float = 0.05
+    min_group_age_s: float = 1.0
+    remerge_backoff_s: float = 10.0
 
     def __post_init__(self):
         self.groups = UnionFind()
         self._lock = threading.Lock()
         self._fused_edges: set[tuple[str, str]] = set()
+        self._edge_backoff: dict[tuple[str, str], float] = {}
+        self._sat_streak: dict[frozenset[str], int] = {}
 
     def feedback_merge_cost(self, seconds: float) -> None:
         # exponential moving average of observed merge costs; `decide` reads
@@ -112,6 +160,11 @@ class FusionPolicy:
                 return FusionDecision(False, "fusion disabled")
             if (caller, callee) in self._fused_edges:
                 return FusionDecision(False, "edge already fused")
+            if self._edge_backoff.get((caller, callee), 0.0) > time.monotonic():
+                # the group this edge belonged to was just split — immediately
+                # re-merging on the same (still-warm) observation counters
+                # would flap merge<->split on every oscillation of the load
+                return FusionDecision(False, "recently split (fission hysteresis)")
             if trust_a != trust_b:
                 return FusionDecision(False, f"trust domains differ ({trust_a} vs {trust_b})")
             if self.groups.find(caller) == self.groups.find(callee):
@@ -160,4 +213,113 @@ class FusionPolicy:
         with self._lock:
             self._fused_edges.add((caller, callee))
             self.groups.union(caller, callee)
+            self._sat_streak.pop(self.groups.group(caller), None)
             return self.groups.group(caller)
+
+    # ------------------------------------------------------------- fission
+
+    def decide_split(
+        self,
+        members: frozenset[str],
+        *,
+        signals: SchedulerSignals | None = None,
+        member_rates: dict[str, float] | None = None,
+        baseline_rates: dict[str, float] | None = None,
+        baseline_p95_ms: float = 0.0,
+        current_p95_ms: float = 0.0,
+        age_s: float = 0.0,
+    ) -> SplitDecision:
+        """Regret check for one committed fusion group, evaluated off the
+        data path by the control plane's reconciler.
+
+        ``signals`` is the group's live scheduler snapshot, ``member_rates``
+        the per-member recent request rates (handler.recent_rate),
+        ``baseline_p95_ms`` the pre-merge tail snapshotted at commit,
+        ``current_p95_ms`` the recent post-merge tail, ``age_s`` time since
+        the merge committed. Three regret signals, checked in order:
+        sustained saturation, post-merge tail regression, member traffic
+        divergence (edge gone cold)."""
+        members = frozenset(members)
+        with self._lock:
+            if not self.fission_enabled or len(members) < 2:
+                return SplitDecision(False, "fission disabled or singleton group")
+            if age_s < self.min_group_age_s:
+                return SplitDecision(
+                    False, f"group too young ({age_s:.2f}s < {self.min_group_age_s}s hysteresis)"
+                )
+            singletons = tuple(frozenset((m,)) for m in sorted(members))
+            # --- sustained saturation: the fused unit serializes a load the
+            # scheduler could be running in parallel across per-member units
+            saturated = (
+                signals is not None
+                and signals.mean_occupancy >= self.split_occupancy
+                and signals.queue_depth >= self.split_depth
+            )
+            if saturated:
+                streak = self._sat_streak.get(members, 0) + 1
+                self._sat_streak[members] = streak
+                if streak >= self.split_sustain:
+                    self._sat_streak.pop(members, None)
+                    return SplitDecision(
+                        True,
+                        f"sustained saturation ({streak} consecutive evaluations at "
+                        f"occupancy {signals.mean_occupancy:.2f}, depth {signals.queue_depth})",
+                        singletons,
+                    )
+            else:
+                self._sat_streak.pop(members, None)
+            # --- post-merge tail regret vs the baseline snapshotted at commit
+            if (
+                baseline_p95_ms > 0.0
+                and current_p95_ms >= self.regret_p95_factor * baseline_p95_ms
+            ):
+                return SplitDecision(
+                    True,
+                    f"post-merge p95 regressed ({current_p95_ms:.1f}ms >= "
+                    f"{self.regret_p95_factor}x baseline {baseline_p95_ms:.1f}ms)",
+                    singletons,
+                )
+            # --- traffic divergence: the fused members no longer share a
+            # workload — hot members split out, cold ones stay co-located.
+            # Only members that had DIRECT demand at commit time can go cold:
+            # an interior chain member is served by inlined calls, so its
+            # direct rate reads 0 whether the chain is hot or dead.
+            if member_rates:
+                hottest = max(member_rates.values())
+                cold = frozenset(
+                    m for m in members
+                    if member_rates.get(m, 0.0) <= self.cold_rate_ratio * hottest
+                    and (baseline_rates or {}).get(m, 0.0) > 0.0
+                )
+                hot = members - cold
+                if hottest > 0.0 and cold and hot:
+                    partition = tuple(frozenset((m,)) for m in sorted(hot)) + (cold,)
+                    return SplitDecision(
+                        True,
+                        f"member traffic diverged (cold: {sorted(cold)} at <= "
+                        f"{self.cold_rate_ratio:.0%} of hottest member's rate)",
+                        partition,
+                    )
+            return SplitDecision(False, "no regret signal")
+
+    def dissolve(self, cells: Iterable[frozenset[str]], backoff_s: float | None = None) -> None:
+        """Un-commit a fused group along the given partition: fused edges
+        crossing cells are forgotten, the union-find group dissolves into
+        the cells, and every crossing pair enters the re-merge backoff
+        window (hysteresis — see ``remerge_backoff_s``)."""
+        cells = [frozenset(c) for c in cells]
+        members = frozenset().union(*cells) if cells else frozenset()
+        cell_of = {m: i for i, cell in enumerate(cells) for m in cell}
+        until = time.monotonic() + (self.remerge_backoff_s if backoff_s is None else backoff_s)
+        with self._lock:
+            for a in members:
+                for b in members:
+                    if a != b and cell_of[a] != cell_of[b]:
+                        self._edge_backoff[(a, b)] = until
+            self._fused_edges = {
+                (a, b)
+                for (a, b) in self._fused_edges
+                if not (a in cell_of and b in cell_of and cell_of[a] != cell_of[b])
+            }
+            self.groups.split_cells(cells)
+            self._sat_streak.pop(members, None)

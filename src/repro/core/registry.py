@@ -1,10 +1,17 @@
-"""Routing table: function name -> serving instance.
+"""Routing table: function name -> serving instance, versioned by epoch.
 
 The paper's analogue of the tinyFaaS API-gateway entries / Kubernetes
-Service selectors. Swaps are atomic (single lock) and versioned so the
-Merger can redirect a whole fusion group in one step while requests keep
-flowing ("routes incoming requests for the local functions to the combined
-instance", §3).
+Service selectors. All mutations funnel through :meth:`publish` — an atomic
+multi-route update under one lock — and ``version`` is the platform's
+routing *epoch*: it bumps exactly when some route actually changes, so epoch
+numbers in the control plane's event log are meaningful (an empty or no-op
+swap is not a new generation).
+
+The lock is exposed (``mutex``) so the control plane can make lifecycle
+state flips atomic WITH the route flip: an instance is only ever marked
+DRAINING inside the same critical section that removed its last route, which
+is what lets ``resolve_entry`` guarantee it never observes a DRAINING
+instance through a live route.
 """
 from __future__ import annotations
 
@@ -14,19 +21,42 @@ from typing import TYPE_CHECKING, Iterable
 from repro.core.errors import UnknownFunctionError
 
 if TYPE_CHECKING:  # pragma: no cover
-    from repro.core.function import FunctionInstance
+    from repro.core.function import FunctionInstance, InstanceState
 
 
 class RoutingTable:
     def __init__(self):
-        self._lock = threading.Lock()
+        self._lock = threading.RLock()
         self._routes: dict[str, "FunctionInstance"] = {}
         self.version = 0
 
-    def register(self, name: str, instance: "FunctionInstance") -> None:
+    @property
+    def mutex(self) -> threading.RLock:
+        """The routing lock — reentrant so the control plane can compose an
+        atomic publish + lifecycle-state transition."""
+        return self._lock
+
+    def publish(self, updates: dict[str, "FunctionInstance"]) -> dict[str, "FunctionInstance"]:
+        """Atomically apply ``updates`` (name -> new instance); returns the
+        displaced previous instances. ``version`` bumps once iff at least one
+        route actually changed — republishing identical routes (or an empty
+        update) is not a new epoch."""
         with self._lock:
-            self._routes[name] = instance
-            self.version += 1
+            old = {}
+            changed = False
+            for name, instance in updates.items():
+                prev = self._routes.get(name)
+                if prev is not None:
+                    old[name] = prev
+                if prev is not instance:
+                    self._routes[name] = instance
+                    changed = True
+            if changed:
+                self.version += 1
+            return old
+
+    def register(self, name: str, instance: "FunctionInstance") -> None:
+        self.publish({name: instance})
 
     def resolve(self, name: str) -> "FunctionInstance":
         with self._lock:
@@ -35,17 +65,26 @@ class RoutingTable:
             except KeyError:
                 raise UnknownFunctionError(name) from None
 
+    def resolve_entry(self, name: str) -> tuple["FunctionInstance", "InstanceState"]:
+        """Resolve plus the instance's lifecycle state, read atomically with
+        the route under the routing lock. Because displacement marks an
+        instance DRAINING in the same critical section that unroutes it, the
+        returned state is never DRAINING or RETIRED."""
+        with self._lock:
+            try:
+                instance = self._routes[name]
+            except KeyError:
+                raise UnknownFunctionError(name) from None
+            return instance, instance.state
+
+    def get(self, name: str) -> "FunctionInstance | None":
+        with self._lock:
+            return self._routes.get(name)
+
     def swap(self, names: Iterable[str], instance: "FunctionInstance") -> dict[str, "FunctionInstance"]:
         """Atomically point every name at ``instance``; returns the previous
         instances (for draining/retirement)."""
-        with self._lock:
-            old = {}
-            for name in names:
-                if name in self._routes:
-                    old[name] = self._routes[name]
-                self._routes[name] = instance
-            self.version += 1
-            return old
+        return self.publish({name: instance for name in names})
 
     def names(self) -> list[str]:
         with self._lock:

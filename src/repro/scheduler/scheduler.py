@@ -47,6 +47,9 @@ _RECENT_BATCHES = 256  # per-function recent batch sizes: the "right now"
 _SIGNALS_TTL_S = 0.05  # signals_for memo: a hot unfused edge asks on every
 # sync observation; sorting the latency window per request would put an
 # O(n log n) snapshot on the data path for a control-plane answer
+_RECENT_LATS = 1024  # per-function (t_done, latency) pairs: the fission
+# regret check compares post-merge tails against a pre-merge baseline, so it
+# needs a p95 over the trailing seconds, not over the whole 8k-sample window
 
 
 class RequestScheduler:
@@ -82,10 +85,18 @@ class RequestScheduler:
         self._on_request_done = on_request_done
         self._queues: dict[tuple, AdmissionQueue] = {}
         self._lock = threading.Lock()
+        # Drain-barrier state: per-function in-flight batch counts, signalled
+        # on completion so the control plane's quiesce() can wait for an
+        # epoch's affected traffic to clear without polling the data path.
+        self._cond = threading.Condition(self._lock)
+        self._inflight: dict[str, int] = {}
+        self._dispatch_tls = threading.local()  # name this thread is dispatching
+        self._last_submit_t: float | None = None
         self._closed = False
         self._latency = LatencyWindow()
         self._per_name: dict[str, LatencyWindow] = {}
         self._recent_by_name: dict[str, collections.deque] = {}
+        self._recent_lat_by_name: dict[str, collections.deque] = {}
         self._batch_sizes: collections.deque = collections.deque(maxlen=_BATCH_WINDOW)
         self._batches = 0
         self._signals_cache: dict[tuple, tuple[float, SchedulerSignals]] = {}
@@ -98,6 +109,7 @@ class RequestScheduler:
         with self._lock:
             if self._closed:
                 raise RuntimeError("scheduler is shut down")
+            self._last_submit_t = req.t_enqueue
             q = self._queues.get(key)
             if q is None:
                 controller = (
@@ -110,7 +122,7 @@ class RequestScheduler:
                 first_delay = controller.delay_s if controller is not None else self.max_delay_s
                 q = AdmissionQueue(
                     name,
-                    self._dispatch,
+                    self._tracked_dispatch,
                     key=key,
                     max_batch=self.max_batch,
                     max_delay_s=first_delay,
@@ -122,6 +134,86 @@ class RequestScheduler:
                 self._queues[key] = q
             q.put(req)  # same lock as retire/shutdown: never lands post-stop
         return req.future
+
+    def _tracked_dispatch(self, name: str, args_list: list[tuple]) -> list:
+        """Dispatch wrapper that maintains the per-function in-flight batch
+        count the drain barrier (quiesce) and trough detector key on."""
+        with self._cond:
+            self._inflight[name] = self._inflight.get(name, 0) + 1
+        self._dispatch_tls.name = name
+        try:
+            return self._dispatch(name, args_list)
+        finally:
+            self._dispatch_tls.name = None
+            with self._cond:
+                n = self._inflight.get(name, 1) - 1
+                if n <= 0:
+                    self._inflight.pop(name, None)
+                else:
+                    self._inflight[name] = n
+                self._cond.notify_all()
+
+    def quiesce(self, names=None, timeout: float = 10.0, *, include_queued: bool = True) -> bool:
+        """Drain barrier for epoch transitions: block until the named
+        functions (all functions when ``names`` is None) have no batch in
+        flight — and, with ``include_queued``, nothing queued either. The
+        control plane's reconciler runs the in-flight-only form (bounded)
+        before executing a deferred transition, so the control-plane stall
+        starts on a drained pipe; queued requests never need draining
+        because they re-resolve the NEW routes at dispatch time. A
+        dispatcher thread's own in-flight batch is excluded — the redeploy
+        retry path can reach a barrier from inside a dispatch, and waiting
+        on one's own batch would deadlock until timeout. Returns False on
+        timeout (traffic never went quiet)."""
+        names = None if names is None else set((names,) if isinstance(names, str) else names)
+        own = getattr(self._dispatch_tls, "name", None)
+        deadline = time.perf_counter() + timeout
+        with self._cond:
+            while True:
+                busy = any(
+                    c - (1 if n == own else 0) > 0
+                    for n, c in self._inflight.items()
+                    if names is None or n in names
+                )
+                depth = sum(
+                    q.depth()
+                    for key, q in self._queues.items()
+                    if names is None or key[0] in names
+                ) if include_queued else 0
+                if not busy and depth == 0:
+                    return True
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    return False
+                # queue depth changes don't signal the condition, so bound
+                # each wait: the barrier is control-plane-only, a few ms of
+                # poll granularity is invisible next to a drain
+                self._cond.wait(min(remaining, 0.01))
+
+    def is_trough(self, *, min_quiet_s: float = 0.01, gap_mult: float = 3.0) -> bool:
+        """Arrival-gap trough detector for the control plane's reconciler:
+        True when nothing is queued or in flight AND the time since the last
+        submit exceeds ``gap_mult`` smoothed inter-arrival gaps (from the
+        adaptive controllers' EWMAs) — i.e. the platform is in a lull that
+        the observed arrival process says will last, so a control-plane
+        stall lands on nobody. Without adaptive gap estimates the quiet
+        floor alone governs."""
+        now = time.perf_counter()
+        with self._lock:
+            if any(self._inflight.values()):
+                return False
+            if any(q.depth() for q in self._queues.values()):
+                return False
+            last = self._last_submit_t
+            gaps = [
+                q.adaptive.snapshot()["ewma_gap_ms"] / 1e3
+                for q in self._queues.values()
+                if q.adaptive is not None
+            ]
+        if last is None:
+            return True  # never saw traffic: always a trough
+        need = max(min_quiet_s, gap_mult * max(gaps)) if any(g > 0 for g in gaps) else min_quiet_s
+        return now - last >= need
 
     def shutdown(self, timeout: float = 10.0) -> None:
         with self._lock:
@@ -158,6 +250,11 @@ class RequestScheduler:
             if recent is None:
                 recent = self._recent_by_name[name] = collections.deque(maxlen=_RECENT_BATCHES)
             recent.append(k)
+            lat_recent = self._recent_lat_by_name.get(name)
+            if lat_recent is None:
+                lat_recent = self._recent_lat_by_name[name] = collections.deque(maxlen=_RECENT_LATS)
+            for r in batch:
+                lat_recent.append((t_done, t_done - r.t_enqueue))
         for r in batch:
             lat = t_done - r.t_enqueue
             self._latency.observe(lat, t_done)
@@ -192,6 +289,18 @@ class RequestScheduler:
             self._signals_cache[names] = (now, sig)
         return sig
 
+    def recent_p95_ms(self, name: str, window_s: float = 5.0) -> float:
+        """Nearest-rank p95 of the function's end-to-end latency over the
+        trailing ``window_s`` seconds (0.0 with no recent samples). The
+        fission regret check compares this against the pre-merge baseline
+        snapshotted at commit — an all-time window would dilute a fresh
+        regression with hours of healthy history."""
+        cutoff = time.perf_counter() - window_s
+        with self._lock:
+            recent = self._recent_lat_by_name.get(name)
+            samples = [lat for (t, lat) in recent if t >= cutoff] if recent else []
+        return percentiles_ms(samples, points=(95,))["p95_ms"] if samples else 0.0
+
     def reset_stats(self) -> None:
         """Forget latency/batch history and learned adaptive state; live
         queues keep serving and windows re-seed at (clamped) max_delay_s.
@@ -204,6 +313,7 @@ class RequestScheduler:
             self._batches = 0
             self._per_name = {}
             self._recent_by_name = {}
+            self._recent_lat_by_name = {}
             self._signals_cache = {}
             queues = list(self._queues.values())
         self._latency.reset()

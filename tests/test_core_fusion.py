@@ -172,10 +172,10 @@ def test_fault_tolerance_redeploys_terminated_instance():
         first = p.invoke("A", x)
         # simulate a crashed container
         inst = p.registry.resolve("C")
-        inst.state = inst.state.__class__.TERMINATED
+        inst.state = inst.state.__class__.RETIRED
         inst.params = {}
         out = p.invoke("C", jnp.ones((4, 64)))  # platform must re-provision
         assert out.shape == (4, 64)
-        assert p.registry.resolve("C").state.value == "ready"
+        assert p.registry.resolve("C").state.value == "serving"
     finally:
         p.shutdown()

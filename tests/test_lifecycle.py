@@ -1,0 +1,390 @@
+"""Control-plane invariants: epoch-versioned routing, instance lifecycle,
+reversible fusion (fission), and the merge<->split hysteresis.
+
+The invariants under test are the ones every epoch transition must uphold:
+a resolve can never observe a DRAINING instance through a live route, a
+split+merge round trip preserves request semantics, redeploys retire the
+displaced worker, and the routing version only moves when routes do."""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FunctionInstance,
+    FunctionSpec,
+    FusionPolicy,
+    InstanceState,
+    OrchestratedBackend,
+    TinyJaxBackend,
+)
+from repro.core.registry import RoutingTable
+from repro.scheduler import RequestScheduler
+
+BACKENDS = [TinyJaxBackend, OrchestratedBackend]
+
+
+def deploy_chain(platform):
+    w = jnp.eye(8) * 0.5
+    platform.deploy(FunctionSpec("A", lambda ctx, p, x: ctx.call("B", jnp.tanh(x @ p)), w))
+    platform.deploy(FunctionSpec("B", lambda ctx, p, x: ctx.call("C", jnp.tanh(x @ p)), w))
+    platform.deploy(FunctionSpec("C", lambda ctx, p, x: jnp.tanh(x @ p), w))
+    return w
+
+
+# --------------------------------------------------------------- registry
+
+
+def test_routing_version_bumps_only_on_actual_change():
+    rt = RoutingTable()
+    a, b = object(), object()
+    assert rt.version == 0
+    rt.publish({})  # empty publish: no epoch
+    assert rt.version == 0
+    rt.register("f", a)
+    assert rt.version == 1
+    rt.register("f", a)  # identical route: no epoch
+    assert rt.version == 1
+    rt.swap([], b)  # empty swap: no epoch
+    assert rt.version == 1
+    rt.swap(["f"], a)  # still identical: no epoch
+    assert rt.version == 1
+    rt.swap(["f"], b)
+    assert rt.version == 2
+    rt.publish({"f": b, "g": b})  # one real change among no-ops: ONE epoch
+    assert rt.version == 3
+
+
+# --------------------------------------------------- resolve-during-swap
+
+
+@pytest.mark.parametrize("backend_cls", BACKENDS)
+def test_concurrent_resolve_never_observes_draining(backend_cls):
+    """Readers hammer resolve_entry while epoch publishes displace and
+    retire the routed instance underneath them: the state read atomically
+    with the route must never be DRAINING or RETIRED."""
+    p = backend_cls(FusionPolicy(enabled=False))
+    try:
+        p.deploy(FunctionSpec("F", lambda ctx, params, x: x + 1, None))
+        bad: list = []
+        stop = threading.Event()
+
+        def reader():
+            while not stop.is_set():
+                inst, state = p.registry.resolve_entry("F")
+                if state in (InstanceState.DRAINING, InstanceState.RETIRED):
+                    bad.append((inst.instance_id, state))
+
+        threads = [threading.Thread(target=reader, daemon=True) for _ in range(4)]
+        for t in threads:
+            t.start()
+        spec = p.spec_of("F")
+        for _ in range(60):
+            fresh = FunctionInstance({"F": spec}, p)
+            p.attach_instance(fresh)
+            fresh.mark_ready()
+            event = p.lifecycle.publish({"F": fresh}, kind="redeploy", reason="churn")
+            assert event.retired, "each publish must retire the displaced instance"
+        stop.set()
+        for t in threads:
+            t.join(timeout=10)
+        assert not bad, f"resolve observed draining/retired instances: {bad[:5]}"
+        assert p.registry.resolve("F").state == InstanceState.SERVING
+    finally:
+        p.shutdown()
+
+
+# --------------------------------------------------------- split round trip
+
+
+@pytest.mark.parametrize("backend_cls", BACKENDS)
+def test_split_merge_round_trip_preserves_outputs(backend_cls):
+    p = backend_cls(FusionPolicy(min_observations=1, merge_cost_s=0.0,
+                                 remerge_backoff_s=0.05))
+    try:
+        deploy_chain(p)
+        x = jnp.ones((2, 8))
+        ref = np.asarray(p.invoke("A", x))
+        for _ in range(4):
+            p.invoke("A", x)
+        p.merger.wait_idle()
+        fused = p.registry.resolve("A")
+        assert fused.members.keys() == {"A", "B", "C"}, "chain must fully fuse"
+        epoch_before = p.lifecycle.epoch
+
+        event = p.merger.split(
+            frozenset({"A", "B", "C"}),
+            [frozenset({"A"}), frozenset({"B"}), frozenset({"C"})],
+            reason="test fission",
+        )
+        assert event is not None and event.healthy
+        assert event.epoch == p.lifecycle.epoch == epoch_before + 1
+        assert set(event.checked_members), "split must health-check against canaries"
+        # every member now routes to its own unit; the fused unit retired
+        insts = {n: p.registry.resolve(n) for n in ("A", "B", "C")}
+        assert len({id(i) for i in insts.values()}) == 3
+        assert fused.state == InstanceState.RETIRED
+        np.testing.assert_allclose(np.asarray(p.invoke("A", x)), ref, rtol=1e-5, atol=1e-6)
+
+        # hysteresis: fresh hot traffic must NOT immediately re-merge
+        n_merges = len(p.merger.merge_log)
+        p.invoke("A", x)
+        p.merger.wait_idle()
+        assert len(p.merger.merge_log) == n_merges, "re-merge inside backoff window"
+
+        # after the backoff expires the merge is allowed again (reversible
+        # fusion, not permanent fission) and semantics still hold
+        time.sleep(0.08)
+        for _ in range(6):
+            p.invoke("A", x)
+        p.merger.wait_idle()
+        assert p.registry.resolve("A").members.keys() == {"A", "B", "C"}
+        np.testing.assert_allclose(np.asarray(p.invoke("A", x)), ref, rtol=1e-5, atol=1e-6)
+        stats = p.stats()
+        kinds = [e["kind"] for e in stats["lifecycle"]["events"]]
+        assert "split" in kinds and "merge" in kinds and "deploy" in kinds
+        assert stats["splits"] and stats["splits"][0]["reason"] == "test fission"
+    finally:
+        p.shutdown()
+
+
+def test_split_rejects_bad_partition_and_stale_group():
+    p = TinyJaxBackend(FusionPolicy(min_observations=1, merge_cost_s=0.0))
+    try:
+        deploy_chain(p)
+        x = jnp.ones((2, 8))
+        for _ in range(4):
+            p.invoke("A", x)
+        p.merger.wait_idle()
+        with pytest.raises(ValueError):
+            p.merger.split(frozenset({"A", "B", "C"}), [frozenset({"A"})])
+        # a group that is not (or no longer) routed as one unit: no-op
+        assert p.merger.split(frozenset({"A", "D"}), [frozenset({"A"}), frozenset({"D"})]) is None
+    finally:
+        p.shutdown()
+
+
+# ----------------------------------------------------------- hysteresis
+
+
+def test_fission_hysteresis_prevents_flapping():
+    """Oscillating load must not flap merge<->split: saturation has to be
+    *sustained* to split, a fresh merge cannot split inside its age floor,
+    and a fresh split cannot re-merge inside its backoff."""
+    from repro.scheduler import SchedulerSignals
+
+    policy = FusionPolicy(split_sustain=3, min_group_age_s=0.5,
+                          remerge_backoff_s=0.2, split_occupancy=0.8, split_depth=2)
+    policy.commit("A", "B")
+    members = frozenset({"A", "B"})
+    hot = SchedulerSignals(queue_depth=10, mean_occupancy=0.95, p95_ms=50.0)
+    cold = SchedulerSignals(queue_depth=0, mean_occupancy=0.1, p95_ms=5.0)
+
+    # too young: even sustained saturation cannot split
+    for _ in range(5):
+        assert not policy.decide_split(members, signals=hot, age_s=0.1).split
+
+    # oscillating saturation: the streak resets, never reaches split_sustain
+    for _ in range(6):
+        assert not policy.decide_split(members, signals=hot, age_s=1.0).split
+        assert not policy.decide_split(members, signals=hot, age_s=1.0).split
+        assert not policy.decide_split(members, signals=cold, age_s=1.0).split
+
+    # sustained saturation: splits on the 3rd consecutive evaluation
+    assert not policy.decide_split(members, signals=hot, age_s=1.0).split
+    assert not policy.decide_split(members, signals=hot, age_s=1.0).split
+    d = policy.decide_split(members, signals=hot, age_s=1.0)
+    assert d.split and "saturation" in d.reason
+    assert set().union(*d.partition) == members
+
+    # post-split: the edge is in backoff, decide() refuses to re-merge
+    policy.dissolve(d.partition)
+    from repro.core.handler import EdgeStats
+
+    stats = EdgeStats(sync_count=100, total_wait_s=10.0)
+    refused = policy.decide("A", "B", stats, "t", "t")
+    assert not refused.fuse and "hysteresis" in refused.reason
+    time.sleep(0.25)  # backoff expired: fusion is available again
+    assert policy.decide("A", "B", stats, "t", "t").fuse
+
+
+def test_decide_split_regret_signals():
+    policy = FusionPolicy(min_group_age_s=0.0, regret_p95_factor=1.5,
+                          cold_rate_ratio=0.1)
+    members = frozenset({"A", "B"})
+    # post-merge tail regression vs the commit-time baseline
+    d = policy.decide_split(members, baseline_p95_ms=10.0, current_p95_ms=20.0, age_s=1.0)
+    assert d.split and "p95" in d.reason
+    # traffic divergence: only members with DIRECT pre-merge demand can go
+    # cold — an interior chain member (baseline rate 0) never triggers it
+    d = policy.decide_split(
+        members, member_rates={"A": 100.0, "B": 0.0},
+        baseline_rates={"A": 90.0, "B": 0.0}, age_s=1.0,
+    )
+    assert not d.split
+    d = policy.decide_split(
+        members, member_rates={"A": 100.0, "B": 0.0},
+        baseline_rates={"A": 90.0, "B": 50.0}, age_s=1.0,
+    )
+    assert d.split and "diverged" in d.reason
+    assert frozenset({"B"}) in d.partition  # cold member in its own cell
+
+
+def test_healthy_fused_chain_never_splits_on_divergence():
+    """A chain whose interior members are served by inlined calls must not
+    read as 'traffic diverged': demand baselines count only direct client
+    traffic and inbound edges from OUTSIDE the group, so a callee that was
+    only ever reached through the chain has baseline 0 and is exempt."""
+    p = TinyJaxBackend(FusionPolicy(min_observations=1, merge_cost_s=0.0,
+                                    min_group_age_s=0.0))
+    try:
+        deploy_chain(p)
+        x = jnp.ones((2, 8))
+        for _ in range(5):
+            p.invoke("A", x)  # client traffic lands on A only
+        p.merger.wait_idle()
+        assert p.registry.resolve("A").members.keys() == {"A", "B", "C"}
+        rec = p.merger.committed_groups()[0]
+        assert rec.baseline_rates["B"] == 0.0 and rec.baseline_rates["C"] == 0.0
+        # repeated regret evaluations on the hot chain: never a split
+        for _ in range(5):
+            assert p.merger.evaluate_splits() == []
+        assert p.registry.resolve("A").members.keys() == {"A", "B", "C"}
+    finally:
+        p.shutdown()
+
+
+def test_failed_split_is_quarantined_not_retried():
+    from repro.core import SplitDecision
+
+    p = TinyJaxBackend(FusionPolicy(min_observations=1, merge_cost_s=0.0))
+    try:
+        w = jnp.eye(8) * 0.5
+        p.deploy(FunctionSpec("A", lambda ctx, q, x: ctx.call("B", x @ q), w))
+        p.deploy(FunctionSpec("B", lambda ctx, q, x: jnp.tanh(x @ q), w))
+        x = jnp.ones((2, 8))
+        for _ in range(3):
+            p.invoke("A", x)
+        p.merger.wait_idle()
+        fused = p.registry.resolve("A")
+        assert fused.members.keys() == {"A", "B"}
+        # corrupt B's SPEC: rebuilt units diverge from the live fused unit
+        good = p._specs["B"]
+        p._specs["B"] = FunctionSpec("B", lambda ctx, q, xx: jnp.tanh(xx @ q) + 100.0, good.params)
+
+        members = frozenset({"A", "B"})
+        cells = [frozenset({"A"}), frozenset({"B"})]
+        event = p.merger.split(members, cells, reason="doomed")
+        assert event is not None and not event.healthy
+        assert event.reason == "health check failed"
+        assert p.registry.resolve("A") is fused, "unhealthy split must not swap"
+
+        # a persistent regret signal must NOT rebuild the doomed partition
+        # on every evaluation — the failed member set is quarantined
+        p.policy.decide_split = lambda *a, **k: SplitDecision(True, "forced", tuple(cells))
+        n_events = len(p.merger.split_log)
+        assert p.merger.evaluate_splits() == []
+        assert len(p.merger.split_log) == n_events, "quarantined split was rebuilt"
+    finally:
+        p.shutdown()
+
+
+# ------------------------------------------------------------- redeploy
+
+
+def test_redeploy_retires_displaced_worker():
+    p = OrchestratedBackend(FusionPolicy(enabled=False))
+    try:
+        p.deploy(FunctionSpec("B", lambda ctx, params, x: x + 1, None))
+        old = p.registry.resolve("B")
+        old_worker = p._workers[old.instance_id]
+        ram_before = p.ram_bytes()
+        # simulate a crashed container
+        old.state = InstanceState.RETIRED
+        old.params = {}
+        assert int(p.invoke("B", jnp.int32(1))) == 2  # re-provisions
+        fresh = p.registry.resolve("B")
+        assert fresh is not old and fresh.state == InstanceState.SERVING
+        old_worker.thread.join(timeout=10)
+        assert not old_worker.thread.is_alive(), "displaced pod's loop must exit"
+        assert old.instance_id not in p._workers, "displaced pod leaked"
+        # a leaked instance would add its whole 32 MiB runtime constant; the
+        # few bytes of freshly-compiled entry workspace must not trip this
+        from repro.core.function import INSTANCE_RUNTIME_OVERHEAD_BYTES
+
+        assert p.ram_bytes() < ram_before + INSTANCE_RUNTIME_OVERHEAD_BYTES, \
+            "retired instance still counted in RAM"
+        events = [e for e in p.lifecycle.stats()["events"] if e["kind"] == "redeploy"]
+        assert events and old.instance_id in events[-1]["retired"]
+    finally:
+        p.shutdown()
+
+
+# ------------------------------------------------------- merger threads
+
+
+def test_merger_threads_pruned_under_async_build():
+    p = TinyJaxBackend(FusionPolicy(min_observations=1, merge_cost_s=0.0),
+                       async_build=True)
+    try:
+        deploy_chain(p)
+        x = jnp.ones((2, 8))
+        # park a pile of completed threads where submit used to leak them
+        for _ in range(50):
+            t = threading.Thread(target=lambda: None)
+            t.start()
+            t.join()
+            p.merger._threads.append(t)
+        for _ in range(4):
+            p.invoke("A", x)
+        p.merger.wait_idle()
+        assert p.merger._threads == [], "wait_idle must prune completed builds"
+        assert [m for m in p.merger.merge_log if m.healthy], "merge must have run"
+    finally:
+        p.shutdown()
+
+
+# ----------------------------------------------------- trough + barrier
+
+
+def test_scheduler_trough_and_quiesce_barrier():
+    release = threading.Event()
+
+    def dispatch(name, args_list):
+        release.wait(2.0)
+        return [a[0] for a in args_list]
+
+    s = RequestScheduler(dispatch, max_batch=4, max_delay_ms=1.0)
+    try:
+        futs = [s.submit("f", (i,)) for i in range(4)]
+        deadline = time.perf_counter() + 1.0
+        saw_busy = False
+        while time.perf_counter() < deadline:
+            if not s.is_trough(min_quiet_s=0.0):
+                saw_busy = True
+                break
+            time.sleep(0.001)
+        assert saw_busy, "in-flight batch must defeat the trough detector"
+        assert not s.quiesce(timeout=0.05), "quiesce must time out while busy"
+        release.set()
+        assert s.quiesce(timeout=5.0), "drain barrier must clear after dispatch"
+        for f in futs:
+            assert f.result(timeout=5) is not None
+        time.sleep(0.02)
+        assert s.is_trough(min_quiet_s=0.01), "quiet + drained = trough"
+    finally:
+        s.shutdown()
+
+
+def test_reconciler_executes_queued_transition_in_trough():
+    p = TinyJaxBackend(FusionPolicy(enabled=False))
+    try:
+        ran = threading.Event()
+        p.lifecycle.enqueue(ran.set, kind="test", names=("X",), max_defer_s=30.0)
+        # no traffic at all -> permanent trough -> runs on the next tick,
+        # long before the 30s deadline
+        assert ran.wait(5.0), "reconciler must run queued work in a trough"
+    finally:
+        p.shutdown()

@@ -73,3 +73,15 @@ def test_adaptive_trickle_sheds_the_static_window_tax():
 @pytest.mark.slow
 def test_smoke_mode_passes_on_healthy_scheduler():
     assert load_bench.run_smoke(bench_args()) == 0
+
+
+@pytest.mark.slow
+def test_churn_phase_shift_recovers_throughput_after_fission():
+    def check():
+        out = load_bench.run_churn(bench_args(duration=5.0))
+        assert out["failed"] == 0 and out["hung"] == 0
+        assert out["split_epoch"] > out["merge_epoch"]
+        assert "saturation" in out["split_reason"] or "p95" in out["split_reason"]
+        assert out["recovery"] >= 1.3, out
+
+    _retry_once(check)
