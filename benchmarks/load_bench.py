@@ -495,6 +495,208 @@ def run_churn(args, *, smoke: bool = False) -> dict:
         platform.shutdown()
 
 
+def run_slo(args, *, smoke: bool = False) -> dict:
+    """Multi-level SLO demonstration: three classes under mixed open-loop
+    load on one calibrated function, on the tinyjax backend with adaptive
+    (queueing-model) windows.
+
+    Classes: ``strict`` (finite p95 target derived from the measured batch
+    service time so the scenario is host-independent), ``standard`` (4x the
+    strict target), and best-effort. Arrivals: best-effort comes in bursts
+    (the traffic batching exists for), strict/standard trickle uniformly.
+
+    The same arrival schedule then replays against a FIFO baseline — one
+    class, static window, no SLO awareness — and the run asserts the two
+    headline properties: the strict class MEETS its p95 target under the
+    SLO-aware scheduler, and aggregate throughput stays within 15% of the
+    FIFO baseline (class isolation must not cost meaningful capacity).
+    """
+    from repro.core import FunctionSpec
+    from repro.scheduler.slo import SLOClass
+
+    duration = 2.0 if smoke else max(4.0, args.duration)
+    max_batch = 4
+
+    # --- host calibration: size F so one batch-of-4 costs ~4ms here ---
+    w = jnp.asarray(np.random.RandomState(0).randn(128, 128).astype(np.float32) * 0.05)
+    probe_iters, target_batch_s = 50, 0.004
+    probe = jax.jit(
+        lambda v: jax.lax.fori_loop(0, probe_iters, lambda i, h: jnp.tanh(h @ w), v)
+    )
+    xb = jnp.ones((max_batch, 4, 128), jnp.float32)
+    probe(xb).block_until_ready()  # compile
+    trials = []
+    for _ in range(3):  # best-of-3: contention only ever ADDS time
+        t_p = time.perf_counter()
+        probe(xb).block_until_ready()
+        trials.append(time.perf_counter() - t_p)
+    probe_s = max(min(trials), 1e-5)
+    fn_iters = max(10, int(probe_iters * target_batch_s / probe_s))
+
+    def fn_f(ctx, params, x):
+        return jax.lax.fori_loop(0, fn_iters, lambda i, v: jnp.tanh(v @ params), x)
+
+    def build(slo_aware: bool):
+        platform = BACKENDS["tinyjax"](
+            FusionPolicy(enabled=False), max_batch=max_batch,
+            max_delay_ms=args.max_delay_ms, adaptive=slo_aware,
+        )
+        platform.deploy(FunctionSpec("F", fn_f, w))
+        return platform
+
+    x = jnp.ones((4, 128), jnp.float32)
+
+    def warm(platform):
+        """Compile every bucket the run will touch, outside any timing."""
+        for k in (1, 2, max_batch):
+            futs = [platform.invoke_async("F", x) for _ in range(k)]
+            for f in futs:
+                f.result()
+
+    def measure_capacity(platform):
+        walls = []
+        for _ in range(3):
+            t_m = time.perf_counter()
+            futs = [platform.invoke_async("F", x) for _ in range(max_batch)]
+            for f in futs:
+                f.result()
+            walls.append(time.perf_counter() - t_m)
+        return max_batch / max(min(walls), 1e-4)
+
+    def drive(platform, classes: dict[str, SLOClass], rates: dict[str, float]) -> dict:
+        """One open-loop run of the mixed schedule. ``classes`` maps stream
+        -> SLOClass (the FIFO baseline maps every stream to None);
+        ``rates`` is the SHARED arrival schedule — probed once, replayed
+        identically for both runs, so the throughput comparison measures
+        class isolation and not probe-to-probe calibration noise."""
+        warm(platform)
+        platform.scheduler.reset_stats()
+        pending: list = []
+        lat_by_stream: dict[str, list[float]] = {k: [] for k in rates}
+        lock = threading.Lock()
+
+        def stamp(stream, t_submit):
+            def cb(fut):
+                dt = time.perf_counter() - t_submit
+                with lock:
+                    lat_by_stream[stream].append(dt)
+            return cb
+
+        t0 = time.perf_counter()
+        next_t = dict.fromkeys(rates, 0.0)
+        burst = 4  # best-effort arrives in back-to-back groups
+        while True:
+            now = time.perf_counter() - t0
+            if now >= duration:
+                break
+            for stream, rate in rates.items():
+                if now >= next_t[stream]:
+                    n = burst if stream == "be" else 1
+                    for _ in range(n):
+                        fut = platform.invoke_async("F", x, slo=classes.get(stream))
+                        fut.add_done_callback(stamp(stream, time.perf_counter()))
+                        pending.append(fut)
+                    next_t[stream] += n / rate
+            time.sleep(max(0.0, min(next_t.values()) - (time.perf_counter() - t0)))
+        for fut in pending:
+            fut.result(timeout=60)
+        # done-callbacks can trail result(); join on the counters
+        deadline = time.perf_counter() + 5.0
+        while time.perf_counter() < deadline:
+            with lock:
+                if sum(len(v) for v in lat_by_stream.values()) >= len(pending):
+                    break
+            time.sleep(0.001)
+        sched = platform.scheduler.stats()
+        return {
+            "requests": len(pending),
+            "throughput_rps": sched["throughput_rps"],
+            "mean_batch": round(sched["mean_batch"], 3),
+            "per_stream": {
+                k: {kk: round(vv, 2) for kk, vv in percentiles_ms(v).items()}
+                for k, v in lat_by_stream.items()
+            },
+            "classes": sched.get("classes", {}),
+        }
+
+    # ONE calibration probe sizes both the targets (~10 batch-times for
+    # strict: meaningful AND meetable on any host) and the shared arrival
+    # schedule replayed against both platforms
+    platform = build(slo_aware=True)
+    try:
+        warm(platform)
+        capacity_rps = measure_capacity(platform)
+        batch_s = max_batch / capacity_rps
+        strict = SLOClass("strict", max(10 * batch_s * 1e3, 40.0))
+        standard = SLOClass("standard", 4 * strict.target_p95_ms)
+        classes = {"strict": strict, "standard": standard, "be": None}
+        total = 0.55 * capacity_rps  # below capacity: targets are meetable
+        rates = {"strict": 0.15 * total, "standard": 0.25 * total, "be": 0.60 * total}
+        slo_res = drive(platform, classes, rates)
+    finally:
+        platform.shutdown()
+
+    platform = build(slo_aware=False)
+    try:
+        fifo_res = drive(platform, dict.fromkeys(classes, None), rates)  # one class, FIFO
+    finally:
+        platform.shutdown()
+
+    strict_p95 = slo_res["per_stream"]["strict"]["p95_ms"]
+    fifo_strict_p95 = fifo_res["per_stream"]["strict"]["p95_ms"]
+    ratio = slo_res["throughput_rps"] / max(fifo_res["throughput_rps"], 1e-9)
+    out = {
+        "mode": "slo",
+        "strict_target_ms": strict.target_p95_ms,
+        "strict_p95_ms": strict_p95,
+        "fifo_strict_p95_ms": fifo_strict_p95,
+        "standard_p95_ms": slo_res["per_stream"]["standard"]["p95_ms"],
+        "be_p95_ms": slo_res["per_stream"]["be"]["p95_ms"],
+        "throughput_rps": slo_res["throughput_rps"],
+        "fifo_throughput_rps": fifo_res["throughput_rps"],
+        "throughput_vs_fifo": round(ratio, 3),
+        "requests": slo_res["requests"],
+        "slo": slo_res,
+        "fifo": fifo_res,
+    }
+    for stream in ("strict", "standard", "be"):
+        tgt = {"strict": strict.target_p95_ms, "standard": standard.target_p95_ms,
+               "be": float("inf")}[stream]
+        tgt_s = f"target {tgt:7.1f} ms" if tgt != float("inf") else "best-effort   "
+        print(f"[slo] {stream:>8}: p95 {slo_res['per_stream'][stream]['p95_ms']:7.1f} ms "
+              f"({tgt_s})   fifo p95 {fifo_res['per_stream'][stream]['p95_ms']:7.1f} ms")
+    print(f"[slo] aggregate throughput {slo_res['throughput_rps']:.1f} rps vs "
+          f"FIFO {fifo_res['throughput_rps']:.1f} rps ({ratio:.2f}x), "
+          f"{slo_res['requests']} reqs, mean batch {slo_res['mean_batch']:.2f} "
+          f"(be lanes), capacity ~{capacity_rps:.0f} rps")
+    assert strict_p95 <= strict.target_p95_ms, (
+        f"strict class missed its target under mixed load: "
+        f"p95 {strict_p95:.1f}ms > {strict.target_p95_ms:.1f}ms"
+    )
+    assert ratio >= 0.85, (
+        f"SLO-aware scheduling cost too much aggregate throughput: "
+        f"{ratio:.2f}x of FIFO (floor 0.85)"
+    )
+    return out
+
+
+def run_slo_smoke(args) -> int:
+    """CI gate for the SLO scheduler: tiny mixed-class run; one retry (same
+    policy as the churn smoke — shared 2-core CI boxes can flake the
+    calibration ~once in ten runs; a real regression fails both)."""
+    try:
+        run_slo(args, smoke=True)
+        return 0
+    except AssertionError:
+        print("[slo-smoke] attempt 1 flaked; retrying once")
+        try:
+            run_slo(args, smoke=True)
+            return 0
+        except AssertionError as exc:
+            print(f"[slo-smoke] FAIL: {exc}")
+            return 1
+
+
 def run_smoke(args) -> int:
     """CI gate: a few seconds of closed-loop traffic on the tiny model. Fails
     (exit 1) when coalescing stops happening or throughput collapses to
@@ -549,10 +751,22 @@ def main():
     ap.add_argument("--smoke", action="store_true", help="tiny CI sanity run (exit 1 on regression)")
     ap.add_argument("--churn", action="store_true",
                     help="fission demo: merge -> saturate -> split under load (orchestrated)")
+    ap.add_argument("--slo", action="store_true",
+                    help="multi-class SLO demo: strict/standard/best-effort under mixed "
+                         "load vs a FIFO baseline (with --smoke: tiny CI gate)")
     ap.add_argument("--modes", nargs="*", default=["fused-serial", "fused-batched"], choices=MODES)
     ap.add_argument("--json", action="store_true", help="emit machine-readable results")
     args = ap.parse_args()
 
+    if args.slo:
+        if args.smoke:
+            sys.exit(run_slo_smoke(args))
+        out = run_slo(args)
+        if args.json:
+            out.pop("slo", None)
+            out.pop("fifo", None)
+            print(json.dumps(out, indent=2))
+        return
     if args.smoke:
         sys.exit(run_smoke(args))
     if args.churn:

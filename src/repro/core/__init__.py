@@ -14,3 +14,5 @@ from repro.core.merger import GroupRecord, MergeEvent, Merger, SplitEvent  # noq
 from repro.core.platform import OrchestratedBackend, ProvusePlatform, TinyJaxBackend  # noqa: F401
 from repro.core.policy import FusionDecision, FusionPolicy, SplitDecision  # noqa: F401
 from repro.scheduler import RequestScheduler  # noqa: F401
+from repro.scheduler.clock import SYSTEM_CLOCK, SystemClock, VirtualClock  # noqa: F401
+from repro.scheduler.slo import BEST_EFFORT, IMMEDIATE, SLOClass  # noqa: F401

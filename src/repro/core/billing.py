@@ -38,12 +38,16 @@ class InvocationRecord:
 
 
 class BillingMeter:
-    def __init__(self):
+    def __init__(self, clock=None):
         self._lock = threading.Lock()
         self.records: list[InvocationRecord] = []
         from repro.scheduler.metrics import LatencyWindow
 
-        self._latency = LatencyWindow()
+        # the platform's time source: latency durations arrive already
+        # measured, but the window stamps each completion to compute
+        # sustained throughput — mixing a virtual duration with a wall-clock
+        # stamp would put the two on different axes
+        self._latency = LatencyWindow(clock=clock)
 
     def record(self, rec: InvocationRecord) -> None:
         with self._lock:

@@ -25,6 +25,7 @@ import time
 from typing import Any, Callable
 
 from repro.core.billing import BillingMeter, InvocationRecord
+from repro.scheduler.clock import SYSTEM_CLOCK
 
 _RECENT_WAITS = 64  # bounded per-edge wait history for the tail estimate
 _RECENT_TS = 256  # bounded per-edge / per-function timestamp history: the
@@ -102,8 +103,12 @@ class _ActiveInvocation:
 
 
 class FunctionHandler:
-    def __init__(self, meter: BillingMeter, on_fusion_candidate: Callable[[str, str], None] | None = None):
+    def __init__(self, meter: BillingMeter, on_fusion_candidate: Callable[[str, str], None] | None = None,
+                 clock=None):
         self.meter = meter
+        # Injectable time source: edge heat, demand rates, and blocked-time
+        # attribution all become drivable by a virtual clock in tests.
+        self.clock = clock or SYSTEM_CLOCK
         self.on_fusion_candidate = on_fusion_candidate
         self.edges: dict[tuple[str, str], EdgeStats] = {}
         self.canaries: dict[str, tuple] = {}
@@ -132,7 +137,7 @@ class FunctionHandler:
         per-function call counts still count client requests)."""
         self._stack().append(
             _ActiveInvocation(
-                function, instance.instance_id, time.perf_counter(), instance.resident_bytes(),
+                function, instance.instance_id, self.clock.now(), instance.resident_bytes(),
                 batch_size=max(1, batch_size),
             )
         )
@@ -140,7 +145,7 @@ class FunctionHandler:
     def exit(self, function: str) -> None:
         stack = self._stack()
         inv = stack.pop()
-        t_end = time.perf_counter()
+        t_end = self.clock.now()
         for _ in range(inv.batch_size):
             self.meter.record(
                 InvocationRecord(
@@ -183,7 +188,7 @@ class FunctionHandler:
                 st.sync_count += 1
                 st.total_wait_s += wait_s
                 st.recent_waits.append(wait_s)
-                st.recent_ts.append(time.perf_counter())
+                st.recent_ts.append(self.clock.now())
                 if len(st.recent_waits) > _RECENT_WAITS:
                     del st.recent_waits[0]
                 notify = True
@@ -201,13 +206,13 @@ class FunctionHandler:
             recent = self._recent_calls.get(function)
             if recent is None:
                 recent = self._recent_calls[function] = collections.deque(maxlen=_RECENT_TS)
-            recent.append(time.perf_counter())
+            recent.append(self.clock.now())
 
     def recent_rate(self, function: str, window_s: float = RECENT_WINDOW_S) -> float:
         """Direct external demand (requests/s) on this function over the
         trailing window — the per-member signal the fission divergence check
         compares against its commit-time baseline."""
-        now = time.perf_counter()
+        now = self.clock.now()
         with self._lock:
             recent = self._recent_calls.get(function)
             return _windowed_rate(recent, window_s, now) if recent else 0.0
@@ -221,7 +226,7 @@ class FunctionHandler:
         the direct rate so a member fed by an external caller never reads
         cold. Calls from inside ``exclude`` (the member's own fusion group)
         are inlined post-merge and must not count either way."""
-        now = time.perf_counter()
+        now = self.clock.now()
         with self._lock:
             return sum(
                 st.recent_sync_rate(window_s, now=now)
@@ -234,7 +239,7 @@ class FunctionHandler:
             return {k: dataclasses.replace(v) for k, v in self.edges.items() if v.sync_count}
 
     def stats(self) -> dict:
-        now = time.perf_counter()
+        now = self.clock.now()
         with self._lock:
             return {
                 f"{a}->{b}": {

@@ -33,8 +33,9 @@ from __future__ import annotations
 import collections
 import dataclasses
 import threading
-import time
 from typing import TYPE_CHECKING, Callable
+
+from repro.scheduler.clock import SYSTEM_CLOCK
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.core.function import FunctionInstance
@@ -76,9 +77,14 @@ class ControlPlane:
 
     def __init__(self, platform, registry, *, tick_s: float = 0.02,
                  max_defer_s: float = 1.0, trough_quiet_s: float = 0.01,
-                 trough_gap_mult: float = 3.0, drain_timeout_s: float = 0.5):
+                 trough_gap_mult: float = 3.0, drain_timeout_s: float = 0.5,
+                 clock=None):
         self.platform = platform
         self.registry = registry
+        # Injectable time source: defer deadlines, tick waits, and event
+        # timestamps run on it, so reconciler behavior (trough deferral,
+        # max_defer expiry) is drivable by a virtual clock in tests.
+        self.clock = clock or SYSTEM_CLOCK
         self.tick_s = tick_s
         self.max_defer_s = max_defer_s
         self.drain_timeout_s = drain_timeout_s
@@ -90,7 +96,10 @@ class ControlPlane:
         self._queue_lock = threading.Lock()
         self._idle_cv = threading.Condition(self._queue_lock)
         self._executing = 0
-        self._wake = threading.Event()
+        # tick wake-up: a condition (not an Event) so the reconciler's
+        # tick_s wait goes through the clock like every other timed wait
+        self._wake_cv = threading.Condition()
+        self._wake_flag = False
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         self._tick_hooks: list[Callable[[], None]] = []
@@ -150,7 +159,7 @@ class ControlPlane:
         event = EpochEvent(
             epoch=epoch, kind=kind, names=tuple(sorted(routes)), reason=reason,
             retired=tuple(i.instance_id for i in doomed), freed_bytes=freed,
-            t_completed=time.perf_counter(), deferred_s=round(deferred_s, 4),
+            t_completed=self.clock.now(), deferred_s=round(deferred_s, 4),
         )
         with self._events_lock:
             self.events.append(event)
@@ -165,12 +174,12 @@ class ControlPlane:
         elapsed — control-plane stalls land in quiet gaps when quiet gaps
         exist, and bounded-late otherwise."""
         defer = self.max_defer_s if max_defer_s is None else max_defer_s
-        now = time.perf_counter()
+        now = self.clock.now()
         item = _QueuedTransition(action, kind, tuple(names), reason, now, now + defer)
         with self._queue_lock:
             self._queue.append(item)
         self._ensure_thread()
-        self._wake.set()
+        self._kick()
 
     def add_tick_hook(self, hook: Callable[[], None]) -> None:
         """Run ``hook`` on every reconciler tick (fission evaluation lives
@@ -197,7 +206,7 @@ class ControlPlane:
         and synchronous platforms may call it directly."""
         ran = 0
         while True:
-            now = time.perf_counter()
+            now = self.clock.now()
             with self._queue_lock:
                 if not self._queue:
                     return ran
@@ -234,14 +243,19 @@ class ControlPlane:
     def wait_idle(self, timeout: float = 120.0) -> bool:
         """Block until no transition is queued OR executing (the reconciler
         may have popped one and be mid-build). Returns False on timeout."""
-        deadline = time.perf_counter() + timeout
+        deadline = self.clock.now() + timeout
         with self._idle_cv:
             while self._queue or self._executing:
-                remaining = deadline - time.perf_counter()
+                remaining = deadline - self.clock.now()
                 if remaining <= 0:
                     return False
-                self._idle_cv.wait(min(remaining, 0.05))
+                self.clock.wait_on(self._idle_cv, min(remaining, 0.05))
         return True
+
+    def _kick(self) -> None:
+        with self._wake_cv:
+            self._wake_flag = True
+            self._wake_cv.notify_all()
 
     def _ensure_thread(self) -> None:
         if self._thread is not None and self._thread.is_alive():
@@ -253,8 +267,10 @@ class ControlPlane:
 
     def _loop(self) -> None:
         while not self._stop.is_set():
-            self._wake.wait(timeout=self.tick_s)
-            self._wake.clear()
+            with self._wake_cv:
+                if not self._wake_flag:
+                    self.clock.wait_on(self._wake_cv, self.tick_s)
+                self._wake_flag = False
             if self._stop.is_set():
                 return
             for hook in list(self._tick_hooks):
@@ -266,7 +282,7 @@ class ControlPlane:
 
     def shutdown(self, timeout: float = 5.0) -> None:
         self._stop.set()
-        self._wake.set()
+        self._kick()
         th = self._thread
         if th is not None and th.is_alive():
             th.join(timeout)

@@ -18,13 +18,13 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
 
 import jax
 import numpy as np
 
 from repro.core.errors import HealthCheckError
 from repro.core.function import FunctionInstance
+from repro.scheduler.clock import SYSTEM_CLOCK
 
 
 @dataclasses.dataclass
@@ -90,6 +90,10 @@ class Merger:
     def __init__(self, platform, policy, *, health_rtol: float = 2e-2, health_atol: float = 1e-2, async_build: bool = False):
         self.platform = platform
         self.policy = policy
+        # share the platform's time source (virtual in simulation tests) so
+        # group ages / event timestamps sit on the same axis as the
+        # scheduler's and the policy's hysteresis windows
+        self._clock = getattr(platform, "clock", None) or SYSTEM_CLOCK
         self.health_rtol = health_rtol
         self.health_atol = health_atol
         self.async_build = async_build
@@ -154,10 +158,10 @@ class Merger:
             # Deferred merge: the reconciler runs the build+swap at the next
             # observed traffic trough (or after its max-defer deadline), so
             # the recompile stall lands in a quiet gap instead of mid-burst.
-            t_queued = time.perf_counter()
+            t_queued = self._clock.now()
             lifecycle.enqueue(
                 lambda: self._do_merge(caller, callee, decision.group,
-                                       deferred_s=time.perf_counter() - t_queued,
+                                       deferred_s=self._clock.now() - t_queued,
                                        revalidate=True),
                 kind="merge", names=tuple(sorted(decision.group)),
                 reason=decision.reason,
@@ -192,7 +196,7 @@ class Merger:
 
     def _do_merge(self, caller: str, callee: str, group: frozenset[str],
                   deferred_s: float = 0.0, revalidate: bool = False) -> None:
-        t0 = time.perf_counter()
+        t0 = self._clock.now()
         platform = self.platform
         try:
             if revalidate:
@@ -245,7 +249,7 @@ class Merger:
                         self._quarantined.add((caller, callee))
                         self._failed_groups.add(frozenset(group))
                 self.merge_log.append(
-                    MergeEvent(time.perf_counter(), tuple(sorted(group)), 0, time.perf_counter() - t0,
+                    MergeEvent(self._clock.now(), tuple(sorted(group)), 0, self._clock.now() - t0,
                                False, reason, tuple(checked))
                 )
                 return
@@ -276,14 +280,14 @@ class Merger:
                     del self._groups[members]
                 self._groups[frozenset(group)] = GroupRecord(
                     members=frozenset(group), instance=merged,
-                    committed_t=time.perf_counter(), epoch=event.epoch,
+                    committed_t=self._clock.now(), epoch=event.epoch,
                     baseline_p95_ms=baseline_p95, baseline_rates=baseline_rates,
                 )
 
-            build_s = time.perf_counter() - t0
+            build_s = self._clock.now() - t0
             self.policy.feedback_merge_cost(build_s)
             self.merge_log.append(
-                MergeEvent(time.perf_counter(), tuple(sorted(group)), freed, build_s, True,
+                MergeEvent(self._clock.now(), tuple(sorted(group)), freed, build_s, True,
                            checked_members=tuple(checked), epoch=event.epoch)
             )
         finally:
@@ -335,7 +339,7 @@ class Merger:
                 baseline_rates=rec.baseline_rates,
                 baseline_p95_ms=max(rec.baseline_p95_ms.values(), default=0.0),
                 current_p95_ms=current_p95,
-                age_s=time.perf_counter() - rec.committed_t,
+                age_s=self._clock.now() - rec.committed_t,
             )
             if decision.split:
                 event = self.split(rec.members, decision.partition, reason=decision.reason)
@@ -351,7 +355,7 @@ class Merger:
         Returns the SplitEvent, or None when the group is no longer routed as
         expected (a concurrent merge/redeploy won the race — the publish is
         guarded by compare-and-swap, so a stale split aborts cleanly)."""
-        t0 = time.perf_counter()
+        t0 = self._clock.now()
         platform = self.platform
         members = frozenset(members)
         cells = [frozenset(c) for c in partition]
@@ -372,9 +376,9 @@ class Merger:
             # nothing to verify against — refuse before paying for the
             # rebuilds (may retry once traffic has produced a canary)
             event = SplitEvent(
-                time.perf_counter(), tuple(sorted(members)),
+                self._clock.now(), tuple(sorted(members)),
                 tuple(tuple(sorted(c)) for c in cells), False,
-                "no canary traffic captured", (), build_s=time.perf_counter() - t0,
+                "no canary traffic captured", (), build_s=self._clock.now() - t0,
             )
             self.split_log.append(event)
             return event
@@ -430,10 +434,10 @@ class Merger:
                     with self._lock:
                         self._failed_splits.add((members, frozenset(cells)))
                 event = SplitEvent(
-                    time.perf_counter(), tuple(sorted(members)),
+                    self._clock.now(), tuple(sorted(members)),
                     tuple(tuple(sorted(c)) for c in cells), False,
                     "health check failed" if not healthy else "no self-contained entry to verify",
-                    tuple(checked), build_s=time.perf_counter() - t0,
+                    tuple(checked), build_s=self._clock.now() - t0,
                 )
                 self.split_log.append(event)
                 return event
@@ -466,14 +470,14 @@ class Merger:
                 if len(cell) > 1:
                     self._groups[cell] = GroupRecord(
                         members=cell, instance=units[cell],
-                        committed_t=time.perf_counter(), epoch=epoch_event.epoch,
+                        committed_t=self._clock.now(), epoch=epoch_event.epoch,
                         baseline_p95_ms={m: v for m, v in (rec.baseline_p95_ms if rec else {}).items() if m in cell},
                         baseline_rates={m: v for m, v in (rec.baseline_rates if rec else {}).items() if m in cell},
                     )
         event = SplitEvent(
-            time.perf_counter(), tuple(sorted(members)),
+            self._clock.now(), tuple(sorted(members)),
             tuple(tuple(sorted(c)) for c in cells), True, reason,
-            tuple(checked), epoch=epoch_event.epoch, build_s=time.perf_counter() - t0,
+            tuple(checked), epoch=epoch_event.epoch, build_s=self._clock.now() - t0,
         )
         self.split_log.append(event)
         return event

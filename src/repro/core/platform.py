@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import queue
 import threading
-import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any
 
@@ -34,6 +33,8 @@ from repro.core.merger import Merger
 from repro.core.policy import FusionPolicy
 from repro.core.registry import RoutingTable
 from repro.scheduler import RequestScheduler
+from repro.scheduler.clock import SYSTEM_CLOCK
+from repro.scheduler.slo import SLOClass
 
 
 class ProvusePlatform:
@@ -55,15 +56,22 @@ class ProvusePlatform:
                  max_batch: int = 8, max_delay_ms: float = 2.0,
                  adaptive: bool = False, adaptive_config=None,
                  fission: bool = False, fission_interval_s: float = 0.25,
-                 trough_merges: bool = False, max_defer_s: float = 1.0):
+                 trough_merges: bool = False, max_defer_s: float = 1.0,
+                 clock=None):
+        # One injectable time source for the whole platform: scheduler
+        # windows, handler edge heat, lifecycle deferrals, and merge ages
+        # all move on the same axis (virtual in simulation tests).
+        self.clock = clock or SYSTEM_CLOCK
         self.registry = RoutingTable()
-        self.meter = BillingMeter()
+        self.meter = BillingMeter(clock=self.clock)
         self.policy = policy or FusionPolicy()
-        self.handler = FunctionHandler(self.meter, on_fusion_candidate=self._on_candidate)
+        self.handler = FunctionHandler(self.meter, on_fusion_candidate=self._on_candidate,
+                                       clock=self.clock)
         # Control plane: every deploy/merge/split/redeploy is an epoch
         # transition published through here; the reconciler thread (started
         # lazily) executes deferred transitions during traffic troughs.
-        self.lifecycle = ControlPlane(self, self.registry, max_defer_s=max_defer_s)
+        self.lifecycle = ControlPlane(self, self.registry, max_defer_s=max_defer_s,
+                                      clock=self.clock)
         # trough_merges: promoted merges queue on the reconciler and run at
         # the next observed trough instead of stalling live traffic.
         self.trough_merges = trough_merges
@@ -73,6 +81,7 @@ class ProvusePlatform:
             self._dispatch_batch, max_batch=max_batch, max_delay_ms=max_delay_ms,
             adaptive=adaptive, adaptive_config=adaptive_config,
             on_request_done=lambda name, lat_s, k: self.meter.observe_latency(name, lat_s),
+            clock=self.clock,
         )
         # fission: the reconciler periodically runs the regret check
         # (Merger.evaluate_splits) so a merge the live signals say was a
@@ -223,19 +232,23 @@ class ProvusePlatform:
         """External (client) invocation — serial path."""
         self.handler.record_canary(name, args)
         self.handler.note_demand(name)
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
         out = self._invoke_with_retry(name, args)
-        self.meter.observe_latency(name, time.perf_counter() - t0)
+        self.meter.observe_latency(name, self.clock.now() - t0)
         return out
 
-    def invoke_async(self, name: str, *args, priority: int = 0) -> Future:
+    def invoke_async(self, name: str, *args, priority: int = 0,
+                     slo: SLOClass | None = None) -> Future:
         """External invocation through the request scheduler. Returns a
         Future; compatible concurrent requests may execute as one batch.
-        ``priority=PRIORITY_HIGH`` requests jump queued normal traffic and
-        close an open batching window early (SLO admission)."""
+        ``slo=SLOClass(name, target_p95_ms)`` admits the request into its
+        class's own lane (single-class batches, window from the class's
+        target slack); ``priority=PRIORITY_HIGH`` is the two-level shim —
+        it maps to the zero-target class, jumps queued normal traffic, and
+        closes an open batching window early (SLO admission)."""
         self.handler.record_canary(name, args)
         self.handler.note_demand(name)
-        return self.scheduler.submit(name, args, priority=priority)
+        return self.scheduler.submit(name, args, priority=priority, slo=slo)
 
     def scheduler_signals(self, names):
         """Live scheduler feedback for the fusion policy (Merger.submit)."""
@@ -268,7 +281,7 @@ class ProvusePlatform:
     def _fission_tick(self) -> None:
         """Reconciler-tick hook: rate-limited regret evaluation over the
         committed fusion groups (control-plane work, off the data path)."""
-        now = time.perf_counter()
+        now = self.clock.now()
         if now - self._last_fission_eval < self._fission_interval_s:
             return
         self._last_fission_eval = now
@@ -278,9 +291,9 @@ class ProvusePlatform:
         """Blocking function-to-function dispatch (runs inside the caller's
         pure_callback — the caller's program is parked until this returns)."""
         self.handler.record_canary(callee, args)
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
         out = self._dispatch_sync(callee, args)
-        wait = time.perf_counter() - t0
+        wait = self.clock.now() - t0
         self.handler.attribute_blocked(wait)
         self.handler.observe_edge(caller_fn, callee, sync=True, wait_s=wait)
         return out

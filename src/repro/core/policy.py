@@ -15,10 +15,10 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
-from typing import Callable, Iterable
+from typing import Any, Callable, Iterable
 
 from repro.scheduler.adaptive import SchedulerSignals
+from repro.scheduler.clock import SYSTEM_CLOCK
 
 
 class UnionFind:
@@ -128,13 +128,19 @@ class FusionPolicy:
     cold_rate_ratio: float = 0.05
     min_group_age_s: float = 1.0
     remerge_backoff_s: float = 10.0
+    # Injectable time source (hysteresis backoffs, streak bookkeeping):
+    # tests drive merge<->split flap windows on a virtual clock, no sleeps.
+    clock: Any = None
 
     def __post_init__(self):
+        if self.clock is None:
+            self.clock = SYSTEM_CLOCK
         self.groups = UnionFind()
         self._lock = threading.Lock()
         self._fused_edges: set[tuple[str, str]] = set()
         self._edge_backoff: dict[tuple[str, str], float] = {}
         self._sat_streak: dict[frozenset[str], int] = {}
+        self._slo_streak: dict[frozenset[str], int] = {}
 
     def feedback_merge_cost(self, seconds: float) -> None:
         # exponential moving average of observed merge costs; `decide` reads
@@ -160,7 +166,7 @@ class FusionPolicy:
                 return FusionDecision(False, "fusion disabled")
             if (caller, callee) in self._fused_edges:
                 return FusionDecision(False, "edge already fused")
-            if self._edge_backoff.get((caller, callee), 0.0) > time.monotonic():
+            if self._edge_backoff.get((caller, callee), 0.0) > self.clock.now():
                 # the group this edge belonged to was just split — immediately
                 # re-merging on the same (still-warm) observation counters
                 # would flap merge<->split on every oscillation of the load
@@ -190,9 +196,26 @@ class FusionPolicy:
                 blocking_matters = (
                     signals.p95_ms == 0.0 or edge_wait_s >= 0.2 * signals.p95_ms / 1e3
                 )
+                # An SLO class violating its target on this chain promotes
+                # the merge IF removing the edge's sync-wait tail would
+                # plausibly un-violate it — fusion is then not a throughput
+                # optimization but the mechanism that restores the target.
+                viol = signals.worst_violation()
+                slo_fixable = (
+                    viol is not None
+                    and viol[1] - edge_wait_s * 1e3 <= viol[2]
+                    and edge_wait_s > 0.0
+                )
                 if saturated:
                     required_cost *= self.saturation_penalty
                     note = " [deprioritized: chain saturated]"
+                elif slo_fixable:
+                    required_cost *= self.promote_discount
+                    min_obs = max(1, min_obs // 2)
+                    note = (
+                        f" [promoted: class {viol[0]!r} at p95 {viol[1]:.1f}ms vs "
+                        f"target {viol[2]:.1f}ms; merge removes ~{edge_wait_s * 1e3:.1f}ms wait]"
+                    )
                 elif edge_wait_s >= self.promote_wait_s and blocking_matters:
                     required_cost *= self.promote_discount
                     min_obs = max(1, min_obs // 2)
@@ -213,8 +236,10 @@ class FusionPolicy:
         with self._lock:
             self._fused_edges.add((caller, callee))
             self.groups.union(caller, callee)
-            self._sat_streak.pop(self.groups.group(caller), None)
-            return self.groups.group(caller)
+            group = self.groups.group(caller)
+            self._sat_streak.pop(group, None)
+            self._slo_streak.pop(group, None)
+            return group
 
     # ------------------------------------------------------------- fission
 
@@ -236,9 +261,10 @@ class FusionPolicy:
         the per-member recent request rates (handler.recent_rate),
         ``baseline_p95_ms`` the pre-merge tail snapshotted at commit,
         ``current_p95_ms`` the recent post-merge tail, ``age_s`` time since
-        the merge committed. Three regret signals, checked in order:
-        sustained saturation, post-merge tail regression, member traffic
-        divergence (edge gone cold)."""
+        the merge committed. Four regret signals, checked in order:
+        sustained saturation, a sustained SLO-class violation on the group,
+        post-merge tail regression, member traffic divergence (edge gone
+        cold)."""
         members = frozenset(members)
         with self._lock:
             if not self.fission_enabled or len(members) < 2:
@@ -268,6 +294,28 @@ class FusionPolicy:
                     )
             else:
                 self._sat_streak.pop(members, None)
+            # --- SLO-class regret: a strict class sustained above its target
+            # on the fused group means the one serialized unit is violating a
+            # deadline per-member units could meet in parallel. Sustained
+            # (same streak discipline as saturation) so one tail blip — or
+            # the merge's own swap transient — cannot trigger fission; the
+            # min_group_age_s/remerge_backoff_s hysteresis bounds flapping
+            # when the target is simply unachievable either way.
+            viol = signals.worst_violation() if signals is not None else None
+            if viol is not None:
+                streak = self._slo_streak.get(members, 0) + 1
+                self._slo_streak[members] = streak
+                if streak >= self.split_sustain:
+                    self._slo_streak.pop(members, None)
+                    return SplitDecision(
+                        True,
+                        f"SLO class {viol[0]!r} violated on fused group ({streak} "
+                        f"consecutive evaluations at p95 {viol[1]:.1f}ms vs target "
+                        f"{viol[2]:.1f}ms)",
+                        singletons,
+                    )
+            else:
+                self._slo_streak.pop(members, None)
             # --- post-merge tail regret vs the baseline snapshotted at commit
             if (
                 baseline_p95_ms > 0.0
@@ -310,7 +358,7 @@ class FusionPolicy:
         cells = [frozenset(c) for c in cells]
         members = frozenset().union(*cells) if cells else frozenset()
         cell_of = {m: i for i, cell in enumerate(cells) for m in cell}
-        until = time.monotonic() + (self.remerge_backoff_s if backoff_s is None else backoff_s)
+        until = self.clock.now() + (self.remerge_backoff_s if backoff_s is None else backoff_s)
         with self._lock:
             for a in members:
                 for b in members:
@@ -323,3 +371,4 @@ class FusionPolicy:
             }
             self.groups.split_cells(cells)
             self._sat_streak.pop(members, None)
+            self._slo_streak.pop(members, None)

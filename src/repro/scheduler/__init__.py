@@ -3,15 +3,20 @@
 The paper measures one request at a time; this package is the platform layer
 that turns *concurrent* external invocations into batched XLA executions
 (ProFaaStinate-style delayed grouping in front of Provuse's fused units),
-with per-key feedback-retuned batching windows (Fusionize++-style iteration)
-and two-level SLO-priority admission.
+with N-level SLO-class admission (per-(function, shape, class) lanes, no
+cross-class batches), per-lane windows set by a queueing model (EWMA
+arrival rate x EWMA batch service time -> predicted wait -> window from
+the class's slack), and an injectable clock that makes every timing
+behavior testable on a deterministic virtual clock.
 """
 from repro.scheduler.adaptive import (  # noqa: F401
     PRIORITY_HIGH,
     PRIORITY_NORMAL,
     AdaptiveConfig,
     AdaptiveWindow,
+    QueueingWindow,
     SchedulerSignals,
+    static_window_s,
 )
 from repro.scheduler.batching import (  # noqa: F401
     next_batch_bucket,
@@ -19,6 +24,17 @@ from repro.scheduler.batching import (  # noqa: F401
     split_results,
     stack_requests,
 )
+from repro.scheduler.clock import (  # noqa: F401
+    SYSTEM_CLOCK,
+    SystemClock,
+    VirtualClock,
+)
 from repro.scheduler.coalescer import AdmissionQueue, PendingRequest  # noqa: F401
 from repro.scheduler.metrics import LatencyWindow, percentiles_ms  # noqa: F401
 from repro.scheduler.scheduler import RequestScheduler  # noqa: F401
+from repro.scheduler.slo import (  # noqa: F401
+    BEST_EFFORT,
+    IMMEDIATE,
+    SLOClass,
+    slo_for_priority,
+)

@@ -1,39 +1,53 @@
-"""Feedback-driven micro-batch window control (Fusionize++-style iteration).
+"""Queueing-model micro-batch window control with per-class SLO targets.
 
-The static ``max_delay_ms`` knob from PR 1 forces one trade-off on every
-traffic shape: a long window taxes trickling clients with queueing delay
-they buy nothing for, a short window lets bursts slip through in fragments.
-:class:`AdaptiveWindow` closes the loop instead — each admission key owns a
-controller that watches what its batches actually looked like (EWMA of
-inter-arrival gaps and batch occupancy) and retunes the key's window after
-every batch:
+PR 2's controller grew and shrank each admission window with *gap
+heuristics* — multiplicative nudges toward ``(target_occupancy * max_batch
+- 1) * gap``. This revision replaces the growth rules with an explicit
+M/G/1-style model per (function, shape, class) lane, fed by two EWMAs the
+lane already observes:
 
-* **serial trickle** — the smoothed gap exceeds even the largest allowed
-  window, so waiting cannot catch a second request: the window decays
-  multiplicatively to ``min_delay_s`` (~0 added latency, greedy draining);
-* **dense arrivals, low occupancy** — batches close before enough requests
-  arrive: the window grows toward the gap-derived target
-  ``(target_occupancy * max_batch - 1) * gap``, bounded by ``max_delay_s``;
-* **batches close full** — the gap estimate is tiny, so the same target
-  shrinks the window back: a saturated key never holds requests longer
-  than it takes to fill a batch.
+* **arrival rate** ``lambda = 1 / ewma_gap`` (per class — each class's
+  arrival process is its own),
+* **batch service time** ``S`` (measured wall time of the lane's dispatches).
 
-A relative hysteresis dead-band plus bounded multiplicative steps keep the
-window from flapping batch-to-batch on noisy arrivals.
+From those, the predicted queue wait behind the lane's own backlog is the
+classic utilization blow-up::
 
-:class:`SchedulerSignals` is the packet of live scheduler state (queue
-depth, occupancy, per-function tail latency) the platform feeds into
-``FusionPolicy.decide`` — the paper's sync-edge counts decide *what* could
-fuse; these signals decide *when* a merge is worth the control-plane stall.
+    k_hat = clamp(1 + lambda * window, 1, max_batch)   # expected batch fill
+    rho   = lambda * S / k_hat                         # offered / capacity
+    W_q   = S * rho / (1 - rho)                        # M/G/1-flavored wait
+                                                       # (rho >= 1 -> inf)
+
+and the window decision is class-driven:
+
+* **best-effort** (no target): window = time to fill ``target_occupancy *
+  max_batch`` at the observed rate — the same steady-state the old
+  heuristics converged to, now computed directly instead of approached by
+  multiplicative steps.
+* **strict** (finite ``target_p95_ms``): window = ``min(fill time, slack)``
+  where ``slack = target - W_q - S``. The lane spends the target's slack on
+  batching and *nothing more*; when load (or an unachievable target) eats
+  the slack, the window collapses to zero and the class degrades to greedy
+  FIFO draining — the old pre-SLO behavior.
+* **trickle** (either kind): if the observed gap exceeds the window cap, no
+  second arrival can be caught by waiting; the window goes to the minimum.
+
+A relative hysteresis dead-band plus bounded multiplicative steps are kept
+from PR 2 so noisy arrivals still cannot flap the window batch-to-batch.
+
+:class:`SchedulerSignals` grows per-class tail latencies: the fusion policy
+promotes merges whose removed sync-wait would un-violate a class's target,
+and treats a sustained violated class on a fused group as regret (fission).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 
+from repro.scheduler.slo import BEST_EFFORT, SLOClass
 
-#: Priority levels for SLO-aware admission. A request submitted at
-#: ``PRIORITY_HIGH`` is served ahead of queued normal traffic and closes the
-#: current micro-batch window early instead of waiting it out.
+#: Priority levels for the PR 2 two-level API (kept working: HIGH maps to
+#: the zero-target ``IMMEDIATE`` class — see :mod:`repro.scheduler.slo`).
 PRIORITY_NORMAL = 0
 PRIORITY_HIGH = 1
 
@@ -43,27 +57,51 @@ class SchedulerSignals:
     """Live scheduler state for one (caller, callee) chain, consumed by the
     fusion policy: hot-but-saturated chains deprioritize merges (the stall
     hurts most exactly when batching is already absorbing the load), cold
-    chains with long waits promote them."""
+    chains with long waits promote them, and per-class tail violations both
+    promote merges that would remove the violating wait and count as regret
+    against merges that caused one."""
 
     queue_depth: int = 0        # pending requests across the chain's keys
     mean_occupancy: float = 0.0  # mean batch size / max_batch, 0..1
     p95_ms: float = 0.0          # worst per-function p95 latency in the chain
+    # RECENT per-class tails across the chain: (class name, p95_ms,
+    # target_ms) over the scheduler's trailing window. Classes with a
+    # finite POSITIVE target only: best-effort has no target to violate,
+    # and a zero target (the IMMEDIATE / PRIORITY_HIGH shim) promises zero
+    # *admission* delay, not zero end-to-end latency — service time alone
+    # would read it as violated forever and flap fission on every group.
+    class_p95_ms: tuple[tuple[str, float, float], ...] = ()
+
+    def worst_violation(self) -> tuple[str, float, float] | None:
+        """The violated class with the largest p95/target overshoot, or None
+        when every class with traffic is meeting its target."""
+        worst = None
+        worst_ratio = 1.0
+        for name, p95, target in self.class_p95_ms:
+            if target > 0 and math.isfinite(target) and p95 > target:
+                ratio = p95 / target
+                if ratio > worst_ratio:
+                    worst, worst_ratio = (name, p95, target), ratio
+        return worst
 
 
 @dataclasses.dataclass(frozen=True)
 class AdaptiveConfig:
-    """Knobs for the per-key window controller.
+    """Knobs for the per-lane window controller.
 
-    target_occupancy: fill fraction the controller steers batches toward;
-        the window target is the time for that many arrivals at the
-        smoothed rate.
+    target_occupancy: fill fraction best-effort lanes steer batches toward;
+        the fill time is how long that many arrivals take at the EWMA rate.
     min_delay_s / max_delay_s: hard bounds of the retuned window.
-    alpha: EWMA smoothing for arrival gaps and occupancy.
+    alpha: EWMA smoothing for arrival gaps, occupancy, and service time.
     grow / shrink: bounded multiplicative step per retune.
     hysteresis: relative dead-band — desired values within ±hysteresis of
         the current window leave it untouched (no per-batch flapping).
     floor_s: windows shrinking below this snap to min_delay_s (a
         sub-floor window buys nothing but timer churn).
+    slack_fraction: the share of a strict class's modeled slack the window
+        may spend (the rest absorbs model error — an EWMA under-estimating
+        the queue wait must not convert the whole target into batching
+        delay and violate it by construction).
     """
 
     target_occupancy: float = 0.75
@@ -74,37 +112,94 @@ class AdaptiveConfig:
     shrink: float = 0.6
     hysteresis: float = 0.2
     floor_s: float = 0.00025
+    slack_fraction: float = 0.5
 
 
-class AdaptiveWindow:
-    """One admission key's window controller. Single-writer: only the key's
-    dispatcher thread calls :meth:`observe_batch`; ``snapshot()`` readers see
-    torn-free floats under the GIL."""
+def static_window_s(slo: SLOClass, max_delay_s: float) -> float:
+    """The non-adaptive (static) window for a class: best-effort lanes use
+    the configured window unchanged; a zero-target class never waits; other
+    strict classes bound the added delay to a quarter of their target (no
+    estimates exist without a controller, so the bound is structural)."""
+    if slo.best_effort:
+        return max_delay_s
+    return min(max_delay_s, 0.25 * slo.target_s)
 
-    def __init__(self, max_batch: int, initial_delay_s: float, config: AdaptiveConfig | None = None):
+
+class QueueingWindow:
+    """One admission lane's window controller. Single-writer: only the
+    lane's dispatcher thread calls :meth:`observe_batch`; ``snapshot()``
+    readers see torn-free floats under the GIL. Pure — it never reads a
+    clock; every timestamp it sees arrived via ``observe_batch``, which is
+    what makes it drivable by a scripted virtual-clock trace."""
+
+    def __init__(
+        self,
+        max_batch: int,
+        initial_delay_s: float,
+        config: AdaptiveConfig | None = None,
+        slo: SLOClass = BEST_EFFORT,
+    ):
         self.cfg = config or AdaptiveConfig()
         self.max_batch = max(1, int(max_batch))
-        self.delay_s = min(max(float(initial_delay_s), self.cfg.min_delay_s), self.cfg.max_delay_s)
+        self.slo = slo
+        self.delay_s = self._clamp_seed(initial_delay_s)
         self.retunes = 0
         self._ewma_gap_s: float | None = None
         self._ewma_intra_s: float | None = None
         self._ewma_occupancy: float | None = None
+        self._ewma_service_s: float | None = None
         self._last_arrival_t: float | None = None
+
+    def _clamp_seed(self, delay_s: float) -> float:
+        seed = min(max(float(delay_s), self.cfg.min_delay_s), self.cfg.max_delay_s)
+        if not self.slo.best_effort:
+            # a strict lane's first window must already respect the target:
+            # with no estimates yet the structural static bound governs
+            seed = min(seed, static_window_s(self.slo, self.cfg.max_delay_s))
+        return seed
 
     def reset(self, initial_delay_s: float | None = None) -> None:
         """Forget learned traffic state (benchmark warmup isolation);
         optionally re-seed the window."""
         if initial_delay_s is not None:
-            self.delay_s = min(max(float(initial_delay_s), self.cfg.min_delay_s), self.cfg.max_delay_s)
+            self.delay_s = self._clamp_seed(initial_delay_s)
         self._ewma_gap_s = None
         self._ewma_intra_s = None
         self._ewma_occupancy = None
+        self._ewma_service_s = None
         self._last_arrival_t = None
 
-    def observe_batch(self, arrival_ts: list[float], closed_full: bool) -> float:
-        """Feed one closed batch's arrival timestamps; returns the retuned
-        window (seconds). Gaps are measured across batch boundaries too, so
-        a string of singleton batches still yields a rate estimate."""
+    # ------------------------------------------------------------- model
+
+    @property
+    def arrival_rate_rps(self) -> float:
+        gap = self._ewma_gap_s
+        return 1.0 / gap if gap and gap > 0 else 0.0
+
+    def predicted_wait_s(self) -> float:
+        """M/G/1-style queue-wait prediction behind this lane's backlog:
+        ``S * rho / (1 - rho)`` with ``rho = lambda * S / k_hat``. Infinite
+        once the lane is offered more than its batched capacity."""
+        lam = self.arrival_rate_rps
+        svc = self._ewma_service_s or 0.0
+        if lam <= 0 or svc <= 0:
+            return 0.0
+        k_hat = min(float(self.max_batch), max(1.0, 1.0 + lam * self.delay_s))
+        rho = lam * svc / k_hat
+        if rho >= 1.0:
+            return math.inf
+        return svc * rho / (1.0 - rho)
+
+    def observe_batch(
+        self,
+        arrival_ts: list[float],
+        closed_full: bool,
+        service_s: float | None = None,
+    ) -> float:
+        """Feed one closed batch's arrival timestamps (and the batch's
+        measured service wall time); returns the retuned window (seconds).
+        Gaps are measured across batch boundaries too, so a string of
+        singleton batches still yields a rate estimate."""
         a = self.cfg.alpha
         ts = sorted(arrival_ts)
         gaps = []
@@ -123,37 +218,72 @@ class AdaptiveWindow:
                 )
         occ = len(ts) / self.max_batch
         self._ewma_occupancy = occ if self._ewma_occupancy is None else (1 - a) * self._ewma_occupancy + a * occ
+        if service_s is not None and service_s >= 0:
+            self._ewma_service_s = (
+                service_s
+                if self._ewma_service_s is None
+                else (1 - a) * self._ewma_service_s + a * service_s
+            )
         new = self._retune(closed_full)
         if new != self.delay_s:
             self.retunes += 1
             self.delay_s = new
         return self.delay_s
 
-    def _retune(self, closed_full: bool) -> float:
-        cfg, cur = self.cfg, self.delay_s
+    def _desired_window(self) -> float | None:
+        """The model's raw window choice, before hysteresis/steps. None when
+        no rate estimate exists yet (the seed window governs)."""
+        cfg = self.cfg
+        if not self.slo.best_effort and self.slo.target_p95_ms == 0.0:
+            # zero-target (IMMEDIATE / PRIORITY_HIGH shim): never waits, by
+            # contract — even an operator min_delay_s floor (a best-effort
+            # timer-churn knob) must not re-open a window on this lane
+            return 0.0
         gap = self._ewma_gap_s
         if gap is None:
-            return cur
+            return None
         if gap >= cfg.max_delay_s:
-            # trickle: even the longest window can't catch one more arrival
-            desired = cfg.min_delay_s
-        else:
-            # time for (target_occupancy * max_batch) arrivals; the first
-            # request opens the window, so one fewer gap
-            need = max(0.0, cfg.target_occupancy * self.max_batch - 1.0)
-            desired = min(cfg.max_delay_s, max(cfg.min_delay_s, need * gap))
-            if (
-                desired > cur
-                and self._ewma_occupancy is not None
-                and self._ewma_occupancy >= cfg.target_occupancy
-            ):
-                desired = cur  # batches already fill to target: growth buys nothing
+            # trickle: even the longest window can't catch one more arrival,
+            # for ANY class — waiting buys queueing delay and nothing else
+            return cfg.min_delay_s if self.slo.best_effort else 0.0
+        # time to fill target_occupancy * max_batch; the first request opens
+        # the window, so one fewer arrival is needed
+        need = max(0.0, cfg.target_occupancy * self.max_batch - 1.0)
+        fill_s = need * gap
+        desired = min(cfg.max_delay_s, max(cfg.min_delay_s, fill_s))
+        if not self.slo.best_effort:
+            svc = self._ewma_service_s or 0.0
+            slack = self.slo.target_s - self.predicted_wait_s() - svc
+            budget = cfg.slack_fraction * slack
+            if budget <= cfg.min_delay_s:
+                # no slack left: degrade to greedy FIFO. Explicitly 0, not
+                # min_delay_s — a strict lane out of slack must stop adding
+                # delay entirely
+                return 0.0
+            desired = min(desired, budget)
+        return desired
+
+    def _retune(self, closed_full: bool) -> float:
+        cfg, cur = self.cfg, self.delay_s
+        desired = self._desired_window()
+        if desired is None:
+            return cur
+        if (
+            desired > cur
+            and self._ewma_occupancy is not None
+            and self._ewma_occupancy >= cfg.target_occupancy
+        ):
+            desired = cur  # batches already fill to target: growth buys nothing
         step_floor = cfg.max_delay_s / 32.0
         if desired > cur * (1.0 + cfg.hysteresis):
             return min(desired, max(cur * cfg.grow, step_floor))
         if desired < cur * (1.0 - cfg.hysteresis) or (desired < cur and closed_full):
             new = max(desired, cur * cfg.shrink)
-            return cfg.min_delay_s if new < cfg.floor_s else new
+            # sub-floor windows buy nothing but timer churn: snap straight
+            # to the model's floor — min_delay_s for best-effort trickle,
+            # 0.0 for a strict lane that must stop waiting (desired <= new,
+            # so the snap never moves the window up)
+            return desired if new < cfg.floor_s else new
         return cur
 
     def idle_close_s(self) -> float | None:
@@ -168,10 +298,21 @@ class AdaptiveWindow:
 
     def snapshot(self) -> dict:
         idle = self.idle_close_s()
+        wait = self.predicted_wait_s()
         return {
             "window_ms": self.delay_s * 1e3,
             "ewma_gap_ms": (self._ewma_gap_s or 0.0) * 1e3,
             "ewma_occupancy": self._ewma_occupancy or 0.0,
             "idle_close_ms": (idle or 0.0) * 1e3,
             "retunes": self.retunes,
+            "slo": self.slo.name,
+            "target_ms": self.slo.target_p95_ms,
+            "arrival_rps": round(self.arrival_rate_rps, 3),
+            "service_ms": (self._ewma_service_s or 0.0) * 1e3,
+            "predicted_wait_ms": wait * 1e3 if math.isfinite(wait) else math.inf,
         }
+
+
+#: PR 2 name, kept importable: the controller API (observe_batch/ delay_s /
+#: snapshot / idle_close_s / reset) is unchanged; only the retune model is new.
+AdaptiveWindow = QueueingWindow

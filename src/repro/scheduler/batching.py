@@ -21,12 +21,16 @@ def _leaf_sig(leaf) -> tuple:
     return (tuple(shape), str(dtype))
 
 
-def request_key(name: str, args: tuple) -> tuple:
-    """Admission-queue key: (function, argument-structure). On the hot path
-    for every scheduled request — leaf signatures read `.shape`/`.dtype`
-    directly and only fall back to jnp promotion for Python scalars."""
+def request_key(name: str, args: tuple, slo_name: str | None = None) -> tuple:
+    """Admission-queue key: (function, argument-structure[, SLO class]). On
+    the hot path for every scheduled request — leaf signatures read
+    `.shape`/`.dtype` directly and only fall back to jnp promotion for
+    Python scalars. ``slo_name`` partitions admission per class so batches
+    can never mix latency targets (a strict request must not ride in — or
+    wait behind — a best-effort convoy)."""
     leaves, treedef = jax.tree_util.tree_flatten(args)
-    return (name, str(treedef), tuple(_leaf_sig(l) for l in leaves))
+    key = (name, str(treedef), tuple(_leaf_sig(l) for l in leaves))
+    return key if slo_name is None else key + (slo_name,)
 
 
 def stack_requests(args_list: list[tuple]):

@@ -1,20 +1,32 @@
-"""Per-key admission queue with a micro-batching coalescer thread.
+"""Per-(function, shape, class) admission lane with a micro-batching
+coalescer thread.
 
-Each (function, request-shape) key owns one queue and one dispatcher thread.
-The dispatcher blocks for the first request, then keeps the batch open for up
-to ``max_delay_s`` past that first arrival (ProFaaStinate's "briefly delay to
-group" window), closing early when ``max_batch`` requests have been admitted.
-With ``max_delay_s == 0`` the window degenerates to greedy draining: whatever
-is already queued rides along, nothing waits — batching then costs zero added
-latency under bursty load and the scheduler behaves like serial dispatch when
-requests trickle in one at a time.
+Each (function, request-shape, SLO-class) key owns one queue and one
+dispatcher thread. The dispatcher blocks for the first request, then keeps
+the batch open for up to the lane's window past that first arrival
+(ProFaaStinate's "briefly delay to group", with the window set per class by
+the queueing-model controller — see :mod:`repro.scheduler.adaptive`),
+closing early when ``max_batch`` requests have been admitted, when the
+burst goes quiet (idle-close), or when a *preempt* lands. With a zero
+window the lane degenerates to greedy draining: whatever is already queued
+rides along, nothing waits.
 
-Admission is a two-level priority queue: requests submitted at
-``PRIORITY_HIGH`` are popped ahead of queued normal traffic, and their
-arrival *closes the window early* — an SLO-bound request never waits out a
-batching delay tuned for throughput. With an :class:`AdaptiveWindow`
-attached, the dispatcher feeds every closed batch back to the controller and
-picks up the retuned ``max_delay_s`` for the next window.
+Batches are single-class by construction — the class is part of the queue
+key — so a strict request can never be convoyed by best-effort traffic.
+Cross-class coupling happens through exactly one mechanism:
+:meth:`AdmissionQueue.preempt_window`, called by the scheduler when a
+strictly tighter-class request arrives for the same (function, shape). It
+*preempts the in-flight coalesce timer*: the dispatcher parked on the
+window wait wakes immediately, closes the window, and dispatches what it
+has, so neither the urgent request (behind the platform's dispatch path)
+nor the already-collected batch waits out a residual throughput window.
+The preempt is edge-triggered and only armed while a window is actually
+open — a preempt with no window in flight must not shorten the NEXT
+window (regression-tested).
+
+All blocking goes through the injected :class:`Clock`, which is what makes
+every window/idle/priority behavior testable on a virtual clock with zero
+real sleeps.
 
 A dispatcher that sees no traffic for ``idle_timeout_s`` offers itself back
 via ``on_idle`` (the scheduler drops the queue under its lock unless a
@@ -22,15 +34,15 @@ request raced in) and exits — shape-diverse workloads don't leak threads.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-import itertools
-import queue
 import threading
-import time
 from concurrent.futures import Future
 from typing import Callable
 
-from repro.scheduler.adaptive import AdaptiveWindow
+from repro.scheduler.adaptive import QueueingWindow
+from repro.scheduler.clock import SYSTEM_CLOCK, SystemClock
+from repro.scheduler.slo import BEST_EFFORT, SLOClass
 
 
 @dataclasses.dataclass
@@ -38,18 +50,16 @@ class PendingRequest:
     args: tuple
     future: Future
     t_enqueue: float
-    priority: int = 0
-
-
-_STOP = object()
-#: Sort key priority for the stop sentinel: below every real request, so a
-#: shutdown drains already-admitted traffic before the dispatcher exits.
-_STOP_PRIORITY = -1
+    # the admission class carries ALL priority semantics: lane selection,
+    # window length, and cross-lane preemption (the old integer priority
+    # field became write-only after the class-lane redesign and was removed)
+    slo: SLOClass = BEST_EFFORT
 
 
 class AdmissionQueue:
-    """One key's queue + dispatcher. ``dispatch`` receives (name, [args...])
-    and must return one result per request, in order."""
+    """One (function, shape, class) lane: queue + dispatcher. ``dispatch``
+    receives (name, [args...]) and must return one result per request, in
+    order."""
 
     def __init__(
         self,
@@ -60,100 +70,155 @@ class AdmissionQueue:
         max_batch: int,
         max_delay_s: float,
         idle_timeout_s: float = 60.0,
-        adaptive: AdaptiveWindow | None = None,
+        slo: SLOClass = BEST_EFFORT,
+        adaptive: QueueingWindow | None = None,
         on_batch_done: Callable[[str, list[PendingRequest], float], None] | None = None,
         on_idle: Callable[["AdmissionQueue"], bool] | None = None,
+        clock: SystemClock | None = None,
     ):
         self.name = name
         self.key = key
+        self.slo = slo
         self._dispatch = dispatch
         self.max_batch = max(1, int(max_batch))
         self.max_delay_s = max(0.0, float(max_delay_s))
         self.idle_timeout_s = idle_timeout_s
         self.adaptive = adaptive
+        self.clock = clock or SYSTEM_CLOCK
         self._on_batch_done = on_batch_done
         self._on_idle = on_idle
-        # Two-level admission: entries order by (-priority, seq) — high
-        # priority first, FIFO within a level. The seq tiebreak is unique, so
-        # comparison never reaches the (uncomparable) PendingRequest payload.
-        self._q: "queue.PriorityQueue" = queue.PriorityQueue()
-        self._seq = itertools.count()
+        # One condition guards the lane state: items, stop flag, and the
+        # window bookkeeping (open flag + preempt latch). Lock ordering is
+        # scheduler._lock -> this cv (submit/stop hold the scheduler lock
+        # while putting); the dispatcher NEVER takes the scheduler lock
+        # while holding the cv (on_idle / on_batch_done run outside it).
+        self._cv = threading.Condition()
+        self._items: collections.deque[PendingRequest] = collections.deque()
+        self._stopped = False
+        self._window_open = False
+        self._preempted = False
         self.thread = threading.Thread(target=self._loop, daemon=True, name=f"coalesce-{name}")
         self.thread.start()
 
+    # ----------------------------------------------------------------- API
+
     def put(self, req: PendingRequest) -> None:
-        self._q.put((-req.priority, next(self._seq), req))
+        with self._cv:
+            self._items.append(req)
+            self._cv.notify_all()
+
+    def preempt_window(self) -> bool:
+        """Close the currently open batching window, if any: the dispatcher
+        parked on the window timer wakes and dispatches what it has
+        collected NOW. Edge-triggered and armed only while a window is
+        open — calling this on an idle lane is a no-op (the next window
+        must open at full length). Returns whether a window was preempted."""
+        with self._cv:
+            if not self._window_open:
+                return False
+            self._preempted = True
+            self._cv.notify_all()
+            return True
 
     def empty(self) -> bool:
-        return self._q.empty()
+        with self._cv:
+            return not self._items
 
     def depth(self) -> int:
-        return self._q.qsize()
+        with self._cv:
+            return len(self._items)
 
     def stop(self) -> None:
-        self._q.put((-_STOP_PRIORITY, next(self._seq), _STOP))
+        """Stop after draining already-admitted traffic (a queued request
+        must never be stranded behind a shutdown)."""
+        with self._cv:
+            self._stopped = True
+            self._cv.notify_all()
 
     # ------------------------------------------------------------- internals
 
     def _collect(self, first: PendingRequest) -> tuple[list[PendingRequest], bool]:
-        """Admit up to max_batch requests within max_delay_s of the first.
-        A high-priority request — leading or admitted mid-window — closes
-        the window immediately: the already-collected batch dispatches now."""
+        """Admit up to max_batch requests within the lane's window of the
+        first arrival. The window closes early on: max_batch reached, stop,
+        idle-close (burst went quiet), or a cross-lane preempt (a tighter
+        class arrived on this function+shape)."""
+        clock = self.clock
         batch = [first]
-        delay = 0.0 if first.priority > 0 else self.max_delay_s
-        deadline = time.perf_counter() + delay
+        deadline = clock.now() + self.max_delay_s
         stopped = False
-        while len(batch) < self.max_batch:
-            remaining = deadline - time.perf_counter()
-            timeout = remaining
-            if self.adaptive is not None and timeout > 0:
-                # idle-close: a grown window is for catching a burst in
-                # flight; once arrivals pause longer than the smoothed
-                # intra-burst spacing allows, waiting out the rest of the
-                # window just convoys the collected requests
-                idle_cut = self.adaptive.idle_close_s()
-                if idle_cut is not None and idle_cut < timeout:
-                    timeout = idle_cut
+        with self._cv:
+            self._window_open = True
+            self._preempted = False
             try:
-                if timeout > 0:
-                    item = self._q.get(timeout=timeout)[2]
-                else:
-                    item = self._q.get_nowait()[2]  # window closed: drain only
-            except queue.Empty:
-                break  # window expired or burst went quiet: serve the batch
-            if item is _STOP:
-                stopped = True
-                break
-            batch.append(item)
-            if item.priority > 0:
-                # SLO early close: stop WAITING. The deadline collapses to
-                # now, so already-queued requests still drain in (free
-                # batching) but nothing holds the urgent request further.
-                deadline = time.perf_counter()
+                while len(batch) < self.max_batch:
+                    while self._items and len(batch) < self.max_batch:
+                        batch.append(self._items.popleft())
+                    if len(batch) >= self.max_batch:
+                        break
+                    if self._stopped:
+                        stopped = True
+                        break
+                    if self._preempted:
+                        self._preempted = False
+                        break  # tighter-class arrival: dispatch what we have
+                    remaining = deadline - clock.now()
+                    if remaining <= 0:
+                        break  # window expired: serve the batch
+                    timeout = remaining
+                    if self.adaptive is not None:
+                        # idle-close: a grown window is for catching a burst
+                        # in flight; once arrivals pause longer than the
+                        # smoothed intra-burst spacing allows, waiting out
+                        # the rest of the window just convoys the batch
+                        idle_cut = self.adaptive.idle_close_s()
+                        if idle_cut is not None and idle_cut < timeout:
+                            timeout = idle_cut
+                    woke_at = clock.now()
+                    clock.wait_on(self._cv, timeout)
+                    if not self._items and self.adaptive is not None:
+                        idle_cut = self.adaptive.idle_close_s()
+                        if idle_cut is not None and clock.now() - woke_at >= idle_cut:
+                            break  # burst went quiet: serve the batch
+            finally:
+                self._window_open = False
+                self._preempted = False
         return batch, stopped
 
     def _loop(self) -> None:
+        clock = self.clock
         while True:
-            try:
-                item = self._q.get(timeout=self.idle_timeout_s)[2]
-            except queue.Empty:
-                # idle: ask the scheduler to retire us; a concurrent submit
-                # makes it refuse, and we keep serving
+            first = None
+            with self._cv:
+                idle_deadline = clock.now() + self.idle_timeout_s
+                while not self._items:
+                    if self._stopped:
+                        return
+                    remaining = idle_deadline - clock.now()
+                    if remaining <= 0:
+                        break
+                    clock.wait_on(self._cv, remaining)
+                if self._items:
+                    first = self._items.popleft()
+            if first is None:
+                # idle: ask the scheduler to retire us (outside the cv — the
+                # retire path re-enters empty()); a concurrent submit makes
+                # it refuse, and we keep serving
                 if self._on_idle is not None and self._on_idle(self):
                     return
                 continue
-            if item is _STOP:
-                return
-            batch, stopped = self._collect(item)
-            if self.adaptive is not None:
-                self.max_delay_s = self.adaptive.observe_batch(
-                    [r.t_enqueue for r in batch], len(batch) >= self.max_batch
-                )
+            batch, stopped = self._collect(first)
             self._run_batch(batch)
             if stopped:
-                return
+                with self._cv:
+                    if not self._items:
+                        return
+                # stop raced new work in: keep draining (stop() is only
+                # called under the scheduler lock after _closed is set, so
+                # this tail is bounded)
 
     def _run_batch(self, batch: list[PendingRequest]) -> None:
+        clock = self.clock
+        t_exec = clock.now()
         try:
             results = self._dispatch(self.name, [r.args for r in batch])
             if len(results) != len(batch):
@@ -164,8 +229,10 @@ class AdmissionQueue:
         except BaseException as exc:  # noqa: BLE001 — every caller must hear about it
             for r in batch:
                 _resolve(r.future, exc=exc)
+            service_s = clock.now() - t_exec
         else:
-            t_done = time.perf_counter()
+            t_done = clock.now()
+            service_s = t_done - t_exec
             # Futures FIRST, metrics second: a raising metrics sink must
             # never strand a batch of clients blocked on unresolved futures.
             for r, out in zip(batch, results):
@@ -175,6 +242,14 @@ class AdmissionQueue:
                     self._on_batch_done(self.name, batch, t_done)
                 except Exception:  # noqa: BLE001 — observability is best-effort
                     pass
+        if self.adaptive is not None:
+            # fed AFTER dispatch so the controller's service EWMA sees the
+            # measured batch wall time (the queueing model's S)
+            self.max_delay_s = self.adaptive.observe_batch(
+                [r.t_enqueue for r in batch],
+                len(batch) >= self.max_batch,
+                service_s=service_s,
+            )
 
 
 def _resolve(future: Future, *, result=None, exc=None) -> None:

@@ -31,17 +31,21 @@ def percentiles_ms(samples_s, points=(50, 95, 99)) -> dict:
 class LatencyWindow:
     """Thread-safe bounded window of request latencies. Tracks the earliest
     request start and latest completion so `snapshot()` can report sustained
-    throughput alongside tail percentiles."""
+    throughput alongside tail percentiles. ``clock`` supplies the default
+    completion timestamp when a caller doesn't pass one (virtual-clock
+    tests drive latencies entirely in simulated time)."""
 
-    def __init__(self, maxlen: int = 200_000):
+    def __init__(self, maxlen: int = 200_000, clock=None):
         self._lock = threading.Lock()
+        self._clock = clock
         self._samples: collections.deque = collections.deque(maxlen=maxlen)
         self._count = 0
         self._t_first: float | None = None
         self._t_last = 0.0
 
     def observe(self, seconds: float, t_done: float | None = None) -> None:
-        t_done = time.perf_counter() if t_done is None else t_done
+        if t_done is None:
+            t_done = self._clock.now() if self._clock is not None else time.perf_counter()
         with self._lock:
             self._samples.append(seconds)
             self._count += 1

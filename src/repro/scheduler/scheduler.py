@@ -1,46 +1,66 @@
 """RequestScheduler: the front door for concurrent invocations.
 
 ``submit(name, args)`` returns a Future immediately; behind it, requests are
-routed to a per-(function, shape) :class:`AdmissionQueue` whose coalescer
-groups them into micro-batches and hands each batch to the platform's batched
-dispatch path. The scheduler is backend-agnostic — it only knows the dispatch
-callable — and tracks end-to-end (admission -> completion) latency per
-request plus batch-size occupancy, the numbers `stats()` reports as
-p50/p95/p99 and throughput.
+routed to a per-(function, shape, SLO-class) :class:`AdmissionQueue` whose
+coalescer groups them into micro-batches and hands each batch to the
+platform's batched dispatch path. The scheduler is backend-agnostic — it
+only knows the dispatch callable — and tracks end-to-end (admission ->
+completion) latency per request plus batch-size occupancy, the numbers
+`stats()` reports as p50/p95/p99 and throughput.
 
-With ``adaptive=True`` each queue gets its own :class:`AdaptiveWindow`
-controller seeded at ``max_delay_ms``: the batching window then retunes
-itself per key from observed arrival rate and occupancy instead of staying a
-static knob. ``submit(..., priority=PRIORITY_HIGH)`` routes through the
-queues' high-priority level and closes open windows early (SLO admission).
+Admission classes: ``submit(..., slo=SLOClass(name, target_p95_ms))`` keys
+the request into its class's own lane — batches never mix classes — and
+each lane's window comes from the queueing-model controller
+(:class:`QueueingWindow`): best-effort lanes tune for occupancy, strict
+lanes spend their target's modeled slack on batching and degrade to greedy
+FIFO when load eats it. A strict-class arrival *preempts* open windows of
+looser classes on the same (function, shape) — the in-flight coalesce
+timer is closed immediately, never waited out (see
+``AdmissionQueue.preempt_window``). The PR 2 two-level API still works:
+``priority=PRIORITY_HIGH`` maps to the zero-target ``IMMEDIATE`` class.
 
 The scheduler is also a *signal source* for the fusion policy:
-``signals_for(names)`` snapshots queue depth, mean batch occupancy, and the
-worst per-function p95 across a chain — the live feedback that decides
-whether a merge's control-plane stall is worth paying right now.
+``signals_for(names)`` snapshots queue depth, mean batch occupancy, the
+worst per-function p95 across a chain, and per-class tails vs their targets
+— the live feedback that decides whether a merge's control-plane stall is
+worth paying right now, and whether a committed merge is violating a
+class's target (fission regret).
+
+Every timing operation goes through the injected :class:`Clock`
+(``clock=None`` = wall clock), so windows, idle timeouts, quiesce barriers,
+and trough detection are all drivable by a deterministic virtual clock in
+tests — no real sleeps.
 
 Queue lifecycle: dispatcher threads are created lazily on a key's first
 request and retire themselves after ``idle_timeout_s`` without traffic, so
 shape-diverse workloads don't accumulate idle threads. All queue-map
 mutations (submit, retire, shutdown) serialize on one lock — a request can
-never be enqueued behind a stop sentinel or into a retired queue.
+never be enqueued behind a stop flag or into a retired queue.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import threading
-import time
 from concurrent.futures import Future
 from typing import Callable
 
-from repro.scheduler.adaptive import AdaptiveConfig, AdaptiveWindow, SchedulerSignals
+from repro.scheduler.adaptive import (
+    AdaptiveConfig,
+    QueueingWindow,
+    SchedulerSignals,
+    static_window_s,
+)
 from repro.scheduler.batching import largest_pow2_le, request_key
+from repro.scheduler.clock import SYSTEM_CLOCK
 from repro.scheduler.coalescer import AdmissionQueue, PendingRequest
 from repro.scheduler.metrics import LatencyWindow, percentiles_ms  # noqa: F401 — re-exported
+from repro.scheduler.slo import SLOClass, slo_for_priority
 
 _BATCH_WINDOW = 200_000  # bounded batch-size history
 _PER_NAME_WINDOW = 8_192  # per-function latency history (tail estimate only)
+_PER_CLASS_WINDOW = 8_192  # per-class latency history (SLO conformance)
 _RECENT_BATCHES = 256  # per-function recent batch sizes: the "right now"
 # occupancy the fusion policy's saturation guard keys on — an all-time
 # average would stay cold for hours after traffic actually saturates
@@ -50,6 +70,10 @@ _SIGNALS_TTL_S = 0.05  # signals_for memo: a hot unfused edge asks on every
 _RECENT_LATS = 1024  # per-function (t_done, latency) pairs: the fission
 # regret check compares post-merge tails against a pre-merge baseline, so it
 # needs a p95 over the trailing seconds, not over the whole 8k-sample window
+_CLASS_SIGNAL_WINDOW_S = 5.0  # lookback for the per-class tails handed to
+# the fusion policy: SLO regret must see whether a class is violated NOW —
+# an all-time window would keep reporting a long-recovered burst for
+# thousands of samples (same discipline as recent_p95_ms)
 
 
 class RequestScheduler:
@@ -63,8 +87,10 @@ class RequestScheduler:
         adaptive: bool = False,
         adaptive_config: AdaptiveConfig | None = None,
         on_request_done: Callable[[str, float, int], None] | None = None,
+        clock=None,
     ):
         self._dispatch = dispatch_batch
+        self.clock = clock or SYSTEM_CLOCK
         # clamp to the largest power of two <= max_batch: the coalescer then
         # never forms a batch the pow2 bucket set can't serve in one
         # execution (a batch of 6 against buckets {1,2,4} would dispatch
@@ -91,10 +117,25 @@ class RequestScheduler:
         self._cond = threading.Condition(self._lock)
         self._inflight: dict[str, int] = {}
         self._dispatch_tls = threading.local()  # name this thread is dispatching
-        self._last_submit_t: float | None = None
+        # Only strict-class (finite-target) arrivals are tracked for the
+        # trough detector — a best-effort trickle has no deadline a
+        # control-plane stall could violate, and letting it block troughs
+        # kept deferred merges pinned behind low-priority background
+        # traffic (the PR 3 reconciler's failure mode).
+        self._last_strict_submit_t: float | None = None
         self._closed = False
         self._latency = LatencyWindow()
         self._per_name: dict[str, LatencyWindow] = {}
+        self._per_class: dict[str, LatencyWindow] = {}
+        # (function, class) -> recent (t_done, latency) pairs, kept ONLY for
+        # classes with a finite positive target (the ones the policy can act
+        # on): the signals' per-class p95 is computed over a trailing time
+        # window, never all-time
+        self._recent_class_lats: dict[tuple[str, str], collections.deque] = {}
+        self._slo_classes: dict[str, SLOClass] = {}
+        # (function, shape) base key -> lanes, so a strict submit preempts
+        # its siblings without scanning every queue under the global lock
+        self._lanes_by_base: dict[tuple, list[AdmissionQueue]] = {}
         self._recent_by_name: dict[str, collections.deque] = {}
         self._recent_lat_by_name: dict[str, collections.deque] = {}
         self._batch_sizes: collections.deque = collections.deque(maxlen=_BATCH_WINDOW)
@@ -103,37 +144,82 @@ class RequestScheduler:
 
     # ----------------------------------------------------------------- API
 
-    def submit(self, name: str, args: tuple, *, priority: int = 0) -> Future:
-        req = PendingRequest(args, Future(), time.perf_counter(), priority=int(priority))
-        key = request_key(name, args)
+    def submit(
+        self,
+        name: str,
+        args: tuple,
+        *,
+        priority: int = 0,
+        slo: SLOClass | None = None,
+    ) -> Future:
+        """Admit one request. ``slo`` selects the admission class (defaults
+        to best-effort; ``priority=PRIORITY_HIGH`` is the two-level shim for
+        the zero-target class). Returns the request's Future."""
+        if slo is None:
+            slo = slo_for_priority(priority)
+        elif priority > 0 and slo.best_effort:
+            slo = slo_for_priority(priority)
+        req = PendingRequest(args, Future(), self.clock.now(), slo=slo)
+        key = request_key(name, args, slo.name)
         with self._lock:
             if self._closed:
                 raise RuntimeError("scheduler is shut down")
-            self._last_submit_t = req.t_enqueue
+            known = self._slo_classes.get(slo.name)
+            if known is not None and known.target_p95_ms != slo.target_p95_ms:
+                raise ValueError(
+                    f"SLO class {slo.name!r} redefined: target "
+                    f"{slo.target_p95_ms} != {known.target_p95_ms}"
+                )
+            self._slo_classes[slo.name] = slo
+            if not slo.best_effort:
+                self._last_strict_submit_t = req.t_enqueue
             q = self._queues.get(key)
             if q is None:
-                controller = (
-                    AdaptiveWindow(self.max_batch, self.max_delay_s, self.adaptive_config)
-                    if self.adaptive
-                    else None
-                )
-                # the controller clamps its seed into [min, max]_delay_s;
-                # the queue's first window must honor the same bounds
-                first_delay = controller.delay_s if controller is not None else self.max_delay_s
-                q = AdmissionQueue(
-                    name,
-                    self._tracked_dispatch,
-                    key=key,
-                    max_batch=self.max_batch,
-                    max_delay_s=first_delay,
-                    idle_timeout_s=self.idle_timeout_s,
-                    adaptive=controller,
-                    on_batch_done=self._record_batch,
-                    on_idle=self._retire_queue,
-                )
+                q = self._make_queue(name, key, slo)
                 self._queues[key] = q
+                self._lanes_by_base.setdefault(key[:-1], []).append(q)
             q.put(req)  # same lock as retire/shutdown: never lands post-stop
+            if not slo.best_effort:
+                # Early-close preemption: a strict arrival must never leave
+                # sibling lanes' open throughput windows running their full
+                # residual delay — the platform is about to serve urgent
+                # traffic, so collected batches dispatch now. Preempting the
+                # in-flight coalesce timer (not just sorting the request
+                # first) is what closes the residual-delay hole the
+                # two-level port opened (see coalescer docstring). The
+                # per-base index keeps this O(classes on this shape), not
+                # O(all lanes), on the urgent path.
+                for other in self._lanes_by_base.get(key[:-1], ()):
+                    if other is not q and slo.tighter_than(other.slo):
+                        other.preempt_window()
         return req.future
+
+    def _make_queue(self, name: str, key: tuple, slo: SLOClass) -> AdmissionQueue:
+        controller = (
+            QueueingWindow(self.max_batch, self.max_delay_s, self.adaptive_config, slo=slo)
+            if self.adaptive
+            else None
+        )
+        # the controller clamps its seed into [min, max] and under the
+        # class's structural bound; a static lane applies the same bound
+        first_delay = (
+            controller.delay_s
+            if controller is not None
+            else static_window_s(slo, self.max_delay_s)
+        )
+        return AdmissionQueue(
+            name,
+            self._tracked_dispatch,
+            key=key,
+            max_batch=self.max_batch,
+            max_delay_s=first_delay,
+            idle_timeout_s=self.idle_timeout_s,
+            slo=slo,
+            adaptive=controller,
+            on_batch_done=self._record_batch,
+            on_idle=self._retire_queue,
+            clock=self.clock,
+        )
 
     def _tracked_dispatch(self, name: str, args_list: list[tuple]) -> list:
         """Dispatch wrapper that maintains the per-function in-flight batch
@@ -156,18 +242,19 @@ class RequestScheduler:
     def quiesce(self, names=None, timeout: float = 10.0, *, include_queued: bool = True) -> bool:
         """Drain barrier for epoch transitions: block until the named
         functions (all functions when ``names`` is None) have no batch in
-        flight — and, with ``include_queued``, nothing queued either. The
-        control plane's reconciler runs the in-flight-only form (bounded)
-        before executing a deferred transition, so the control-plane stall
-        starts on a drained pipe; queued requests never need draining
-        because they re-resolve the NEW routes at dispatch time. A
-        dispatcher thread's own in-flight batch is excluded — the redeploy
-        retry path can reach a barrier from inside a dispatch, and waiting
-        on one's own batch would deadlock until timeout. Returns False on
-        timeout (traffic never went quiet)."""
+        flight — and, with ``include_queued``, nothing queued either (any
+        class: the barrier is about the pipe being empty, not about
+        deadlines). The control plane's reconciler runs the in-flight-only
+        form (bounded) before executing a deferred transition, so the
+        control-plane stall starts on a drained pipe; queued requests never
+        need draining because they re-resolve the NEW routes at dispatch
+        time. A dispatcher thread's own in-flight batch is excluded — the
+        redeploy retry path can reach a barrier from inside a dispatch, and
+        waiting on one's own batch would deadlock until timeout. Returns
+        False on timeout (traffic never went quiet)."""
         names = None if names is None else set((names,) if isinstance(names, str) else names)
         own = getattr(self._dispatch_tls, "name", None)
-        deadline = time.perf_counter() + timeout
+        deadline = self.clock.now() + timeout
         with self._cond:
             while True:
                 busy = any(
@@ -182,36 +269,41 @@ class RequestScheduler:
                 ) if include_queued else 0
                 if not busy and depth == 0:
                     return True
-                remaining = deadline - time.perf_counter()
+                remaining = deadline - self.clock.now()
                 if remaining <= 0:
                     return False
                 # queue depth changes don't signal the condition, so bound
                 # each wait: the barrier is control-plane-only, a few ms of
                 # poll granularity is invisible next to a drain
-                self._cond.wait(min(remaining, 0.01))
+                self.clock.wait_on(self._cond, min(remaining, 0.01))
 
     def is_trough(self, *, min_quiet_s: float = 0.01, gap_mult: float = 3.0) -> bool:
-        """Arrival-gap trough detector for the control plane's reconciler:
-        True when nothing is queued or in flight AND the time since the last
-        submit exceeds ``gap_mult`` smoothed inter-arrival gaps (from the
-        adaptive controllers' EWMAs) — i.e. the platform is in a lull that
-        the observed arrival process says will last, so a control-plane
-        stall lands on nobody. Without adaptive gap estimates the quiet
-        floor alone governs."""
-        now = time.perf_counter()
+        """Trough detector for the control plane's reconciler: True when a
+        control-plane stall would land on no deadline-bearing traffic.
+        Strict-class (finite-target) traffic governs: nothing strict may be
+        queued, the time since the last strict submit must exceed
+        ``gap_mult`` smoothed strict inter-arrival gaps (from the strict
+        lanes' controller EWMAs), and no batch of ANY class may be mid
+        dispatch (stalling an execution in flight delays work already
+        admitted). Queued or trickling BEST-EFFORT traffic does NOT defeat
+        the trough — it has no target a deferral could violate, and letting
+        it block kept deferred merges pinned behind background trickle."""
+        now = self.clock.now()
         with self._lock:
             if any(self._inflight.values()):
                 return False
-            if any(q.depth() for q in self._queues.values()):
+            if any(
+                q.depth() for q in self._queues.values() if not q.slo.best_effort
+            ):
                 return False
-            last = self._last_submit_t
+            last = self._last_strict_submit_t
             gaps = [
                 q.adaptive.snapshot()["ewma_gap_ms"] / 1e3
                 for q in self._queues.values()
-                if q.adaptive is not None
+                if q.adaptive is not None and not q.slo.best_effort
             ]
         if last is None:
-            return True  # never saw traffic: always a trough
+            return True  # never saw strict traffic: always a trough
         need = max(min_quiet_s, gap_mult * max(gaps)) if any(g > 0 for g in gaps) else min_quiet_s
         return now - last >= need
 
@@ -234,18 +326,39 @@ class RequestScheduler:
                 return False
             if self._queues.get(q.key) is q:
                 del self._queues[q.key]
+                base = q.key[:-1]
+                lanes = self._lanes_by_base.get(base)
+                if lanes is not None:
+                    lanes = [l for l in lanes if l is not q]
+                    if lanes:
+                        self._lanes_by_base[base] = lanes
+                    else:
+                        del self._lanes_by_base[base]
             return True
 
     # ------------------------------------------------------------- metrics
 
     def _record_batch(self, name: str, batch: list[PendingRequest], t_done: float) -> None:
         k = len(batch)
+        slo = batch[0].slo  # lanes are single-class: one class per batch
         with self._lock:
             self._batch_sizes.append(k)
             self._batches += 1
             win = self._per_name.get(name)
             if win is None:
                 win = self._per_name[name] = LatencyWindow(maxlen=_PER_NAME_WINDOW)
+            cls_win = self._per_class.get(slo.name)
+            if cls_win is None:
+                cls_win = self._per_class[slo.name] = LatencyWindow(maxlen=_PER_CLASS_WINDOW)
+            if not slo.best_effort and slo.target_p95_ms > 0:
+                nc_key = (name, slo.name)
+                nc_recent = self._recent_class_lats.get(nc_key)
+                if nc_recent is None:
+                    nc_recent = self._recent_class_lats[nc_key] = collections.deque(
+                        maxlen=_RECENT_LATS
+                    )
+                for r in batch:
+                    nc_recent.append((t_done, t_done - r.t_enqueue))
             recent = self._recent_by_name.get(name)
             if recent is None:
                 recent = self._recent_by_name[name] = collections.deque(maxlen=_RECENT_BATCHES)
@@ -259,6 +372,7 @@ class RequestScheduler:
             lat = t_done - r.t_enqueue
             self._latency.observe(lat, t_done)
             win.observe(lat, t_done)
+            cls_win.observe(lat, t_done)
             if self._on_request_done is not None:
                 try:
                     self._on_request_done(name, lat, k)
@@ -270,9 +384,11 @@ class RequestScheduler:
         summed queue depth over the chain's keys, mean occupancy of the
         chain's RECENT batches (last _RECENT_BATCHES per function — the
         saturation guard must see now, not an all-time average diluted by
-        hours of idle history), and the worst per-function p95."""
+        hours of idle history), the worst per-function p95, and each strict
+        class's tail vs its target across the chain (the policy's
+        SLO-violation promote/regret input)."""
         names = (names,) if isinstance(names, str) else tuple(names)
-        now = time.perf_counter()
+        now = self.clock.now()
         with self._lock:
             hit = self._signals_cache.get(names)
             if hit is not None and now - hit[0] < _SIGNALS_TTL_S:
@@ -280,9 +396,27 @@ class RequestScheduler:
             depth = sum(q.depth() for key, q in self._queues.items() if key[0] in names)
             sizes = [s for n in names for s in self._recent_by_name.get(n, ())]
             windows = [self._per_name[n] for n in names if n in self._per_name]
+            cutoff = now - _CLASS_SIGNAL_WINDOW_S
+            class_samples: dict[str, list[float]] = {}
+            for (n, cls), recent in self._recent_class_lats.items():
+                if n in names:
+                    class_samples.setdefault(cls, []).extend(
+                        lat for (t, lat) in recent if t >= cutoff
+                    )
+            targets = {cls: s.target_p95_ms for cls, s in self._slo_classes.items()}
         mean_occ = (sum(sizes) / len(sizes)) / self.max_batch if sizes else 0.0
         p95 = max((w.snapshot()["p95_ms"] for w in windows), default=0.0)
-        sig = SchedulerSignals(queue_depth=depth, mean_occupancy=mean_occ, p95_ms=p95)
+        class_p95 = tuple(
+            sorted(
+                (cls, percentiles_ms(samples, points=(95,))["p95_ms"],
+                 targets.get(cls, math.inf))
+                for cls, samples in class_samples.items()
+                if samples
+            )
+        )
+        sig = SchedulerSignals(
+            queue_depth=depth, mean_occupancy=mean_occ, p95_ms=p95, class_p95_ms=class_p95
+        )
         with self._lock:
             if len(self._signals_cache) > 256:  # bounded: chains are few
                 self._signals_cache.clear()
@@ -295,7 +429,7 @@ class RequestScheduler:
         fission regret check compares this against the pre-merge baseline
         snapshotted at commit — an all-time window would dilute a fresh
         regression with hours of healthy history."""
-        cutoff = time.perf_counter() - window_s
+        cutoff = self.clock.now() - window_s
         with self._lock:
             recent = self._recent_lat_by_name.get(name)
             samples = [lat for (t, lat) in recent if t >= cutoff] if recent else []
@@ -312,6 +446,8 @@ class RequestScheduler:
             self._batch_sizes.clear()
             self._batches = 0
             self._per_name = {}
+            self._per_class = {}
+            self._recent_class_lats = {}
             self._recent_by_name = {}
             self._recent_lat_by_name = {}
             self._signals_cache = {}
@@ -328,10 +464,37 @@ class RequestScheduler:
             queues = list(self._queues.values())
         out = []
         for q in queues:
-            row = {"name": q.name, "max_delay_ms": q.max_delay_s * 1e3, "depth": q.depth()}
+            row = {
+                "name": q.name,
+                "slo": q.slo.name,
+                "max_delay_ms": q.max_delay_s * 1e3,
+                "depth": q.depth(),
+            }
             if q.adaptive is not None:
                 row.update(q.adaptive.snapshot())
             out.append(row)
+        return out
+
+    def class_stats(self) -> dict:
+        """Per-class latency/conformance: percentiles, target, and whether
+        the class's p95 currently meets it. ``met`` is None for classes
+        without an actionable end-to-end target: best-effort (no target)
+        and zero-target classes (IMMEDIATE promises zero *admission* delay;
+        end-to-end latency always includes service time)."""
+        with self._lock:
+            windows = dict(self._per_class)
+            classes = dict(self._slo_classes)
+        out = {}
+        for cls_name, win in sorted(windows.items()):
+            snap = win.snapshot()
+            slo = classes.get(cls_name)
+            target = slo.target_p95_ms if slo is not None else math.inf
+            actionable = math.isfinite(target) and target > 0
+            out[cls_name] = {
+                **snap,
+                "target_p95_ms": target,
+                "met": (snap["p95_ms"] <= target) if actionable else None,
+            }
         return out
 
     def stats(self) -> dict:
@@ -349,6 +512,9 @@ class RequestScheduler:
                 "max_batch_seen": max(sizes) if sizes else 0,
             }
         )
+        classes = self.class_stats()
+        if classes:
+            out["classes"] = classes
         if self.adaptive:
             delays = [q.max_delay_s * 1e3 for q in queues]
             out["adaptive"] = {

@@ -1,0 +1,75 @@
+"""Multi-level SLO classes for admission control.
+
+PR 2's two-level ``priority=PRIORITY_HIGH`` admission generalizes to N
+*classes*, each carrying a latency target: ``invoke_async(..., slo=
+SLOClass("interactive", target_p95_ms=50.0))``. The class rides with the
+request into its own per-(function, shape, class) admission lane, where the
+window controller turns the target into a batching window via the queueing
+model (see :mod:`repro.scheduler.adaptive`): strict targets buy small
+windows (low added delay), loose or absent targets buy big ones
+(throughput). Batches never mix classes — a best-effort convoy can never
+drag a strict request's latency with it.
+
+Class semantics:
+
+* ``target_p95_ms`` is the class's end-to-end (admission -> completion) p95
+  target. ``inf`` means *best effort*: no target, window tuned purely for
+  occupancy — exactly the pre-SLO behavior.
+* A class with target ``0`` never waits: its window is always zero (greedy
+  drain), and its arrival preempts open windows of looser classes on the
+  same (function, shape) — this is what ``PRIORITY_HIGH`` maps to, so the
+  old two-level API keeps its exact semantics.
+* Ordering is by target: tighter targets are admitted first when multiple
+  classes contend, and only a *strictly tighter* arrival preempts an open
+  window.
+
+Classes are identified by name; two SLOClass values with the same name must
+carry the same target (the scheduler keys lanes and metrics by name).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """One admission class: a name and a p95 latency target (ms).
+
+    ``math.inf`` (the default) marks best-effort traffic — no deadline, the
+    window controller optimizes occupancy. Finite targets make the class
+    *strict*: the controller spends the target's slack (target minus
+    predicted queue wait minus service) on batching and nothing more.
+    """
+
+    name: str
+    target_p95_ms: float = math.inf
+
+    def __post_init__(self):
+        if self.target_p95_ms < 0:
+            raise ValueError(f"SLO target must be >= 0, got {self.target_p95_ms}")
+
+    @property
+    def best_effort(self) -> bool:
+        return not math.isfinite(self.target_p95_ms)
+
+    @property
+    def target_s(self) -> float:
+        return self.target_p95_ms / 1e3
+
+    def tighter_than(self, other: "SLOClass") -> bool:
+        return self.target_p95_ms < other.target_p95_ms
+
+
+#: The default class for untagged traffic: no deadline, occupancy-tuned
+#: window — byte-for-byte the pre-SLO scheduler behavior.
+BEST_EFFORT = SLOClass("best-effort", math.inf)
+
+#: What ``priority=PRIORITY_HIGH`` maps to: a zero-slack class that never
+#: waits out a window and preempts open looser-class windows on its key.
+IMMEDIATE = SLOClass("immediate", 0.0)
+
+
+def slo_for_priority(priority: int) -> SLOClass:
+    """Back-compat shim for the PR 2 two-level API."""
+    return IMMEDIATE if priority > 0 else BEST_EFFORT

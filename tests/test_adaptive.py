@@ -154,38 +154,52 @@ def test_window_bounds_respected():
 
 def test_adaptive_scheduler_converges_bursty_grows_trickle_decays():
     """The satellite convergence check, end to end through real dispatcher
-    threads: dense arrivals grow the retuned window above its seed; a serial
-    trickle decays it to ~0 so lone requests stop paying the window tax."""
-    # trickle: one request every 30ms against a 20ms-max window
+    threads ON THE VIRTUAL CLOCK: dense arrivals grow the retuned window
+    above its seed; a serial trickle decays it to ~0 so lone requests stop
+    paying the window tax. ~2 simulated seconds, ~no real waiting."""
+    from repro.scheduler import VirtualClock
+
+    # trickle: one request every 30ms (virtual) against a 20ms-max window
+    clock = VirtualClock()
     sched = RequestScheduler(
         lambda name, a: [x[0] for x in a], max_batch=4, max_delay_ms=20.0,
         adaptive=True, adaptive_config=AdaptiveConfig(max_delay_s=0.020),
+        clock=clock,
     )
     try:
         t_lone = []
-        for i in range(12):
-            t0 = time.perf_counter()
-            sched.submit("f", (i,)).result(timeout=5)
-            t_lone.append(time.perf_counter() - t0)
-            time.sleep(0.03)
+        for i in range(14):
+            t0 = clock.now()
+            fut = sched.submit("f", (i,))
+            clock.wait_for_waiters(1)
+            if not fut.done():  # window still open: expire it virtually
+                clock.advance(max(q.max_delay_s for q in sched._queues.values()) + 1e-4)
+            assert fut.result(timeout=5) == i
+            t_lone.append(clock.now() - t0)
+            clock.advance(0.030 - (clock.now() - t0))
         windows = sched.window_snapshot()
         assert windows and windows[0]["max_delay_ms"] < 1.0, windows
         # decayed window: the last lone requests return without the ~20ms wait
         assert min(t_lone[-3:]) < 0.010, t_lone
+        clock.assert_elapsed_real_below(10.0)
     finally:
         sched.shutdown()
 
-    # bursty: 3ms-spaced arrivals against a 1ms seed window
+    # bursty: 3ms-spaced (virtual) arrivals against a 1ms seed window
+    clock = VirtualClock()
     sched = RequestScheduler(
-        lambda name, a: (time.sleep(0.005), [x[0] for x in a])[1],
-        max_batch=8, max_delay_ms=1.0,
+        lambda name, a: [x[0] for x in a], max_batch=8, max_delay_ms=1.0,
         adaptive=True, adaptive_config=AdaptiveConfig(max_delay_s=0.050),
+        clock=clock,
     )
     try:
         futs = []
         for i in range(60):
             futs.append(sched.submit("f", (i,)))
-            time.sleep(0.003)
+            clock.wait_for_waiters(1)
+            clock.advance(0.003)
+        clock.wait_for_waiters(1)
+        clock.advance(0.050)  # flush the last open window
         done, not_done = wait(futs, timeout=30)
         assert not not_done
         windows = sched.window_snapshot()
@@ -193,6 +207,7 @@ def test_adaptive_scheduler_converges_bursty_grows_trickle_decays():
         st = sched.stats()
         assert st["mean_batch"] > 1.5, st
         assert st["adaptive"]["retunes"] > 0
+        clock.assert_elapsed_real_below(10.0)
     finally:
         sched.shutdown()
 

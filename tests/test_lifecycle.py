@@ -101,8 +101,13 @@ def test_concurrent_resolve_never_observes_draining(backend_cls):
 
 @pytest.mark.parametrize("backend_cls", BACKENDS)
 def test_split_merge_round_trip_preserves_outputs(backend_cls):
+    from repro.scheduler import VirtualClock
+
+    # the policy's re-merge backoff runs on its own virtual clock: the test
+    # expires the hysteresis window by advancing, not by sleeping
+    policy_clock = VirtualClock()
     p = backend_cls(FusionPolicy(min_observations=1, merge_cost_s=0.0,
-                                 remerge_backoff_s=0.05))
+                                 remerge_backoff_s=0.05, clock=policy_clock))
     try:
         deploy_chain(p)
         x = jnp.ones((2, 8))
@@ -136,7 +141,7 @@ def test_split_merge_round_trip_preserves_outputs(backend_cls):
 
         # after the backoff expires the merge is allowed again (reversible
         # fusion, not permanent fission) and semantics still hold
-        time.sleep(0.08)
+        policy_clock.advance(0.08)
         for _ in range(6):
             p.invoke("A", x)
         p.merger.wait_idle()
@@ -172,11 +177,14 @@ def test_split_rejects_bad_partition_and_stale_group():
 def test_fission_hysteresis_prevents_flapping():
     """Oscillating load must not flap merge<->split: saturation has to be
     *sustained* to split, a fresh merge cannot split inside its age floor,
-    and a fresh split cannot re-merge inside its backoff."""
-    from repro.scheduler import SchedulerSignals
+    and a fresh split cannot re-merge inside its backoff. The backoff
+    windows elapse on a virtual clock — no real sleeping."""
+    from repro.scheduler import SchedulerSignals, VirtualClock
 
+    clock = VirtualClock()
     policy = FusionPolicy(split_sustain=3, min_group_age_s=0.5,
-                          remerge_backoff_s=0.2, split_occupancy=0.8, split_depth=2)
+                          remerge_backoff_s=0.2, split_occupancy=0.8, split_depth=2,
+                          clock=clock)
     policy.commit("A", "B")
     members = frozenset({"A", "B"})
     hot = SchedulerSignals(queue_depth=10, mean_occupancy=0.95, p95_ms=50.0)
@@ -206,8 +214,9 @@ def test_fission_hysteresis_prevents_flapping():
     stats = EdgeStats(sync_count=100, total_wait_s=10.0)
     refused = policy.decide("A", "B", stats, "t", "t")
     assert not refused.fuse and "hysteresis" in refused.reason
-    time.sleep(0.25)  # backoff expired: fusion is available again
+    clock.advance(0.25)  # backoff expired (virtually): fusion available again
     assert policy.decide("A", "B", stats, "t", "t").fuse
+    clock.assert_elapsed_real_below(10.0)
 
 
 def test_decide_split_regret_signals():

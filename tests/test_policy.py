@@ -211,3 +211,78 @@ def test_edge_stats_p95_wait_tracks_tail_not_mean():
     assert st.p95_wait_s == 0.5
     st2 = EdgeStats(sync_count=3, total_wait_s=0.3)
     assert st2.p95_wait_s == st2.mean_wait_s  # no history: falls back to mean
+
+
+def test_violated_slo_class_promotes_fixing_merge():
+    """A strict class over target whose violation the merge's removed
+    sync-wait would cure: half the observation floor, discounted cost —
+    even when the generic promote gates (wait share of p95) wouldn't fire."""
+    policy = FusionPolicy(min_observations=4, merge_cost_s=2.0, amortization_horizon=500,
+                          promote_wait_s=10.0, promote_discount=0.5)
+    # 2 observations of 30ms waits: below the floor without signals, and far
+    # below promote_wait_s so only the SLO path can promote
+    stats = EdgeStats(sync_count=2, total_wait_s=0.06)
+    assert not policy.decide("a", "b", stats, "t", "t").fuse
+    # gold at 60ms vs a 40ms target: removing ~30ms of wait un-violates it
+    fixable = SchedulerSignals(queue_depth=0, mean_occupancy=0.1, p95_ms=60.0,
+                               class_p95_ms=(("gold", 60.0, 40.0),))
+    d = policy.decide("a", "b", stats, "t", "t", signals=fixable)
+    assert d.fuse and "gold" in d.reason
+    # gold at 200ms vs 40ms: the merge cannot cure it -> no SLO promote
+    hopeless = SchedulerSignals(queue_depth=0, mean_occupancy=0.1, p95_ms=200.0,
+                                class_p95_ms=(("gold", 200.0, 40.0),))
+    d = policy.decide("a", "b", stats, "t", "t", signals=hopeless)
+    assert not d.fuse and "gold" not in d.reason
+    # a class meeting its target never promotes
+    healthy = SchedulerSignals(queue_depth=0, mean_occupancy=0.1, p95_ms=30.0,
+                               class_p95_ms=(("gold", 30.0, 40.0),))
+    assert not policy.decide("a", "b", stats, "t", "t", signals=healthy).fuse
+
+
+def test_sustained_slo_violation_is_a_fission_regret_signal():
+    """A strict class over target on a fused group for split_sustain
+    consecutive evaluations orders a split into singletons; an oscillating
+    violation never does (streak resets, same discipline as saturation)."""
+    policy = FusionPolicy(min_group_age_s=0.0, split_sustain=3)
+    members = frozenset({"A", "B"})
+    bad = SchedulerSignals(queue_depth=0, mean_occupancy=0.2, p95_ms=90.0,
+                           class_p95_ms=(("gold", 90.0, 40.0),))
+    ok = SchedulerSignals(queue_depth=0, mean_occupancy=0.2, p95_ms=20.0,
+                          class_p95_ms=(("gold", 20.0, 40.0),))
+    # oscillating: the streak resets before reaching split_sustain
+    for _ in range(4):
+        assert not policy.decide_split(members, signals=bad, age_s=1.0).split
+        assert not policy.decide_split(members, signals=bad, age_s=1.0).split
+        assert not policy.decide_split(members, signals=ok, age_s=1.0).split
+    # sustained: splits on the 3rd consecutive violated evaluation
+    assert not policy.decide_split(members, signals=bad, age_s=1.0).split
+    assert not policy.decide_split(members, signals=bad, age_s=1.0).split
+    d = policy.decide_split(members, signals=bad, age_s=1.0)
+    assert d.split and "SLO" in d.reason and "gold" in d.reason
+    assert set().union(*d.partition) == members
+
+
+def test_worst_violation_picks_largest_overshoot():
+    sig = SchedulerSignals(class_p95_ms=(("a", 50.0, 40.0), ("b", 90.0, 30.0),
+                                         ("c", 10.0, 40.0)))
+    assert sig.worst_violation() == ("b", 90.0, 30.0)
+    assert SchedulerSignals().worst_violation() is None
+    met = SchedulerSignals(class_p95_ms=(("a", 10.0, 40.0),))
+    assert met.worst_violation() is None
+
+
+def test_zero_target_class_is_never_a_violation():
+    """Regression: IMMEDIATE (the PRIORITY_HIGH shim, target 0) promises
+    zero ADMISSION delay — end-to-end p95 always includes service time, so
+    reading it as violated kept every fused group in a permanent fission
+    streak (split -> backoff -> re-merge -> split, forever)."""
+    import math
+
+    sig = SchedulerSignals(class_p95_ms=(("immediate", 5.8, 0.0),))
+    assert sig.worst_violation() is None
+    policy = FusionPolicy(min_group_age_s=0.0, split_sustain=1)
+    d = policy.decide_split(frozenset({"A", "B"}), signals=sig, age_s=1.0)
+    assert not d.split, d.reason
+    # infinite targets (best-effort) are equally inert
+    be = SchedulerSignals(class_p95_ms=(("be", 500.0, math.inf),))
+    assert be.worst_violation() is None

@@ -1,0 +1,539 @@
+"""Deterministic SLO-scheduler simulations on the virtual clock.
+
+Every test here drives real scheduler machinery — window controllers,
+dispatcher threads, admission lanes — through *scripted virtual time*:
+arrivals land at exact simulated instants, windows expire because the test
+advances the clock, and nothing ever sleeps on the wall clock. Each
+simulation closes with the virtual clock's elapsed-real-time guard, which
+fails the test if the simulated seconds were in fact waited out for real.
+
+Covers (ISSUE 4 satellite 1 + the early-close regression):
+* the queueing-model window controller under scripted bursty / trickle /
+  overload / mixed-class traces (pure, single-threaded, exact);
+* full-scheduler sims asserting window decisions and per-class deadline
+  hits (strict classes meet target, best-effort still batches);
+* the PRIORITY_HIGH/strict-class early-close preempting an in-flight
+  coalesce timer instead of waiting out its residual delay.
+"""
+import math
+import threading
+from concurrent.futures import wait
+
+import pytest
+
+from repro.scheduler import (
+    BEST_EFFORT,
+    IMMEDIATE,
+    PRIORITY_HIGH,
+    AdaptiveConfig,
+    QueueingWindow,
+    RequestScheduler,
+    SLOClass,
+    VirtualClock,
+)
+
+#: Real-time budget for one whole simulation (CI boxes are slow; the point
+#: is that simulated time is orders of magnitude larger than real time).
+REAL_BUDGET_S = 10.0
+
+
+def settle(clock, n=1):
+    """Wait (real, bounded, event-driven) until the dispatcher threads are
+    parked on the virtual clock, so the next advance is observed."""
+    clock.wait_for_waiters(n, timeout=5.0)
+
+
+# ----------------------------------------------------------- virtual clock
+
+
+def test_virtual_clock_advance_and_sleep():
+    clock = VirtualClock()
+    assert clock.now() == 0.0
+    clock.advance(1.5)
+    assert clock.now() == pytest.approx(1.5)
+    woke = []
+
+    def sleeper():
+        clock.sleep(2.0)
+        woke.append(clock.now())
+
+    th = threading.Thread(target=sleeper, daemon=True)
+    th.start()
+    settle(clock)
+    clock.advance(1.0)
+    assert not woke, "sleep must not return before its virtual deadline"
+    settle(clock)
+    clock.advance(1.0)
+    th.join(timeout=5)
+    assert woke and woke[0] == pytest.approx(3.5)
+    with pytest.raises(ValueError):
+        clock.advance(-1)
+    clock.assert_elapsed_real_below(REAL_BUDGET_S)
+
+
+def test_virtual_clock_real_time_guard_fires():
+    clock = VirtualClock()
+    with pytest.raises(AssertionError, match="real time"):
+        clock.assert_elapsed_real_below(0.0)
+
+
+def test_virtual_clock_wait_on_wakes_on_notify_and_advance():
+    clock = VirtualClock()
+    cv = threading.Condition()
+    state = {"returns": 0}
+
+    def waiter():
+        with cv:
+            clock.wait_on(cv, 10.0)
+            state["returns"] += 1
+
+    th = threading.Thread(target=waiter, daemon=True)
+    th.start()
+    settle(clock)
+    with cv:
+        cv.notify_all()  # a real notify wakes it without any time passing
+    th.join(timeout=5)
+    assert state["returns"] == 1
+    clock.assert_elapsed_real_below(REAL_BUDGET_S)
+
+
+# ------------------------------------------- controller: scripted traces
+
+
+def cfg(**kw):
+    kw.setdefault("max_delay_s", 0.020)
+    return AdaptiveConfig(**kw)
+
+
+def test_controller_bursty_trace_grows_best_effort_window():
+    """Dense arrivals the seed window misses: the model's fill-time window
+    (time for target_occupancy*max_batch arrivals at the EWMA rate) grows
+    the lane toward packing whole bursts."""
+    win = QueueingWindow(8, 0.001, cfg())
+    t = 0.0
+    for _ in range(30):  # singletons 2ms apart: rate 500/s
+        win.observe_batch([t], closed_full=False, service_s=0.0005)
+        t += 0.002
+    # steady state: fill time = (0.75*8 - 1) * 2ms = 10ms
+    assert 0.004 < win.delay_s <= 0.020
+    assert win.arrival_rate_rps == pytest.approx(500.0, rel=0.05)
+
+
+def test_controller_trickle_trace_decays_to_zero_for_any_class():
+    """A gap beyond the window cap means no co-rider can be caught: the
+    window must go to the minimum for best-effort AND strict classes."""
+    for slo in (BEST_EFFORT, SLOClass("gold", 200.0)):
+        win = QueueingWindow(8, 0.020, cfg(), slo=slo)
+        t = 0.0
+        for _ in range(30):
+            win.observe_batch([t], closed_full=False, service_s=0.001)
+            t += 0.100
+        assert win.delay_s == 0.0, f"trickle must zero the window for {slo.name}"
+
+
+def test_controller_strict_window_spends_only_target_slack():
+    """A strict lane's window is bounded by slack_fraction * (target -
+    predicted_wait - service): the target can never be violated by the
+    batching delay the controller itself added."""
+    slo = SLOClass("gold", 10.0)
+    c = cfg(slack_fraction=0.5)
+    win = QueueingWindow(8, 0.020, c, slo=slo)
+    t = 0.0
+    for _ in range(40):  # arrivals 1ms apart, service 2ms per batch
+        win.observe_batch([t, t + 0.001], closed_full=False, service_s=0.002)
+        t += 0.002
+    slack = slo.target_s - win.predicted_wait_s() - 0.002
+    assert win.delay_s <= 0.5 * slack + 1e-9
+    assert win.delay_s < 0.020, "the throughput cap must not govern a strict lane"
+    # the same trace with a loose target is fill-time-bound instead
+    loose = QueueingWindow(8, 0.020, c, slo=SLOClass("silver", 500.0))
+    t = 0.0
+    for _ in range(40):
+        loose.observe_batch([t, t + 0.001], closed_full=False, service_s=0.002)
+        t += 0.002
+    assert loose.delay_s > win.delay_s, "looser targets buy bigger windows"
+
+
+def test_controller_overload_collapses_strict_window_to_greedy():
+    """Offered load above the lane's batched capacity drives the predicted
+    M/G/1 wait to infinity — the slack is gone, and the strict lane must
+    degrade to greedy FIFO (zero window), the pre-SLO behavior."""
+    slo = SLOClass("gold", 20.0)
+    win = QueueingWindow(4, 0.010, cfg(), slo=slo)
+    t = 0.0
+    for _ in range(40):  # 4-wide batches every 2ms = 2000 rps offered...
+        win.observe_batch([t, t + 5e-4, t + 1e-3, t + 1.5e-3], closed_full=True,
+                          service_s=0.008)  # ...against 4/8ms = 500 rps capacity
+        t += 0.002
+    assert win.predicted_wait_s() == math.inf
+    assert win.delay_s == 0.0, "no slack left: strict lane must stop adding delay"
+
+
+def test_controller_zero_target_class_never_opens_a_window():
+    # regression: an operator min_delay_s floor (a best-effort timer-churn
+    # knob shared by every lane's config) must not re-open a window on a
+    # zero-target lane after the first retune, nor hold a slack-starved
+    # strict lane above zero
+    for c in (cfg(), cfg(min_delay_s=0.001)):
+        win = QueueingWindow(8, 0.020, c, slo=IMMEDIATE)
+        assert win.delay_s == 0.0  # seed is clamped by the structural bound
+        t = 0.0
+        for _ in range(20):
+            win.observe_batch([t, t + 0.001], closed_full=False, service_s=0.001)
+            t += 0.002
+        assert win.delay_s == 0.0, f"min_delay_s leaked into a zero-target lane: {win.delay_s}"
+    # a strict lane with NO slack degrades to exactly greedy, floor or not
+    starved = QueueingWindow(4, 0.010, cfg(min_delay_s=0.001), slo=SLOClass("g", 20.0))
+    t = 0.0
+    for _ in range(40):  # offered 2000 rps vs 500 rps capacity: rho >= 1
+        starved.observe_batch([t, t + 5e-4, t + 1e-3, t + 1.5e-3], closed_full=True,
+                              service_s=0.008)
+        t += 0.002
+    assert starved.delay_s == 0.0
+
+
+def test_controller_mixed_class_trace_orders_windows_by_target():
+    """One shared arrival trace, three targets: the steady-state windows
+    must order inversely to strictness, and every strict window must fit
+    inside its own slack."""
+    classes = [SLOClass("gold", 8.0), SLOClass("silver", 60.0), BEST_EFFORT]
+    wins = {s.name: QueueingWindow(8, 0.004, cfg(), slo=s) for s in classes}
+    t = 0.0
+    for _ in range(50):  # pairs 1.5ms apart, 3ms service
+        for w in wins.values():
+            w.observe_batch([t, t + 0.0015], closed_full=False, service_s=0.003)
+        t += 0.003
+    gold, silver, be = (wins[s.name].delay_s for s in classes)
+    assert gold <= silver <= be, (gold, silver, be)
+    assert gold < 0.004, "an 8ms target with 3ms service leaves little slack"
+
+
+# ---------------------------------------------- scheduler: virtual traces
+
+
+def make_sim(dispatch=None, **kw):
+    clock = VirtualClock()
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_delay_ms", 16.0)
+    sched = RequestScheduler(
+        dispatch or (lambda name, a: [x[0] for x in a]), clock=clock, **kw
+    )
+    return clock, sched
+
+
+def test_sim_window_expiry_dispatches_batch_with_zero_real_sleeps():
+    """Two arrivals inside one window dispatch as one batch exactly when
+    the virtual window expires — 16ms of simulated waiting, ~0 real."""
+    batches = []
+    clock, sched = make_sim(lambda n, a: (batches.append(len(a)), [x[0] for x in a])[1])
+    try:
+        f1 = sched.submit("f", (1,))
+        settle(clock)
+        clock.advance(0.004)
+        f2 = sched.submit("f", (2,))
+        settle(clock)
+        clock.advance(0.012)  # window (16ms) expires exactly now
+        done, not_done = wait([f1, f2], timeout=5)
+        assert not not_done
+        assert batches == [2], "both arrivals must ride one batch"
+        st = sched.stats()
+        # virtual latencies: first waited the whole window, second 12ms
+        assert st["p95_ms"] == pytest.approx(16.0, abs=0.5)
+        clock.assert_elapsed_real_below(REAL_BUDGET_S)
+    finally:
+        sched.shutdown()
+
+
+def test_sim_trickle_decays_window_then_lone_requests_stop_waiting():
+    """Adaptive lane under a scripted 100ms trickle: the controller zeroes
+    the window, after which lone requests resolve with no virtual delay at
+    all (the old static-window tax is gone) — and no real time passed."""
+    clock, sched = make_sim(adaptive=True, max_delay_ms=16.0,
+                            adaptive_config=AdaptiveConfig(max_delay_s=0.016))
+    try:
+        lats = []
+        for i in range(14):  # multiplicative decay: ~10 batches to zero
+            t0 = clock.now()
+            fut = sched.submit("f", (i,))
+            settle(clock)  # dispatcher parks: on the window, or idle if done
+            if not fut.done():
+                # advance exactly the lane's current window — the precise
+                # virtual instant the batch must dispatch
+                w = max(q.max_delay_s for q in sched._queues.values())
+                clock.advance(w + 1e-4)
+            assert fut.result(timeout=5) == i
+            lats.append(clock.now() - t0)
+            clock.advance(0.100 - (clock.now() - t0))  # trickle spacing
+        assert lats[0] > 0.010, "the seed window makes the first lone request wait"
+        assert lats[-1] == pytest.approx(0.0, abs=1e-6), (
+            f"decayed window must stop taxing lone requests: {lats}"
+        )
+        rows = sched.window_snapshot()
+        assert rows and rows[0]["max_delay_ms"] == 0.0
+        clock.assert_elapsed_real_below(REAL_BUDGET_S)
+    finally:
+        sched.shutdown()
+
+
+def test_sim_mixed_classes_hit_deadlines_and_never_share_batches():
+    """Three classes on one (function, shape) under a scripted mixed trace:
+    every batch is single-class, the strict class's worst-case virtual
+    latency stays under its target, and class_stats reports conformance."""
+    gold = SLOClass("gold", 40.0)      # static window = 10ms
+    silver = SLOClass("silver", 160.0)  # static window = 16ms (cap)
+    batch_classes = []
+    BE_TAG, SILVER_TAG, GOLD_TAG = 0, 1, 2
+
+    def dispatch(name, args_list):
+        batch_classes.append({a[1] for a in args_list})
+        return [a[0] for a in args_list]
+
+    clock, sched = make_sim(dispatch, max_batch=4, max_delay_ms=16.0)
+    try:
+        futs = []
+        for round_ in range(12):
+            t0 = clock.now()
+            futs.append(sched.submit("f", (round_, BE_TAG), slo=BEST_EFFORT))
+            futs.append(sched.submit("f", (round_, SILVER_TAG), slo=silver))
+            settle(clock)
+            clock.advance(0.002)
+            futs.append(sched.submit("f", (round_, GOLD_TAG), slo=gold))
+            futs.append(sched.submit("f", (round_, GOLD_TAG), slo=gold))
+            # drive this round to completion: every window <= 16ms
+            for _ in range(20):
+                if all(f.done() for f in futs):
+                    break
+                settle(clock)
+                clock.advance(0.002)
+            clock.advance(0.050 - (clock.now() - t0))  # next round
+        done, not_done = wait(futs, timeout=5)
+        assert not not_done
+        for mix in batch_classes:
+            assert len(mix) == 1, f"cross-class batch observed: {batch_classes}"
+        classes = sched.class_stats()
+        assert set(classes) == {"best-effort", "gold", "silver"}
+        assert classes["gold"]["p95_ms"] <= gold.target_p95_ms
+        assert classes["gold"]["met"] is True
+        assert classes["silver"]["met"] is True
+        assert classes["best-effort"]["met"] is None  # no target to meet
+        # strict arrivals preempted the open best-effort/silver windows, so
+        # nothing best-effort waited past the strict arrival offset + window
+        assert classes["best-effort"]["p95_ms"] <= 16.0 + 0.5
+        clock.assert_elapsed_real_below(REAL_BUDGET_S)
+    finally:
+        sched.shutdown()
+
+
+def test_sim_strict_burst_batches_within_slack():
+    """Strict traffic still batches when the target leaves room: four gold
+    arrivals inside the 10ms static window ride one batch, with the worst
+    virtual latency well under target."""
+    gold = SLOClass("gold", 40.0)
+    batches = []
+    clock, sched = make_sim(lambda n, a: (batches.append(len(a)), [x[0] for x in a])[1],
+                            max_batch=4, max_delay_ms=16.0)
+    try:
+        futs = [sched.submit("f", (i,), slo=gold) for i in range(4)]
+        done, not_done = wait(futs, timeout=5)  # full batch: no advance needed
+        assert not not_done
+        assert batches == [4]
+        assert sched.class_stats()["gold"]["p95_ms"] <= gold.target_p95_ms
+        clock.assert_elapsed_real_below(REAL_BUDGET_S)
+    finally:
+        sched.shutdown()
+
+
+# ------------------------------------------------- early-close regression
+
+
+def test_sim_strict_arrival_preempts_in_flight_window_timer():
+    """Regression (ISSUE 4): a PRIORITY_HIGH / strict-class request arriving
+    while a looser lane's window timer is mid-flight must preempt that
+    timer. Before the fix, per-class lanes left the best-effort window
+    running its full residual delay — here 2 simulated seconds — so the
+    collected batch (and, with one dispatcher per key, the urgent request
+    behind it) waited it out. Now: everything resolves with NO additional
+    virtual time."""
+    clock, sched = make_sim(max_batch=8, max_delay_ms=2000.0)
+    try:
+        normal = [sched.submit("f", (i,)) for i in range(3)]
+        settle(clock)
+        clock.advance(0.020)  # the window is now in flight, 1.98s residual
+        settle(clock)
+        urgent = sched.submit("f", (99,), priority=PRIORITY_HIGH)
+        done, not_done = wait(normal + [urgent], timeout=5)
+        assert not not_done, "strict arrival failed to preempt the window timer"
+        assert urgent.result() == 99
+        st = sched.stats()
+        # no virtual time passed after the preempt: every latency is bounded
+        # by the 20ms that elapsed before the urgent arrival
+        assert st["p95_ms"] <= 20.0 + 0.5, st
+        clock.assert_elapsed_real_below(REAL_BUDGET_S)
+    finally:
+        sched.shutdown()
+
+
+def test_sim_preempt_is_edge_triggered_not_latched():
+    """A preempt with no window open must NOT shorten the next window: the
+    lane would otherwise degrade to greedy dispatch forever after the first
+    strict arrival."""
+    batches = []
+    clock, sched = make_sim(lambda n, a: (batches.append(len(a)), [x[0] for x in a])[1],
+                            max_batch=4, max_delay_ms=16.0)
+    try:
+        # strict arrival with NO best-effort window open anywhere
+        assert sched.submit("f", (0,), priority=PRIORITY_HIGH).result(timeout=5) == 0
+        # now a best-effort window must still run its full 16ms
+        f1 = sched.submit("f", (1,))
+        settle(clock)
+        clock.advance(0.008)
+        f2 = sched.submit("f", (2,))
+        settle(clock)
+        assert not f1.done(), "window closed early: preempt latched across batches"
+        clock.advance(0.008)
+        done, not_done = wait([f1, f2], timeout=5)
+        assert not not_done
+        assert batches[-1] == 2, "the full window must still coalesce the pair"
+        clock.assert_elapsed_real_below(REAL_BUDGET_S)
+    finally:
+        sched.shutdown()
+
+
+# ------------------------------------------------------ trough + quiesce
+
+
+def test_sim_trough_ignores_best_effort_trickle_but_not_strict():
+    """The reconciler's trough detector considers deadline-bearing traffic
+    only: a best-effort trickle must not block deferred control-plane work
+    (the PR 3 failure mode), while recent strict arrivals must."""
+    clock, sched = make_sim(max_delay_ms=0.0)
+    try:
+        for i in range(5):
+            assert sched.submit("f", (i,)).result(timeout=5) == i
+            assert sched.is_trough(min_quiet_s=0.01), (
+                "best-effort trickle must not defeat the trough detector"
+            )
+            clock.advance(0.005)
+        sched.submit("f", (9,), slo=SLOClass("gold", 40.0)).result(timeout=5)
+        assert not sched.is_trough(min_quiet_s=0.01), (
+            "a fresh strict arrival means a stall would land on deadline traffic"
+        )
+        clock.advance(0.02)
+        assert sched.is_trough(min_quiet_s=0.01)
+        clock.assert_elapsed_real_below(REAL_BUDGET_S)
+    finally:
+        sched.shutdown()
+
+
+def test_sim_quiesce_times_out_virtually_while_busy():
+    """The drain barrier's timeout is virtual too: a blocked dispatch holds
+    the barrier until the test advances past the deadline — no real wait."""
+    release = threading.Event()
+
+    def dispatch(name, args_list):
+        release.wait(5.0)
+        return [a[0] for a in args_list]
+
+    clock, sched = make_sim(dispatch, max_delay_ms=0.0)
+    try:
+        fut = sched.submit("f", (1,))
+        # the dispatcher is stuck inside dispatch (not parked on the clock):
+        # quiesce from a side thread must observe busy until we advance
+        out = {}
+
+        def barrier():
+            out["ok"] = sched.quiesce(timeout=0.05)
+
+        th = threading.Thread(target=barrier, daemon=True)
+        th.start()
+        settle(clock)  # the quiescer parks on the virtual clock
+        clock.advance(0.06)  # past the barrier deadline
+        th.join(timeout=5)
+        assert out["ok"] is False, "quiesce must time out (virtually) while busy"
+        release.set()
+        assert fut.result(timeout=5) == 1
+        assert sched.quiesce(timeout=1.0), "drained pipe must pass the barrier"
+        clock.assert_elapsed_real_below(REAL_BUDGET_S)
+    finally:
+        release.set()
+        sched.shutdown()
+
+
+def test_sim_idle_dispatcher_retires_on_virtual_timeout():
+    """Queue retirement rides the virtual clock: 60 simulated idle seconds
+    retire the dispatcher instantly in real time."""
+    clock, sched = make_sim(idle_timeout_s=60.0, max_delay_ms=0.0)
+    try:
+        assert sched.submit("f", (1,)).result(timeout=5) == 1
+        q = next(iter(sched._queues.values()))
+        settle(clock)
+        clock.advance(61.0)
+        q.thread.join(timeout=5)
+        assert not q.thread.is_alive()
+        assert sched.stats()["queues"] == 0
+        # the key still serves: a fresh queue spins up transparently
+        assert sched.submit("f", (2,)).result(timeout=5) == 2
+        clock.assert_elapsed_real_below(REAL_BUDGET_S)
+    finally:
+        sched.shutdown()
+
+
+def test_sim_immediate_traffic_emits_no_violation_signal():
+    """Regression: PRIORITY_HIGH traffic (zero-target class) must not feed
+    a 'violated class' signal to the policy — its end-to-end latency always
+    includes service time, and before the fix one high-priority request was
+    enough to flap fission on every group touching the function."""
+    clock, sched = make_sim(max_delay_ms=0.0)
+    try:
+        for i in range(4):
+            assert sched.submit("f", (i,), priority=PRIORITY_HIGH).result(timeout=5) == i
+        sig = sched.signals_for("f")
+        assert sig.class_p95_ms == (), sig
+        assert sig.worst_violation() is None
+        # the conformance report still shows the class, with no actionable target
+        assert sched.class_stats()["immediate"]["met"] is None
+        clock.assert_elapsed_real_below(REAL_BUDGET_S)
+    finally:
+        sched.shutdown()
+
+
+def test_sim_violation_signal_ages_out_of_the_recent_window():
+    """Regression: the policy's per-class tails are computed over a trailing
+    time window. A burst that violated a strict target must stop reporting
+    as violated once it is older than the window — an all-time p95 kept a
+    recovered class 'violated' for thousands of samples and split currently
+    healthy groups."""
+    gold = SLOClass("gold", 10.0)
+    release = threading.Event()
+    release.set()
+    clock, sched = make_sim(max_delay_ms=0.0)
+    try:
+        # a violating burst: hold requests past the target in virtual time
+        fut = sched.submit("f", (0,), slo=gold)
+        fut.result(timeout=5)
+        # fabricate the violation by submitting, advancing past target while
+        # the dispatcher is held, then releasing
+        gate = threading.Event()
+
+        def slow_dispatch(name, args_list):
+            gate.wait(5.0)
+            return [a[0] for a in args_list]
+
+        sched._dispatch = slow_dispatch
+        f2 = sched.submit("f", (1,), slo=gold)
+        for _ in range(50):
+            if sched._inflight:
+                break
+            threading.Event().wait(0.002)  # dispatcher entering dispatch
+        clock.advance(0.050)  # 50ms > the 10ms target while in flight
+        gate.set()
+        assert f2.result(timeout=5) == 1
+        sig = sched.signals_for("f")
+        assert sig.worst_violation() is not None, "the burst must read as violated"
+        clock.advance(6.0)  # past the 5s signal window: violation has aged out
+        sig = sched.signals_for("f")
+        assert sig.worst_violation() is None, sig
+        clock.assert_elapsed_real_below(REAL_BUDGET_S)
+    finally:
+        release.set()
+        sched.shutdown()
