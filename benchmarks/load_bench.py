@@ -47,13 +47,14 @@ from repro.configs import get_arch, reduced_config
 from repro.core import FusionPolicy, OrchestratedBackend, TinyJaxBackend
 from repro.models.model import build_model
 from repro.scheduler import percentiles_ms
+from repro.serving.continuous import ContinuousBatcher
 from repro.serving.engine import ServingEngine
 
 BACKENDS = {"tinyjax": TinyJaxBackend, "orchestrated": OrchestratedBackend}
 MODES = ("unfused-serial", "unfused-batched", "fused-serial", "fused-batched")
 
 
-def build_engine(args, fused: bool, adaptive: bool = False):
+def build_engine(args, fused: bool, adaptive: bool = False, kv_pages: int = 0):
     cfg = reduced_config(get_arch(args.arch))
     model = build_model(cfg)
     policy = FusionPolicy(min_observations=2, merge_cost_s=0.0, enabled=fused)
@@ -61,7 +62,8 @@ def build_engine(args, fused: bool, adaptive: bool = False):
         policy, max_batch=args.max_batch or args.concurrency, max_delay_ms=args.max_delay_ms,
         adaptive=adaptive,
     )
-    engine = ServingEngine(model, platform, max_len=args.max_len)
+    engine = ServingEngine(model, platform, max_len=args.max_len,
+                           kv_pages=kv_pages, kv_page_size=args.page_size)
     return engine, platform
 
 
@@ -697,6 +699,197 @@ def run_slo_smoke(args) -> int:
             return 1
 
 
+def run_serve(args, *, smoke: bool = False) -> dict:
+    """Paged continuous-batching serve demo vs the per-client-pytree
+    baseline, at EQUAL client count on the same fused chain.
+
+    Baseline: C closed-loop clients, each with its own full ``max_len``
+    dense cache pytree, decoding through the scheduler's micro-batched
+    dispatch (the PR 1-4 serve path) — every step is a rendezvous: C
+    futures, C cache pytrees stacked/split across the batching boundary.
+
+    Paged: the same C as a ContinuousBatcher capacity over one shared KV
+    arena. Open-loop arrivals with MIXED prompt and generation lengths join
+    the persistent in-flight batch post-prefill and leave at their step
+    limit; empty slots are masked. Tokens/s and p95 inter-token latency are
+    reported for both, plus per-request arena pages from the billing meter
+    (RAM now proportional to tokens held, not clients x max_len)."""
+    import queue as queue_mod
+
+    from repro.serving.engine import _greedy_token
+
+    c = min(args.concurrency, 4) if smoke else args.concurrency
+    steps = 12 if smoke else max(16, args.steps // 2)
+    prompt_lens = (4, 8) if smoke else (4, 8, 16)
+    n_requests = 5 * c
+    # the SHARED workload: mixed prompt and generation lengths
+    gens = [max(6, steps + ((i * 7) % 13) - 6) for i in range(n_requests)]
+    prompts = [jnp.full((1, prompt_lens[i % len(prompt_lens)]), 1 + i % 17, jnp.int32)
+               for i in range(n_requests)]
+
+    # --- paged continuous batching over the shared arena (calibrates the
+    # open-loop arrival schedule both sides then replay)
+    width = args.max_len // args.page_size
+    kv_pages = (c + 2) * width + 1  # in-flight residents + margin + scratch
+    engine, platform = build_engine(args, fused=True, kv_pages=kv_pages)
+    try:
+        warm(engine)  # fuse the chain + compile the dense routes
+        cb = ContinuousBatcher(engine, capacity=c)
+        # warmup: compile each prefill length + the capacity-C decode program
+        futs = [cb.submit({"tokens": prompts[i]}, 3) for i in range(min(c, len(prompts)))]
+        for f in futs:
+            f.result(timeout=300)
+        # calibrate arrivals so the in-flight batch stays occupied (~1.5x
+        # oversubscribed vs the paged solo rate); the identical offsets
+        # replay against the baseline, so whichever side is slower simply
+        # backs up — open-loop throughput measures capacity
+        t_cal = time.perf_counter()
+        cb.submit({"tokens": prompts[0]}, steps).result(timeout=300)
+        per_req_s = max(time.perf_counter() - t_cal, 1e-3)
+        offsets = [i * per_req_s / (1.5 * c) for i in range(n_requests)]
+        # warmup + calibration must not pollute the measured leases/occupancy
+        platform.meter.reset()
+        cb.reset_stats()
+        results = []
+        t0 = time.perf_counter()
+        pend = []
+        for i in range(n_requests):
+            target = t0 + offsets[i]
+            now = time.perf_counter()
+            if now < target:
+                time.sleep(target - now)
+            pend.append(cb.submit({"tokens": prompts[i]}, gens[i]))
+        for f in pend:
+            results.append(f.result(timeout=600))
+        paged_elapsed = time.perf_counter() - t0
+        paged_tokens = sum(r["tokens"].shape[1] for r in results)
+        itl = [s for r in results for s in r["step_s"]]
+        arena = platform.meter.arena_summary()
+        stats = cb.stats()
+        cb.shutdown()
+        paged = {
+            "tokens_s": round(paged_tokens / paged_elapsed, 1),
+            "itl_p95_ms": round(percentiles_ms(itl)["p95_ms"], 2),
+            "tokens": paged_tokens,
+            "elapsed_s": round(paged_elapsed, 3),
+            "mean_occupancy": round(stats["mean_occupancy"], 3),
+            "mean_pages_per_request": round(arena["mean_pages"], 2),
+            "max_pages_per_request": arena["max_pages"],
+            "arena_gb_s": arena["gb_s"],
+        }
+    finally:
+        platform.shutdown()
+
+    # --- baseline: the SAME open-loop request stream served by C client
+    # workers, each request with its own full max_len dense cache pytree,
+    # decode steps through the scheduler's micro-batched dispatch (the
+    # pre-arena serve path, at equal client count)
+    engine, platform = build_engine(args, fused=True)
+    try:
+        warm(engine)
+        # compile every prefill length and every batched decode bucket the
+        # run can touch — the timed stream must measure traffic, not compiles
+        for pl in prompt_lens:
+            engine.generate({"tokens": jnp.full((1, pl), 2, jnp.int32)}, steps=3)
+        warm_clients = [Client(engine, i, prompt_lens[0]) for i in range(c)]
+        k = 1
+        while k <= c:
+            futs = [engine.decode_step_async(cl.tokens, cl.cur_len, cl.caches)
+                    for cl in warm_clients[:k]]
+            for f in futs:
+                f.result()
+            k *= 2
+        platform.scheduler.reset_stats()
+        work: "queue_mod.Queue" = queue_mod.Queue()
+        base_lats: list[float] = []
+        base_tokens_done = [0]
+        lock = threading.Lock()
+
+        def serve_one(prompt, gen):
+            logits, caches, cur_len = engine.prefill({"tokens": prompt})
+            toks = 1
+            tokens = _greedy_token(jnp.asarray(logits))
+            lats = []
+            for _ in range(gen - 1):
+                t_s = time.perf_counter()
+                logits, caches = engine.decode_step_async(tokens, cur_len, caches).result()
+                lats.append(time.perf_counter() - t_s)
+                cur_len = cur_len + 1
+                tokens = _greedy_token(jnp.asarray(logits))
+                toks += 1
+            with lock:
+                base_lats.extend(lats)
+                base_tokens_done[0] += toks
+
+        def worker():
+            while True:
+                item = work.get()
+                if item is None:
+                    return
+                target_t, prompt, gen = item
+                now = time.perf_counter()
+                if now < target_t:
+                    time.sleep(target_t - now)
+                serve_one(prompt, gen)
+
+        threads = [threading.Thread(target=worker, daemon=True) for _ in range(c)]
+        t0 = time.perf_counter()
+        for i in range(n_requests):
+            work.put((t0 + offsets[i], prompts[i], gens[i]))
+        for _ in threads:
+            work.put(None)
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        base_elapsed = time.perf_counter() - t0
+        base = {
+            "tokens_s": round(base_tokens_done[0] / base_elapsed, 1),
+            "itl_p95_ms": round(percentiles_ms(base_lats)["p95_ms"], 2),
+            "tokens": base_tokens_done[0],
+            "elapsed_s": round(base_elapsed, 3),
+        }
+    finally:
+        platform.shutdown()
+
+    ratio = paged["tokens_s"] / max(base["tokens_s"], 1e-9)
+    out = {"mode": "serve", "clients": c, "requests": n_requests,
+           "baseline": base, "paged": paged, "speedup": round(ratio, 2)}
+    print(f"[serve] per-client baseline: {base['tokens_s']:8.1f} tok/s   "
+          f"itl p95 {base['itl_p95_ms']:7.2f} ms   ({base['tokens']} tokens)")
+    print(f"[serve] paged continuous  : {paged['tokens_s']:8.1f} tok/s   "
+          f"itl p95 {paged['itl_p95_ms']:7.2f} ms   ({paged['tokens']} tokens, "
+          f"occupancy {paged['mean_occupancy']:.2f})")
+    print(f"[serve] speedup {ratio:.2f}x   arena: {paged['mean_pages_per_request']:.1f} mean / "
+          f"{paged['max_pages_per_request']} max pages per request "
+          f"(vs {args.max_len // args.page_size} pages for a dense max_len cache)")
+    # the smoke floor is loose (a 2-core shared box adds +-30% run-to-run
+    # noise and the batcher's single loop thread absorbs it all); the full
+    # run is the demo and must show the real >= 1.5x effect
+    floor = 1.15 if smoke else 1.5
+    assert ratio >= floor, (
+        f"paged continuous batching must beat the per-client baseline "
+        f"(got {ratio:.2f}x, floor {floor}x)"
+    )
+    return out
+
+
+def run_serve_smoke(args) -> int:
+    """CI gate for the paged serve path; one retry (same policy as the other
+    smokes on shared 2-core CI boxes)."""
+    try:
+        run_serve(args, smoke=True)
+        return 0
+    except AssertionError:
+        print("[serve-smoke] attempt 1 flaked; retrying once")
+        try:
+            run_serve(args, smoke=True)
+            return 0
+        except AssertionError as exc:
+            print(f"[serve-smoke] FAIL: {exc}")
+            return 1
+
+
 def run_smoke(args) -> int:
     """CI gate: a few seconds of closed-loop traffic on the tiny model. Fails
     (exit 1) when coalescing stops happening or throughput collapses to
@@ -754,10 +947,21 @@ def main():
     ap.add_argument("--slo", action="store_true",
                     help="multi-class SLO demo: strict/standard/best-effort under mixed "
                          "load vs a FIFO baseline (with --smoke: tiny CI gate)")
+    ap.add_argument("--serve", action="store_true",
+                    help="paged continuous-batching serve demo vs the per-client-pytree "
+                         "baseline (with --smoke: tiny CI gate)")
+    ap.add_argument("--page-size", type=int, default=16, help="KV arena page size (tokens)")
     ap.add_argument("--modes", nargs="*", default=["fused-serial", "fused-batched"], choices=MODES)
     ap.add_argument("--json", action="store_true", help="emit machine-readable results")
     args = ap.parse_args()
 
+    if args.serve:
+        if args.smoke:
+            sys.exit(run_serve_smoke(args))
+        out = run_serve(args)
+        if args.json:
+            print(json.dumps(out, indent=2))
+        return
     if args.slo:
         if args.smoke:
             sys.exit(run_slo_smoke(args))

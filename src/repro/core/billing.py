@@ -15,6 +15,31 @@ import time
 
 
 @dataclasses.dataclass
+class ArenaLease:
+    """One request's stay in the paged KV arena: the per-request RAM bill.
+
+    With per-client cache pytrees every request was billed (implicitly) for
+    a full ``max_len`` cache; under paging a request holds only the pages
+    its tokens occupy, so its GB-s is ``pages x page_bytes x residency`` —
+    the platform-side RAM reduction the paper claims, made billable."""
+
+    function: str
+    request_id: str
+    pages: int          # peak pages held
+    page_bytes: int     # bytes per page across the whole chain (all stages)
+    t_alloc: float
+    t_free: float
+
+    @property
+    def duration_s(self) -> float:
+        return self.t_free - self.t_alloc
+
+    @property
+    def gb_seconds(self) -> float:
+        return self.duration_s * self.pages * self.page_bytes / 1e9
+
+
+@dataclasses.dataclass
 class InvocationRecord:
     function: str
     instance: str
@@ -41,6 +66,7 @@ class BillingMeter:
     def __init__(self, clock=None):
         self._lock = threading.Lock()
         self.records: list[InvocationRecord] = []
+        self.arena_leases: list[ArenaLease] = []
         from repro.scheduler.metrics import LatencyWindow
 
         # the platform's time source: latency durations arrive already
@@ -53,6 +79,11 @@ class BillingMeter:
         with self._lock:
             self.records.append(rec)
 
+    def record_arena(self, lease: ArenaLease) -> None:
+        """One request left the paged KV arena; bill its page residency."""
+        with self._lock:
+            self.arena_leases.append(lease)
+
     def observe_latency(self, function: str, seconds: float) -> None:
         """One *external* request completed end-to-end (admission/arrival ->
         response ready) after ``seconds``. Serial `invoke` and the scheduler's
@@ -64,7 +95,26 @@ class BillingMeter:
     def reset(self) -> None:
         with self._lock:
             self.records = []
+            self.arena_leases = []
         self._latency.reset()
+
+    def arena_gb_seconds(self) -> float:
+        with self._lock:
+            return sum(l.gb_seconds for l in self.arena_leases)
+
+    def arena_summary(self) -> dict:
+        """Per-request page residency: the serve path's RAM story."""
+        with self._lock:
+            leases = list(self.arena_leases)
+        if not leases:
+            return {"requests": 0, "gb_s": 0.0, "mean_pages": 0.0, "max_pages": 0}
+        return {
+            "requests": len(leases),
+            "gb_s": sum(l.gb_seconds for l in leases),
+            "mean_pages": sum(l.pages for l in leases) / len(leases),
+            "max_pages": max(l.pages for l in leases),
+            "mean_residency_s": sum(l.duration_s for l in leases) / len(leases),
+        }
 
     def total_gb_seconds(self) -> float:
         with self._lock:
@@ -87,11 +137,15 @@ class BillingMeter:
                 d["calls"] += 1
                 d["gb_s"] += r.gb_seconds
                 d["blocked_gb_s"] += r.blocked_s * r.resident_bytes / 1e9
-            return {
-                "total_gb_s": sum(d["gb_s"] for d in by_fn.values()),
-                "blocked_gb_s": sum(d["blocked_gb_s"] for d in by_fn.values()),
-                "by_function": by_fn,
-            }
+        out = {
+            "total_gb_s": sum(d["gb_s"] for d in by_fn.values()),
+            "blocked_gb_s": sum(d["blocked_gb_s"] for d in by_fn.values()),
+            "by_function": by_fn,
+        }
+        arena = self.arena_summary()
+        if arena["requests"]:
+            out["arena"] = arena
+        return out
 
 
 def now() -> float:

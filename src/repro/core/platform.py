@@ -55,6 +55,7 @@ class ProvusePlatform:
                  health_rtol: float = 2e-2, health_atol: float = 1e-2,
                  max_batch: int = 8, max_delay_ms: float = 2.0,
                  adaptive: bool = False, adaptive_config=None,
+                 be_shed_depth: int | None = None,
                  fission: bool = False, fission_interval_s: float = 0.25,
                  trough_merges: bool = False, max_defer_s: float = 1.0,
                  clock=None):
@@ -80,6 +81,7 @@ class ProvusePlatform:
         self.scheduler = RequestScheduler(
             self._dispatch_batch, max_batch=max_batch, max_delay_ms=max_delay_ms,
             adaptive=adaptive, adaptive_config=adaptive_config,
+            be_shed_depth=be_shed_depth,
             on_request_done=lambda name, lat_s, k: self.meter.observe_latency(name, lat_s),
             clock=self.clock,
         )

@@ -1,6 +1,9 @@
 """Pallas TPU kernels for the platform's compute hot spots.
 
-flash_attention / decode_attention / ssd_scan / moe_gmm, each with a
-pure-jnp oracle in ref.py and a jit'd dispatcher in ops.py (kernel on TPU,
-oracle on CPU, interpret mode for validation).
+flash_attention / decode_attention / paged_attention / ssd_scan / moe_gmm,
+each with a pure-jnp oracle in ref.py and a jit'd dispatcher in ops.py
+(kernel on TPU, oracle on CPU, interpret mode for validation).
+paged_attention adds block-table indirection over the split-K decode
+schedule (scalar-prefetched page ids) for the serving subsystem's shared
+KV arena; its off-TPU fallback is one XLA gather + the dense oracle.
 """

@@ -15,6 +15,8 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.moe_gmm import moe_gmm as _gmm_kernel
+from repro.kernels.paged_attention import gather_pages
+from repro.kernels.paged_attention import paged_decode_attention as _paged_kernel
 from repro.kernels.ssd_scan import ssd_scan as _ssd_kernel
 
 
@@ -43,6 +45,22 @@ def decode_attention(q, k, v, cur_len):
     mode = _mode()
     if mode != "ref" and _aligned((k.shape[1], 512)):
         return _decode_kernel(q, k, v, cur_len, interpret=(mode == "interpret"))
+    return ref.decode_attn_ref(q, k, v, cur_len)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_table, cur_len):
+    """q: (B, H, hd); pages (P, page, KV, hd); block_table (B, n) int32.
+
+    Kernel/interpret mode runs the block-table-indirect split-K kernel; the
+    ref path gathers pages contiguous (one XLA gather, fused into the
+    surrounding program) and reuses the dense decode oracle — bit-identical
+    to a dense cache of the same gathered width."""
+    mode = _mode()
+    if mode != "ref" and _aligned((k_pages.shape[1], 128)):
+        return _paged_kernel(q, k_pages, v_pages, block_table, cur_len,
+                             interpret=(mode == "interpret"))
+    k = gather_pages(k_pages, block_table)
+    v = gather_pages(v_pages, block_table)
     return ref.decode_attn_ref(q, k, v, cur_len)
 
 

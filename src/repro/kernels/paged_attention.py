@@ -1,0 +1,126 @@
+"""Paged flash-decoding attention — block-table indirection over the
+split-K decode schedule.
+
+Same partial-softmax sweep as ``decode_attention.py`` (grid minor axis walks
+the KV sequence, (m, l, acc) carried in VMEM scratch), but K/V live in a
+shared page arena ``(num_pages, page, KV, hd)`` instead of a per-sequence
+contiguous buffer: the kv-block index maps read the sequence's *block
+table* — scalar-prefetched so the physical page id is known before the
+kernel body runs and the DMA fetches exactly that page. Sequences of any
+ragged length batch together; pages past ``cur_len`` are masked, and padded
+block-table entries point at the arena's reserved scratch page (reads are
+safe, contributions masked to zero).
+
+``gather_pages`` is the non-TPU/interpret fallback shape: it reconstructs
+the contiguous (B, S, KV, hd) view with one advanced-indexing gather, which
+XLA fuses into the surrounding decode program (see
+``models/attention.py: paged_decode_attention`` for the dispatch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def gather_pages(pages: jax.Array, block_table: jax.Array) -> jax.Array:
+    """pages: (P, page, KV, hd); block_table: (B, n) -> (B, n*page, KV, hd).
+
+    The contiguous-gather fallback: one XLA gather rebuilds each sequence's
+    logical cache from its pages (garbage past cur_len — callers mask)."""
+    b, n = block_table.shape
+    _, page, kv, hd = pages.shape
+    return pages[block_table].reshape(b, n * page, kv, hd)
+
+
+def _paged_kernel(
+    bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, page: int, num_page_blocks: int,
+):
+    ib, _, ik = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, :]  # (hd,)
+    k = k_ref[0, :, 0, :]  # (page, hd)
+    v = v_ref[0, :, 0, :]  # (page, hd)
+    cur = len_ref[ib]
+
+    s = jnp.einsum("kh,h->k", k.astype(jnp.float32), q.astype(jnp.float32)) * scale
+    # logical position of this page's rows = page index * page + row
+    cols = ik * page + jax.lax.broadcasted_iota(jnp.int32, (page,), 0)
+    s = jnp.where(cols < cur, s, NEG_INF)
+
+    m_prev = m_ref[0]
+    m_cur = jnp.maximum(m_prev, jnp.max(s))
+    alpha = jnp.exp(m_prev - m_cur)
+    # explicit zero for masked positions: when EVERY score so far is masked
+    # (cur_len 0 — a batcher's empty slot), m_cur is still NEG_INF and
+    # exp(s - m_cur) would be 1 per position, making the output a mean of
+    # scratch-page garbage; with the guard l stays 0 and _finalize emits
+    # exact zeros, matching the "masked contributes nothing" contract
+    p = jnp.where(s <= NEG_INF * 0.5, 0.0, jnp.exp(s - m_cur))
+    l_ref[0] = l_ref[0] * alpha + jnp.sum(p)
+    m_ref[0] = m_cur
+    acc_ref[...] = acc_ref[...] * alpha + jnp.einsum(
+        "k,kh->h", p, v.astype(jnp.float32)
+    )[None, :]
+
+    @pl.when(ik == num_page_blocks - 1)
+    def _finalize():
+        l = l_ref[0]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, :] = (acc_ref[0] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_table: jax.Array,
+    cur_len: jax.Array,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, H, hd); k_pages/v_pages: (P, page, KV, hd);
+    block_table: (B, n_pages) int32; cur_len: (B,) -> (B, H, hd)."""
+    b, h, hd = q.shape
+    _, page, kv, _ = k_pages.shape
+    n = block_table.shape[1]
+    g = h // kv
+    grid = (b, h, n)
+    scale = 1.0 / (hd**0.5)
+
+    kernel = functools.partial(_paged_kernel, scale=scale, page=page, num_page_blocks=n)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block_table, cur_len
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda ib, ih, ik, bt, ln: (ib, ih, 0)),
+            # the indirection: physical page id comes from the prefetched table
+            pl.BlockSpec((1, page, 1, hd), lambda ib, ih, ik, bt, ln, g=g: (bt[ib, ik], 0, ih // g, 0)),
+            pl.BlockSpec((1, page, 1, hd), lambda ib, ih, ik, bt, ln, g=g: (bt[ib, ik], 0, ih // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda ib, ih, ik, bt, ln: (ib, ih, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), cur_len.astype(jnp.int32), q, k_pages, v_pages)

@@ -139,6 +139,33 @@ def decode_attention(
     return out.reshape(b, 1, h, hd)
 
 
+def paged_decode_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_table: jax.Array,
+    cur_len: jax.Array,
+) -> jax.Array:
+    """One-token attention over a paged KV arena.
+
+    q: (B,1,H,hd); pages: (P, page, KV, hd); block_table: (B, n) int32 rows
+    of physical page ids (padded entries point at the arena's scratch page);
+    cur_len: (B,) valid lengths. On TPU the block-table-indirect split-K
+    kernel reads pages directly; elsewhere ONE advanced-indexing gather
+    rebuilds the contiguous (B, n*page, KV, hd) view and the dense
+    ``decode_attention`` runs on it — when ``n*page`` equals the dense
+    path's ``max_len`` the two are the same program on the same values
+    (masked positions contribute exactly zero), so paging is bit-exact."""
+    from repro.kernels import ops as kops
+    from repro.kernels.paged_attention import gather_pages
+
+    if kops._mode() == "kernel" and k_pages.shape[1] % 128 == 0:
+        return kops.paged_decode_attention(q[:, 0], k_pages, v_pages, block_table, cur_len)[:, None]
+    k_cache = gather_pages(k_pages, block_table)
+    v_cache = gather_pages(v_pages, block_table)
+    return decode_attention(q, k_cache, v_cache, cur_len)
+
+
 def attn_output(params, attn: jax.Array) -> jax.Array:
     return jnp.einsum("bthk,hkd->btd", attn, params["wo"])
 
@@ -157,3 +184,25 @@ def update_kv_cache(
     k_cache = k_cache.at[batch_idx, positions].set(k_new.astype(k_cache.dtype))
     v_cache = v_cache.at[batch_idx, positions].set(v_new.astype(v_cache.dtype))
     return k_cache, v_cache
+
+
+def update_paged_kv(
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    block_table: jax.Array,
+    cur_len: jax.Array,
+):
+    """Scatter one new K/V token (B, 1, KV, hd) into the page arena at each
+    sequence's write position: physical page ``bt[b, cur//page]``, row
+    ``cur % page``. Masked slots carry an all-scratch block-table row with
+    ``cur_len == 0``, so their write lands in the reserved scratch page."""
+    page = k_pages.shape[1]
+    b = block_table.shape[0]
+    logical = cur_len // page
+    phys = block_table[jnp.arange(b), logical]  # (B,) physical page ids
+    slot = cur_len % page
+    k_pages = k_pages.at[phys, slot].set(k_new[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[phys, slot].set(v_new[:, 0].astype(v_pages.dtype))
+    return k_pages, v_pages

@@ -155,6 +155,46 @@ def apply_block_decode(
     return x, new_cache, _metrics_like(metrics)
 
 
+def apply_block_decode_paged(
+    params,
+    x: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_table: jax.Array,
+    cfg: ModelConfig,
+    kind: str,
+    rules: LogicalRules | None,
+    cur_len: jax.Array,
+):
+    """Single-token block step against one layer's page arena slice.
+
+    Same math as :func:`apply_block_decode` but the KV cache is
+    ``(num_pages, page, KV, hd)`` shared across requests, addressed through
+    the batch's block table: scatter the new token's K/V into its page,
+    then attend through the table (kernel indirection on TPU, contiguous
+    gather elsewhere). Attention kinds only — SSM state is recurrent, not
+    length-indexed, so it has no pages."""
+    if kind == "ssm":
+        raise ValueError("paged decode applies to attention caches only")
+    metrics = None
+    positions = cur_len[:, None]  # (B, 1)
+    h = apply_norm(params["ln1"], x, cfg)
+    q, k_new, v_new = attn_mod.qkv_project(params["attn"], h, cfg, positions)
+    k_pages, v_pages = attn_mod.update_paged_kv(
+        k_pages, v_pages, k_new, v_new, block_table, cur_len
+    )
+    out = attn_mod.paged_decode_attention(q, k_pages, v_pages, block_table, cur_len + 1)
+    x = x + attn_mod.attn_output(params["attn"], out)
+
+    h = apply_norm(params["ln2"], x, cfg)
+    if kind == "moe":
+        y, metrics = moe_mod.apply_moe(params["moe"], h, cfg, rules)
+    else:
+        y = apply_mlp(params["mlp"], h, cfg)
+    x = x + y
+    return x, k_pages, v_pages, _metrics_like(metrics)
+
+
 # ------------------------------------------------------------------ stacks
 
 
@@ -257,3 +297,46 @@ def apply_stack_decode(
 
     x, (new_caches, metrics) = jax.lax.scan(body, x, (stacked_params, caches))
     return x, new_caches, jax.tree.map(jnp.sum, metrics)
+
+
+def apply_stack_decode_paged(
+    stacked_params,
+    x: jax.Array,
+    arena: dict,
+    block_table: jax.Array,
+    cfg: ModelConfig,
+    kind: str,
+    rules: LogicalRules | None,
+    cur_len: jax.Array,
+):
+    """One decode step through the stack against a paged arena.
+
+    ``arena``: ``{'k','v'}`` of shape (L, num_pages, page, KV, hd) — the
+    stage's slice of the shared pool. Like :func:`apply_stack_decode`'s
+    carry mode, the arena rides in the scan CARRY with per-layer in-place
+    dynamic updates, so the whole pool stays ONE buffer through the stack
+    instead of double-buffering per layer."""
+    n = jax.tree.leaves(stacked_params)[0].shape[0]
+
+    def body(carry, inp):
+        i, layer_params = inp
+        h, arena_c = carry
+        k_pages = jax.lax.dynamic_index_in_dim(arena_c["k"], i, 0, keepdims=False)
+        v_pages = jax.lax.dynamic_index_in_dim(arena_c["v"], i, 0, keepdims=False)
+        h, k_pages, v_pages, metrics = apply_block_decode_paged(
+            layer_params, h, k_pages, v_pages, block_table, cfg, kind, rules, cur_len
+        )
+        arena_c = {
+            "k": jax.lax.dynamic_update_index_in_dim(
+                arena_c["k"], k_pages.astype(arena_c["k"].dtype), i, 0
+            ),
+            "v": jax.lax.dynamic_update_index_in_dim(
+                arena_c["v"], v_pages.astype(arena_c["v"].dtype), i, 0
+            ),
+        }
+        return (h, arena_c), metrics
+
+    (x, new_arena), metrics = jax.lax.scan(
+        body, (x, arena), (jnp.arange(n), stacked_params)
+    )
+    return x, new_arena, jax.tree.map(jnp.sum, metrics)

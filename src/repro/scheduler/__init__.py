@@ -16,6 +16,7 @@ from repro.scheduler.adaptive import (  # noqa: F401
     AdaptiveWindow,
     QueueingWindow,
     SchedulerSignals,
+    ServiceTimeEstimate,
     static_window_s,
 )
 from repro.scheduler.batching import (  # noqa: F401
@@ -31,10 +32,11 @@ from repro.scheduler.clock import (  # noqa: F401
 )
 from repro.scheduler.coalescer import AdmissionQueue, PendingRequest  # noqa: F401
 from repro.scheduler.metrics import LatencyWindow, percentiles_ms  # noqa: F401
-from repro.scheduler.scheduler import RequestScheduler  # noqa: F401
+from repro.scheduler.scheduler import OverloadShedError, RequestScheduler  # noqa: F401
 from repro.scheduler.slo import (  # noqa: F401
     BEST_EFFORT,
     IMMEDIATE,
+    ClassLanes,
     SLOClass,
     slo_for_priority,
 )

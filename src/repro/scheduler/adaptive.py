@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 
 from repro.scheduler.slo import BEST_EFFORT, SLOClass
 
@@ -50,6 +51,40 @@ from repro.scheduler.slo import BEST_EFFORT, SLOClass
 #: the zero-target ``IMMEDIATE`` class — see :mod:`repro.scheduler.slo`).
 PRIORITY_NORMAL = 0
 PRIORITY_HIGH = 1
+
+
+class ServiceTimeEstimate:
+    """Batch-service-time EWMA shared across one function's SLO lanes.
+
+    Service time is a property of the FUNCTION (its compiled batch
+    program), not of the admission class — but each lane used to keep its
+    own EWMA, so every new class lane cold-started its M/G/1 model with no
+    service estimate and spent its first batches flying blind. Sharing one
+    estimate per function means a fresh strict lane prices its slack
+    correctly from its very first window.
+
+    Thread-safe: lanes' dispatcher threads update concurrently."""
+
+    def __init__(self, alpha: float = 0.3):
+        self.alpha = alpha
+        self._lock = threading.Lock()
+        self._value: float | None = None
+
+    @property
+    def value(self) -> float | None:
+        return self._value
+
+    def observe(self, service_s: float) -> None:
+        if service_s < 0:
+            return
+        a = self.alpha
+        with self._lock:
+            v = self._value
+            self._value = service_s if v is None else (1 - a) * v + a * service_s
+
+    def reset(self) -> None:
+        with self._lock:
+            self._value = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,16 +173,20 @@ class QueueingWindow:
         initial_delay_s: float,
         config: AdaptiveConfig | None = None,
         slo: SLOClass = BEST_EFFORT,
+        service: ServiceTimeEstimate | None = None,
     ):
         self.cfg = config or AdaptiveConfig()
         self.max_batch = max(1, int(max_batch))
         self.slo = slo
+        # service time is per FUNCTION: the scheduler hands every lane of a
+        # function the same estimate, so new class lanes start warm; a
+        # standalone controller owns a private one (same behavior as before)
+        self.service = service if service is not None else ServiceTimeEstimate(self.cfg.alpha)
         self.delay_s = self._clamp_seed(initial_delay_s)
         self.retunes = 0
         self._ewma_gap_s: float | None = None
         self._ewma_intra_s: float | None = None
         self._ewma_occupancy: float | None = None
-        self._ewma_service_s: float | None = None
         self._last_arrival_t: float | None = None
 
     def _clamp_seed(self, delay_s: float) -> float:
@@ -166,7 +205,7 @@ class QueueingWindow:
         self._ewma_gap_s = None
         self._ewma_intra_s = None
         self._ewma_occupancy = None
-        self._ewma_service_s = None
+        self.service.reset()
         self._last_arrival_t = None
 
     # ------------------------------------------------------------- model
@@ -176,16 +215,24 @@ class QueueingWindow:
         gap = self._ewma_gap_s
         return 1.0 / gap if gap and gap > 0 else 0.0
 
+    def offered_rho(self) -> float:
+        """This lane's offered load vs its batched capacity:
+        ``lambda * S / k_hat``. >= 1 means the lane cannot keep up."""
+        lam = self.arrival_rate_rps
+        svc = self.service.value or 0.0
+        if lam <= 0 or svc <= 0:
+            return 0.0
+        k_hat = min(float(self.max_batch), max(1.0, 1.0 + lam * self.delay_s))
+        return lam * svc / k_hat
+
     def predicted_wait_s(self) -> float:
         """M/G/1-style queue-wait prediction behind this lane's backlog:
         ``S * rho / (1 - rho)`` with ``rho = lambda * S / k_hat``. Infinite
         once the lane is offered more than its batched capacity."""
-        lam = self.arrival_rate_rps
-        svc = self._ewma_service_s or 0.0
-        if lam <= 0 or svc <= 0:
+        svc = self.service.value or 0.0
+        rho = self.offered_rho()
+        if rho <= 0.0:
             return 0.0
-        k_hat = min(float(self.max_batch), max(1.0, 1.0 + lam * self.delay_s))
-        rho = lam * svc / k_hat
         if rho >= 1.0:
             return math.inf
         return svc * rho / (1.0 - rho)
@@ -219,11 +266,7 @@ class QueueingWindow:
         occ = len(ts) / self.max_batch
         self._ewma_occupancy = occ if self._ewma_occupancy is None else (1 - a) * self._ewma_occupancy + a * occ
         if service_s is not None and service_s >= 0:
-            self._ewma_service_s = (
-                service_s
-                if self._ewma_service_s is None
-                else (1 - a) * self._ewma_service_s + a * service_s
-            )
+            self.service.observe(service_s)
         new = self._retune(closed_full)
         if new != self.delay_s:
             self.retunes += 1
@@ -252,7 +295,7 @@ class QueueingWindow:
         fill_s = need * gap
         desired = min(cfg.max_delay_s, max(cfg.min_delay_s, fill_s))
         if not self.slo.best_effort:
-            svc = self._ewma_service_s or 0.0
+            svc = self.service.value or 0.0
             slack = self.slo.target_s - self.predicted_wait_s() - svc
             budget = cfg.slack_fraction * slack
             if budget <= cfg.min_delay_s:
@@ -308,8 +351,9 @@ class QueueingWindow:
             "slo": self.slo.name,
             "target_ms": self.slo.target_p95_ms,
             "arrival_rps": round(self.arrival_rate_rps, 3),
-            "service_ms": (self._ewma_service_s or 0.0) * 1e3,
+            "service_ms": (self.service.value or 0.0) * 1e3,
             "predicted_wait_ms": wait * 1e3 if math.isfinite(wait) else math.inf,
+            "rho": round(self.offered_rho(), 4),
         }
 
 

@@ -50,6 +50,7 @@ from repro.scheduler.adaptive import (
     AdaptiveConfig,
     QueueingWindow,
     SchedulerSignals,
+    ServiceTimeEstimate,
     static_window_s,
 )
 from repro.scheduler.batching import largest_pow2_le, request_key
@@ -76,6 +77,14 @@ _CLASS_SIGNAL_WINDOW_S = 5.0  # lookback for the per-class tails handed to
 # thousands of samples (same discipline as recent_p95_ms)
 
 
+class OverloadShedError(RuntimeError):
+    """Best-effort request rejected at admission: the function's predicted
+    offered load is at/over its batched capacity (rho >= 1) and the
+    best-effort backlog already holds its bound — queueing more background
+    traffic would only push strict classes toward misses. Fail fast so the
+    client can back off."""
+
+
 class RequestScheduler:
     def __init__(
         self,
@@ -87,6 +96,7 @@ class RequestScheduler:
         adaptive: bool = False,
         adaptive_config: AdaptiveConfig | None = None,
         on_request_done: Callable[[str, float, int], None] | None = None,
+        be_shed_depth: int | None = None,
         clock=None,
     ):
         self._dispatch = dispatch_batch
@@ -109,6 +119,23 @@ class RequestScheduler:
                 )
         self.adaptive_config = adaptive_config
         self._on_request_done = on_request_done
+        # Per-class overload shedding: when a function's predicted rho >= 1
+        # (offered load at/over batched capacity, from the shared service
+        # estimate), best-effort arrivals beyond this many queued requests
+        # per function are failed fast instead of admitted — background
+        # backlog must not grow without bound while strict classes fight
+        # for the same capacity. None = auto (2 x max_batch). Armed ONLY for
+        # functions that have seen strict-class traffic: shedding exists to
+        # protect deadlines, and an all-best-effort overload is the fission
+        # path's job (the churn scenario saturates on purpose). Only
+        # adaptive schedulers shed (the rho estimate needs the controllers).
+        self.be_shed_depth = be_shed_depth if be_shed_depth is not None else 2 * self.max_batch
+        self._shed: dict[str, int] = {}
+        self._strict_fns: set[str] = set()
+        # one batch-service-time estimate per FUNCTION, shared by all of its
+        # class lanes — a new lane starts with a warm M/G/1 model instead of
+        # cold-starting its service EWMA (see ServiceTimeEstimate)
+        self._service_by_fn: dict[str, ServiceTimeEstimate] = {}
         self._queues: dict[tuple, AdmissionQueue] = {}
         self._lock = threading.Lock()
         # Drain-barrier state: per-function in-flight batch counts, signalled
@@ -136,6 +163,9 @@ class RequestScheduler:
         # (function, shape) base key -> lanes, so a strict submit preempts
         # its siblings without scanning every queue under the global lock
         self._lanes_by_base: dict[tuple, list[AdmissionQueue]] = {}
+        # function -> lanes, so the shed check and rho prediction stay
+        # O(lanes of this function) on the hot admission path
+        self._queues_by_name: dict[str, list[AdmissionQueue]] = {}
         self._recent_by_name: dict[str, collections.deque] = {}
         self._recent_lat_by_name: dict[str, collections.deque] = {}
         self._batch_sizes: collections.deque = collections.deque(maxlen=_BATCH_WINDOW)
@@ -171,13 +201,32 @@ class RequestScheduler:
                     f"{slo.target_p95_ms} != {known.target_p95_ms}"
                 )
             self._slo_classes[slo.name] = slo
+            if slo.best_effort and self.adaptive and name in self._strict_fns:
+                # overload shedding: with the function predicted past its
+                # batched capacity, bound the best-effort backlog and fail
+                # fast past it — strict classes keep admitting. Armed only
+                # once the function serves strict traffic (see __init__).
+                be_depth = sum(
+                    lane.depth()
+                    for lane in self._queues_by_name.get(name, ())
+                    if lane.slo.best_effort
+                )
+                if be_depth >= self.be_shed_depth and self._predicted_rho_locked(name) >= 1.0:
+                    self._shed[slo.name] = self._shed.get(slo.name, 0) + 1
+                    req.future.set_exception(OverloadShedError(
+                        f"{name}: predicted rho >= 1 with {be_depth} best-effort "
+                        f"queued (bound {self.be_shed_depth})"
+                    ))
+                    return req.future
             if not slo.best_effort:
                 self._last_strict_submit_t = req.t_enqueue
+                self._strict_fns.add(name)
             q = self._queues.get(key)
             if q is None:
                 q = self._make_queue(name, key, slo)
                 self._queues[key] = q
                 self._lanes_by_base.setdefault(key[:-1], []).append(q)
+                self._queues_by_name.setdefault(name, []).append(q)
             q.put(req)  # same lock as retire/shutdown: never lands post-stop
             if not slo.best_effort:
                 # Early-close preemption: a strict arrival must never leave
@@ -194,12 +243,32 @@ class RequestScheduler:
                         other.preempt_window()
         return req.future
 
-    def _make_queue(self, name: str, key: tuple, slo: SLOClass) -> AdmissionQueue:
-        controller = (
-            QueueingWindow(self.max_batch, self.max_delay_s, self.adaptive_config, slo=slo)
-            if self.adaptive
-            else None
+    def _predicted_rho_locked(self, name: str) -> float:
+        """Function-level offered load vs full-batch capacity:
+        ``sum(lane arrival rates) x shared service / max_batch``. 0.0 until
+        estimates exist. Caller holds the scheduler lock."""
+        est = self._service_by_fn.get(name)
+        svc = est.value if est is not None else None
+        if not svc:
+            return 0.0
+        lam = sum(
+            q.adaptive.arrival_rate_rps
+            for q in self._queues_by_name.get(name, ())
+            if q.adaptive is not None
         )
+        return lam * svc / self.max_batch
+
+    def _make_queue(self, name: str, key: tuple, slo: SLOClass) -> AdmissionQueue:
+        controller = None
+        if self.adaptive:
+            est = self._service_by_fn.get(name)
+            if est is None:
+                alpha = (self.adaptive_config or AdaptiveConfig()).alpha
+                est = self._service_by_fn[name] = ServiceTimeEstimate(alpha)
+            controller = QueueingWindow(
+                self.max_batch, self.max_delay_s, self.adaptive_config,
+                slo=slo, service=est,
+            )
         # the controller clamps its seed into [min, max] and under the
         # class's structural bound; a static lane applies the same bound
         first_delay = (
@@ -334,6 +403,13 @@ class RequestScheduler:
                         self._lanes_by_base[base] = lanes
                     else:
                         del self._lanes_by_base[base]
+                by_name = self._queues_by_name.get(q.name)
+                if by_name is not None:
+                    by_name = [l for l in by_name if l is not q]
+                    if by_name:
+                        self._queues_by_name[q.name] = by_name
+                    else:
+                        del self._queues_by_name[q.name]
             return True
 
     # ------------------------------------------------------------- metrics
@@ -451,6 +527,12 @@ class RequestScheduler:
             self._recent_by_name = {}
             self._recent_lat_by_name = {}
             self._signals_cache = {}
+            self._shed = {}
+            # shedding re-arms only when strict traffic is seen again: a
+            # strict request during a forgotten warmup must not leave
+            # best-effort shedding armed forever (all-best-effort overloads
+            # belong to the fission path)
+            self._strict_fns = set()
             queues = list(self._queues.values())
         self._latency.reset()
         for q in queues:
@@ -484,6 +566,7 @@ class RequestScheduler:
         with self._lock:
             windows = dict(self._per_class)
             classes = dict(self._slo_classes)
+            shed = dict(self._shed)
         out = {}
         for cls_name, win in sorted(windows.items()):
             snap = win.snapshot()
@@ -494,7 +577,11 @@ class RequestScheduler:
                 **snap,
                 "target_p95_ms": target,
                 "met": (snap["p95_ms"] <= target) if actionable else None,
+                "shed": shed.get(cls_name, 0),
             }
+        for cls_name, n in shed.items():  # classes that ONLY shed still report
+            if cls_name not in out:
+                out[cls_name] = {"shed": n, "count": 0}
         return out
 
     def stats(self) -> dict:

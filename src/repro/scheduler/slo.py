@@ -73,3 +73,62 @@ IMMEDIATE = SLOClass("immediate", 0.0)
 def slo_for_priority(priority: int) -> SLOClass:
     """Back-compat shim for the PR 2 two-level API."""
     return IMMEDIATE if priority > 0 else BEST_EFFORT
+
+
+class ClassLanes:
+    """Per-SLO-class FIFO lanes with strictest-target-first pop — the
+    slot-assignment analogue of the admission queues.
+
+    The continuous batcher feeds its fixed-capacity decode batch from
+    these: when an in-flight slot frees, ``pop()`` hands out the waiting
+    request of the *tightest* class first (FIFO within a class), so a
+    strict arrival preempts best-effort traffic for slot assignment exactly
+    the way it preempts batching windows in the admission queues. Not
+    thread-safe by itself — callers hold their own lock."""
+
+    def __init__(self):
+        self._lanes: dict[str, list] = {}
+        self._classes: dict[str, SLOClass] = {}
+
+    def push(self, item, slo: SLOClass = BEST_EFFORT) -> None:
+        known = self._classes.get(slo.name)
+        if known is not None and known.target_p95_ms != slo.target_p95_ms:
+            raise ValueError(
+                f"SLO class {slo.name!r} redefined: target "
+                f"{slo.target_p95_ms} != {known.target_p95_ms}"
+            )
+        self._classes[slo.name] = slo
+        self._lanes.setdefault(slo.name, []).append(item)
+
+    def pop(self):
+        """The next (item, slo) by class tightness, or None when empty."""
+        for name in sorted(
+            (n for n, lane in self._lanes.items() if lane),
+            key=lambda n: self._classes[n].target_p95_ms,
+        ):
+            lane = self._lanes[name]
+            return lane.pop(0), self._classes[name]
+        return None
+
+    def requeue(self, item, slo: SLOClass) -> None:
+        """Put an item back at the FRONT of its lane (e.g. admission failed
+        transiently — arena full — and must retry first next round)."""
+        self._classes[slo.name] = slo
+        self._lanes.setdefault(slo.name, []).insert(0, item)
+
+    def depth(self, class_name: str | None = None) -> int:
+        if class_name is not None:
+            return len(self._lanes.get(class_name, ()))
+        return sum(len(l) for l in self._lanes.values())
+
+    def best_effort_depth(self) -> int:
+        """Queued items across best-effort (targetless) lanes only — the
+        backlog an overload shed bound applies to."""
+        return sum(
+            len(lane)
+            for name, lane in self._lanes.items()
+            if self._classes[name].best_effort
+        )
+
+    def counts(self) -> dict[str, int]:
+        return {n: len(l) for n, l in self._lanes.items() if l}

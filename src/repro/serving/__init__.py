@@ -1,1 +1,3 @@
+from repro.serving.continuous import ContinuousBatcher, ShedError  # noqa: F401
 from repro.serving.engine import ServingEngine  # noqa: F401
+from repro.serving.kvpool import ArenaFull, KVArena  # noqa: F401

@@ -1,0 +1,357 @@
+"""Continuous-batching decode loop over the paged KV arena.
+
+The scheduler's micro-batching coalesces decode steps that happen to
+arrive inside one window; between windows the (possibly fused) instance
+idles while every client round-trips its own future. The continuous
+batcher replaces that rendezvous with a *persistent in-flight batch*: one
+decode loop drives a fixed power-of-two-capacity batch step after step,
+and requests JOIN the batch at any step boundary (post-prefill) and LEAVE
+on EOS or their step limit. Empty slots are masked — their block-table
+rows point at the arena's scratch page and their ``cur_len`` is zero — so
+the compiled program shape never changes and no request ever waits for a
+batch to "form".
+
+Admission runs through SLO class lanes (:class:`ClassLanes`): when a slot
+frees, the waiting request of the *strictest* class takes it first — the
+slot-assignment analogue of the admission queues' window preemption. A
+transient :class:`~repro.serving.kvpool.ArenaFull` re-queues the request at
+the front of its lane; optionally best-effort arrivals beyond
+``max_queue`` are shed (fail fast) so an overload degrades background
+traffic before strict classes queue.
+
+Every request's RAM bill is its pages: on exit the batcher records an
+:class:`~repro.core.billing.ArenaLease` — peak pages held x page bytes x
+residency seconds — the per-request GB-s the paper's RAM-reduction story
+is about.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.billing import ArenaLease
+from repro.scheduler.batching import largest_pow2_le
+from repro.scheduler.scheduler import OverloadShedError
+from repro.scheduler.slo import BEST_EFFORT, ClassLanes, SLOClass
+from repro.serving.engine import ServingEngine, _greedy_token
+from repro.serving.kvpool import ArenaFull, KVArena
+
+
+class ShedError(OverloadShedError):
+    """Best-effort request shed at admission (batcher queue bound hit).
+    Subclasses the scheduler's OverloadShedError so one except clause
+    implements a client's back-off policy for both admission paths."""
+
+
+def _deliver(future: Future, *, result=None, exc=None) -> None:
+    """Resolve a future the client may have CANCELLED meanwhile — the
+    InvalidStateError must not fail co-resident requests or kill the decode
+    loop thread (same contract as the coalescer's _resolve)."""
+    try:
+        if exc is not None:
+            future.set_exception(exc)
+        else:
+            future.set_result(result)
+    except Exception:
+        if not future.cancelled():
+            raise
+
+
+class _Request:
+    __slots__ = (
+        "inputs", "max_new_tokens", "eos_id", "slo", "future",
+        "t_submit", "t_alloc", "t_admit", "tokens", "step_s", "seq_id",
+        "cur_len", "remaining", "next_token", "last_emit",
+    )
+
+    def __init__(self, inputs, max_new_tokens, eos_id, slo, future, t_submit):
+        self.inputs = inputs
+        self.max_new_tokens = int(max_new_tokens)
+        self.eos_id = eos_id
+        self.slo = slo
+        self.future = future
+        self.t_submit = t_submit
+        self.t_alloc = 0.0
+        self.t_admit = 0.0
+        self.tokens: list[int] = []
+        self.step_s: list[float] = []
+        self.seq_id = None
+        self.cur_len = 0
+        self.remaining = 0
+        self.next_token = 0
+        self.last_emit = 0.0
+
+
+class ContinuousBatcher:
+    """Persistent decode batch over a paged ServingEngine.
+
+    ``capacity`` clamps to the largest power of two <= the request (one
+    compiled program serves every step). ``max_queue`` (optional) bounds
+    the admission lanes: best-effort arrivals beyond it are shed.
+
+    The batcher assumes exclusive use of the engine's arena while running:
+    all page allocation and all decode-step store-backs happen on its one
+    loop thread (don't interleave ``generate_paged`` with a live batcher)."""
+
+    def __init__(self, engine: ServingEngine, *, capacity: int = 8,
+                 max_queue: int | None = None):
+        if engine.arena is None:
+            raise ValueError("engine needs enable_paging() before continuous batching")
+        self.engine = engine
+        self.clock = engine.platform.clock
+        self.capacity = largest_pow2_le(capacity)
+        self.max_queue = max_queue
+        self._slots: list[_Request | None] = [None] * self.capacity
+        # persistent per-slot step inputs: block-table rows are rebuilt only
+        # when a slot's page set changes (join / page-boundary extend /
+        # leave), not on every step — empty rows stay all-scratch
+        self._bt = np.zeros((self.capacity, engine.block_width), np.int32)
+        self._cur = np.zeros((self.capacity,), np.int32)
+        self._tok = np.zeros((self.capacity, 1), np.int32)
+        self._lanes = ClassLanes()
+        self._cv = threading.Condition()
+        self._stopped = False
+        self._seq = 0
+        self.steps = 0
+        self.tokens_out = 0
+        self.completed = 0
+        self.shed = 0
+        self._occupancy_sum = 0
+        self._thread = threading.Thread(target=self._loop, daemon=True, name="continuous-batcher")
+        self._thread.start()
+
+    # ----------------------------------------------------------------- API
+
+    def submit(self, inputs: dict, max_new_tokens: int, *,
+               slo: SLOClass | None = None, eos_id: int | None = None) -> Future:
+        """Admit one generation request. Returns a Future resolving to
+        ``{"tokens": (1, n) int32, "step_s": per-token seconds, "pages":
+        peak pages held, "queued_s": lane wait}``."""
+        slo = slo or BEST_EFFORT
+        b = jax.tree.leaves(inputs)[0].shape[0]
+        if b != 1:
+            # one request = one sequence = one slot; a multi-row prompt
+            # would silently serve only row 0 (split it client-side)
+            raise ValueError(f"ContinuousBatcher serves one sequence per request, got batch {b}")
+        fut: Future = Future()
+        req = _Request(inputs, max_new_tokens, eos_id, slo, fut, self.clock.now())
+        with self._cv:
+            if self._stopped:
+                raise RuntimeError("batcher is shut down")
+            be_depth = self._lanes.best_effort_depth()
+            if (
+                self.max_queue is not None
+                and slo.best_effort
+                and be_depth >= self.max_queue
+            ):
+                # shed on the BEST-EFFORT backlog only (queued strict
+                # traffic must not push background work out — same depth
+                # semantics as the scheduler's be_shed_depth)
+                self.shed += 1
+                fut.set_exception(ShedError(
+                    f"best-effort shed: {be_depth} queued >= {self.max_queue}"
+                ))
+                return fut
+            self._lanes.push(req, slo)
+            self._cv.notify_all()
+        return fut
+
+    def stats(self) -> dict:
+        with self._cv:
+            active = sum(1 for s in self._slots if s is not None)
+            return {
+                "capacity": self.capacity,
+                "active": active,
+                "queued": self._lanes.counts(),
+                "steps": self.steps,
+                "tokens": self.tokens_out,
+                "completed": self.completed,
+                "shed": self.shed,
+                "mean_occupancy": (self._occupancy_sum / self.steps / self.capacity)
+                if self.steps else 0.0,
+                "arena": self.engine.arena.stats(),
+            }
+
+    def reset_stats(self) -> None:
+        """Zero the step/occupancy/completion counters (benchmark warmup
+        isolation — same discipline as scheduler.reset_stats)."""
+        with self._cv:
+            self.steps = 0
+            self.tokens_out = 0
+            self.completed = 0
+            self.shed = 0
+            self._occupancy_sum = 0
+
+    def shutdown(self, timeout: float = 30.0) -> None:
+        with self._cv:
+            self._stopped = True
+            self._cv.notify_all()
+        self._thread.join(timeout)
+
+    # ------------------------------------------------------------ internals
+
+    def _admit(self) -> None:
+        """Fill free slots from the lanes, strictest class first. Runs on
+        the loop thread; prefill happens here (between decode steps), which
+        is the single-device continuous-batching schedule."""
+        while True:
+            free = [i for i, s in enumerate(self._slots) if s is None]
+            if not free:
+                return
+            with self._cv:
+                got = self._lanes.pop()
+            if got is None:
+                return
+            req, slo = got
+            arena = self.engine.arena
+            t_in = jax.tree.leaves(req.inputs)[0].shape[1]
+            # the LAST decode step writes position t_in + max_new - 2; the
+            # whole lifetime must fit the table and the pool, or the request
+            # is permanently unservable: fail fast — requeueing would starve
+            # the lane forever, and admitting would blow up mid-flight and
+            # take every co-resident stream down with it
+            final_len = t_in + max(0, req.max_new_tokens - 1)
+            need = arena.pages_for(final_len)
+            if need > min(arena.num_pages - 1, self.engine.block_width):
+                _deliver(req.future, exc=ArenaFull(
+                    f"prompt {t_in} + {req.max_new_tokens} generated tokens needs "
+                    f"{need} pages; pool holds {arena.num_pages - 1}, "
+                    f"table {self.engine.block_width}"
+                ))
+                continue
+            self._seq += 1
+            req.seq_id = ("cb", self._seq)
+            # residency starts when the pages do: prefill_paged allocates
+            # BEFORE running the chain, and the lease must bill that too
+            req.t_alloc = self.clock.now()
+            try:
+                logits, t_in = self.engine.prefill_paged(req.seq_id, req.inputs)
+            except ArenaFull:
+                with self._cv:
+                    self._lanes.requeue(req, slo)  # transient: residents will
+                return                             # free pages; retry first
+            except BaseException as exc:  # noqa: BLE001 — deliver, don't kill the loop
+                _deliver(req.future, exc=exc)
+                continue
+            req.t_admit = self.clock.now()
+            req.last_emit = req.t_admit  # first token emitted at admission
+            req.cur_len = t_in
+            req.remaining = req.max_new_tokens
+            first = int(np.asarray(_greedy_token(jnp.asarray(logits)))[0, 0])
+            req.tokens.append(first)
+            req.remaining -= 1
+            req.next_token = first
+            if req.remaining <= 0 or first == req.eos_id:
+                self._finish(req)
+                continue
+            slot = free[0]
+            self._slots[slot] = req
+            self._bt[slot] = self.engine.arena.block_row(req.seq_id, self.engine.block_width)
+
+    def _release_slot(self, i: int) -> None:
+        """Clear a slot back to masked: all-scratch row, zero length/token."""
+        self._slots[i] = None
+        self._bt[i] = KVArena.RESERVED_PAGE
+        self._cur[i] = 0
+        self._tok[i, 0] = 0
+
+    def _finish(self, req: _Request) -> None:
+        pages = self.engine.arena.peak_pages(req.seq_id)
+        self.engine.arena.free(req.seq_id)
+        t_done = self.clock.now()
+        self.engine.platform.meter.record_arena(ArenaLease(
+            function=self.engine.entry,
+            request_id=str(req.seq_id),
+            pages=pages,
+            page_bytes=self.engine.arena.page_bytes,
+            t_alloc=req.t_alloc,
+            t_free=t_done,
+        ))
+        self.completed += 1
+        self.tokens_out += len(req.tokens)
+        _deliver(req.future, result={
+            "tokens": np.asarray(req.tokens, np.int32)[None, :],
+            "step_s": list(req.step_s),
+            "pages": pages,
+            "queued_s": req.t_admit - req.t_submit,
+        })
+
+    def _step(self) -> None:
+        """One decode step for the whole fixed-capacity batch."""
+        width = self.engine.block_width
+        active = []
+        for i, req in enumerate(self._slots):
+            if req is None:
+                continue
+            try:
+                added = self.engine.arena.extend(req.seq_id, req.cur_len + 1)
+            except ArenaFull:
+                # pool exhausted mid-flight: truncate THIS request (deliver
+                # what it generated) instead of failing the whole batch
+                self._release_slot(i)
+                self._finish(req)
+                continue
+            if added:  # crossed a page boundary: this slot's row changed
+                self._bt[i] = self.engine.arena.block_row(req.seq_id, width)
+            self._tok[i, 0] = req.next_token
+            self._cur[i] = req.cur_len
+            active.append(i)
+        logits = self.engine.paged_decode_step(jnp.asarray(self._tok), self._cur, self._bt)
+        nxt = np.asarray(_greedy_token(jnp.asarray(logits)))
+        now = self.clock.now()
+        self.steps += 1
+        self._occupancy_sum += len(active)
+        for i in active:
+            req = self._slots[i]
+            tok = int(nxt[i, 0])
+            req.tokens.append(tok)
+            # inter-token time = gap since this request's LAST emission, so
+            # stalls between steps (a joining request's serialized prefill)
+            # are charged honestly, not just the decode-step compute
+            req.step_s.append(now - req.last_emit)
+            req.last_emit = now
+            req.cur_len += 1
+            req.remaining -= 1
+            req.next_token = tok
+            if req.remaining <= 0 or tok == req.eos_id:
+                self._release_slot(i)
+                self._finish(req)
+
+    def _loop(self) -> None:
+        while True:
+            self._admit()
+            busy = any(s is not None for s in self._slots)
+            if not busy:
+                with self._cv:
+                    if self._stopped:
+                        break
+                    # parks for new submits AND paces admission retries when
+                    # the arena is transiently full (externally held pages);
+                    # through the injected clock so the batcher is drivable
+                    # in simulated time like every other timed wait
+                    self.clock.wait_on(self._cv, 0.05)
+                    continue
+            try:
+                self._step()
+            except BaseException as exc:  # noqa: BLE001 — a raising step must
+                # fail the in-flight requests, not silently kill the loop
+                for i, req in enumerate(self._slots):
+                    if req is not None:
+                        self._release_slot(i)
+                        self.engine.arena.free(req.seq_id)
+                        _deliver(req.future, exc=exc)
+            with self._cv:
+                if self._stopped and all(s is None for s in self._slots) \
+                        and self._lanes.depth() == 0:
+                    break
+        # drain: fail whatever is still queued so no client hangs
+        with self._cv:
+            while True:
+                got = self._lanes.pop()
+                if got is None:
+                    break
+                _deliver(got[0].future, exc=RuntimeError("batcher shut down"))

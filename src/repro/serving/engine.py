@@ -21,6 +21,14 @@ Stage functions are shape-polymorphic: a (B, T>1) input takes the prefill
 path (and scatter-fills the preallocated max_len cache); (B, 1) takes the
 decode path. One deployed function serves both request types, mirroring a
 FaaS function with two routes.
+
+Paged serving: with ``enable_paging`` the decode route can also serve from
+a shared :class:`~repro.serving.kvpool.KVArena` — ``caches`` then carries a
+block table plus each stage's page-pool slice instead of per-client dense
+pytrees, and the SAME deployed (possibly fused) chain reads/writes arena
+pages. Fused and unfused chains serve from one arena, so fusion benchmarks
+measure the paper's effect at realistic occupancy (see
+``serving/continuous.py`` for the decode loop that keeps it busy).
 """
 from __future__ import annotations
 
@@ -28,6 +36,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.function import FunctionSpec
@@ -38,6 +47,15 @@ from repro.models import transformer as tfm
 from repro.models.layers import apply_norm, embed_tokens, unembed
 from repro.models.model import Model
 from repro.models.params import init_params
+from repro.serving.kvpool import KVArena
+
+#: Greedy sampling as ONE compiled device step: the previous inline
+#: ``jnp.argmax(jnp.asarray(logits))`` dispatched eagerly and forced a host
+#: sync per token, so the timed per-token loop measured transfer stalls,
+#: not device time.
+_greedy_token = jax.jit(
+    lambda logits: jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+)
 
 
 def _slice_tree(tree, lo: int, hi: int):
@@ -52,7 +70,9 @@ def _pick_groups(n_layers: int, requested: int) -> int:
 
 
 class ServingEngine:
-    def __init__(self, model: Model, platform: ProvusePlatform, *, max_len: int = 256, params=None, trust_domain: str | None = None):
+    def __init__(self, model: Model, platform: ProvusePlatform, *, max_len: int = 256,
+                 params=None, trust_domain: str | None = None,
+                 kv_pages: int = 0, kv_page_size: int = 16):
         self.model = model
         self.cfg = model.cfg
         self.platform = platform
@@ -61,6 +81,7 @@ class ServingEngine:
         self.prefix = self.cfg.name
         self.trust = trust_domain or self.cfg.name
         self.entry = f"{self.prefix}/embed"
+        self.arena: KVArena | None = None
         fam = self.cfg.family
         if fam in ("dense", "moe", "vlm", "ssm"):
             self._deploy_blocks_chain()
@@ -70,6 +91,8 @@ class ServingEngine:
             self._deploy_monolithic_chain()
         else:
             raise ValueError(fam)
+        if kv_pages:
+            self.enable_paging(kv_pages, kv_page_size)
 
     # ------------------------------------------------------------ chains
 
@@ -98,6 +121,13 @@ class ServingEngine:
             nxt = names[i + 1] if i + 1 < g else head_name
 
             def group_fn(ctx, params, x, cur_len, caches):
+                if "block_table" in caches:  # paged decode: caches hold the arena
+                    h, new_arena, _ = tfm.apply_stack_decode_paged(
+                        params, x, caches[key], caches["block_table"], cfg, kind, None, cur_len
+                    )
+                    caches = dict(caches)
+                    caches[key] = new_arena
+                    return ctx.call(nxt, h, cur_len, caches)
                 old = caches[key]
                 if x.shape[1] == 1:  # decode
                     h, new_cache, _ = tfm.apply_stack_decode(params, x, old, cfg, kind, None, cur_len)
@@ -234,6 +264,85 @@ class ServingEngine:
             }
         return cache
 
+    # ------------------------------------------------------------ paging
+
+    @property
+    def paging_supported(self) -> bool:
+        """Paged KV applies to length-indexed attention caches; SSM state is
+        recurrent and enc-dec/hybrid keep their dedicated layouts."""
+        return self.cfg.family in ("dense", "moe", "vlm")
+
+    def enable_paging(self, num_pages: int, page_size: int = 16) -> KVArena:
+        """Preallocate the shared KV arena: one (layers, pages, page, KV, hd)
+        pool per chain stage, one allocator/block table across stages."""
+        if not self.paging_supported:
+            raise ValueError(f"paged KV unsupported for family {self.cfg.family!r}")
+        if self.max_len % page_size:
+            raise ValueError(f"max_len={self.max_len} must be a multiple of page_size={page_size}")
+        g = len(self.group_names)
+        per = self.cfg.num_layers // g
+        self.arena = KVArena(
+            {f"g{i}": per for i in range(g)},
+            num_pages=num_pages,
+            page_size=page_size,
+            kv_heads=self.cfg.num_kv_heads,
+            head_dim=self.cfg.head_dim,
+            dtype=jnp.dtype(self.cfg.kv_cache_dtype),
+        )
+        self.block_width = self.arena.max_pages_per_seq(self.max_len)
+        return self.arena
+
+    def prefill_paged(self, seq_id, inputs: dict):
+        """Admit one request into the arena: dense chain prefill (the
+        prefill route is unchanged), then copy-on-prefill scatters the built
+        cache into freshly allocated pages and the dense pytree is dropped.
+        Returns (last logits (1, V), prompt length)."""
+        assert self.arena is not None, "enable_paging first"
+        t_in = inputs["tokens"].shape[1] if "tokens" in inputs else inputs["embeds"].shape[1]
+        self.arena.alloc(seq_id, t_in)
+        try:
+            logits, caches, _ = self.prefill(inputs)
+            self.arena.write_prefill(seq_id, caches, t_in)
+        except BaseException:
+            self.arena.free(seq_id)
+            raise
+        return logits, t_in
+
+    def paged_caches(self, block_table) -> dict:
+        """Assemble the decode ``caches`` pytree for a batch served from the
+        arena: the block table plus every stage's live page pool."""
+        assert self.arena is not None, "enable_paging first"
+        caches = {"block_table": jnp.asarray(block_table, jnp.int32)}
+        for name, stage in self.arena.data.items():
+            caches[name] = stage
+        return caches
+
+    def paged_decode_step(self, tokens, cur_len, block_table):
+        """One decode step for a batch whose caches live in the arena.
+        tokens: (B, 1); cur_len: (B,) — ragged per-request lengths;
+        block_table: (B, width). The updated page pools are stored back so
+        the arena always holds the latest state.
+
+        Dispatches through the no-canary path: ``invoke`` would retain the
+        step's args — the ENTIRE arena pytree — as the merge health-check
+        canary, pinning a stale full copy of the pool between steps and
+        doubling the very RAM paging exists to save. Merge health checks
+        still have canaries from the (dense) prefill invocations; demand is
+        noted so the fusion policy sees serve traffic as client load."""
+        self.platform.handler.note_demand(self.entry)
+        logits, caches = self.platform._invoke_with_retry(
+            self.entry,
+            ({"tokens": tokens}, jnp.asarray(cur_len, jnp.int32),
+             self.paged_caches(block_table)),
+        )
+        for name in self.arena.data:
+            self.arena.data[name] = caches[name]
+        return logits
+
+    def _block_table_for(self, seq_ids) -> np.ndarray:
+        rows = [self.arena.block_row(s, self.block_width) for s in seq_ids]
+        return np.stack(rows)
+
     # ------------------------------------------------------------ serving API
 
     def prefill(self, inputs: dict, caches=None):
@@ -269,7 +378,7 @@ class ServingEngine:
         import time
 
         logits, caches, cur_len = self.prefill(inputs)
-        tokens = jnp.argmax(jnp.asarray(logits), axis=-1)[:, None].astype(jnp.int32)
+        tokens = _greedy_token(jnp.asarray(logits))
         out = [tokens]
         lat = []
         for _ in range(steps - 1):
@@ -277,6 +386,46 @@ class ServingEngine:
             logits, caches = self.decode_step(tokens, cur_len, caches)
             lat.append(time.perf_counter() - t0)
             cur_len = cur_len + 1
-            tokens = jnp.argmax(jnp.asarray(logits), axis=-1)[:, None].astype(jnp.int32)
+            tokens = _greedy_token(jnp.asarray(logits))
             out.append(tokens)
         return jnp.concatenate(out, axis=1), lat
+
+    def generate_paged(self, inputs: dict, steps: int):
+        """Greedy generation served from the KV arena — same outputs as
+        :meth:`generate`, bit for bit (the gathered page view is the same
+        width as the dense cache and masked positions contribute exact
+        zeros), but decode reads/writes shared pages instead of per-client
+        dense cache pytrees. Pages are freed on exit."""
+        import time
+
+        assert self.arena is not None, "enable_paging first"
+        b = jax.tree.leaves(inputs)[0].shape[0]
+        seq_ids = [("gen", id(inputs), i) for i in range(b)]
+        # dense prefill ONCE for the whole batch, then scatter each row's
+        # built cache into its pages (copy-on-prefill)
+        logits, caches, cur_len = self.prefill(inputs)
+        t_in = int(np.asarray(cur_len)[0])
+        try:
+            for i, sid in enumerate(seq_ids):
+                self.arena.alloc(sid, t_in)
+                row = {k: jax.tree.map(lambda a: a[:, i : i + 1], v) for k, v in caches.items()}
+                self.arena.write_prefill(sid, row, t_in)
+            del caches
+            tokens = _greedy_token(jnp.asarray(logits))
+            out = [tokens]
+            lat = []
+            cur = np.full((b,), t_in, np.int64)
+            for _ in range(steps - 1):
+                t0 = time.perf_counter()
+                for sid, c in zip(seq_ids, cur):
+                    self.arena.extend(sid, int(c) + 1)  # page for the write position
+                bt = self._block_table_for(seq_ids)
+                logits = self.paged_decode_step(tokens, cur.astype(np.int32), bt)
+                lat.append(time.perf_counter() - t0)
+                cur += 1
+                tokens = _greedy_token(jnp.asarray(logits))
+                out.append(tokens)
+            return jnp.concatenate(out, axis=1), lat
+        finally:
+            for sid in seq_ids:
+                self.arena.free(sid)

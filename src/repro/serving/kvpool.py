@@ -1,0 +1,268 @@
+"""Paged KV-cache arena: cross-request cache sharing for batched decode.
+
+The per-client serving path gives every request its own full ``max_len``
+cache pytree — RAM proportional to ``clients x max_len`` regardless of how
+many tokens each client actually holds, and every scheduled decode step
+stacks/splits those pytrees through the batching boundary. The arena
+replaces that with ONE preallocated page pool per chain stage:
+
+* every stage owns ``k``/``v`` arrays of shape
+  ``(stage_layers, num_pages, page_size, kv_heads, head_dim)``;
+* a sequence holds ``ceil(cur_len / page_size)`` pages, tracked in a host-
+  side block table (sequence -> physical page ids, in logical order);
+* pages are allocated at prefill (copy-on-prefill scatters the dense
+  prefill cache into pages), extended one page at a time as decode crosses
+  a page boundary, and returned to the free list when the request leaves —
+  reuse is defrag-free because every page is identical.
+
+Page 0 is a reserved scratch page that is never allocated: the continuous
+batcher points empty decode slots' block-table rows at it, so a masked
+slot's (discarded) token write can never land in a live sequence's memory.
+
+RAM story (the paper's): platform RAM for serving is now proportional to
+*pages held* — tokens actually resident — not to ``clients x max_len``;
+:class:`~repro.core.billing.ArenaLease` bills each request for exactly the
+pages it held, for exactly as long as it held them.
+
+The allocator is host-side (plain ints under a lock); the page *data* are
+device arrays updated functionally — decode programs gather pages through
+the block table and scatter the new token's K/V back (see
+``models/attention.py: paged_decode_attention`` and the Pallas kernel in
+``kernels/paged_attention.py``).
+"""
+from __future__ import annotations
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ArenaFull(RuntimeError):
+    """No free pages left for an allocation (admission should back off)."""
+
+
+class KVArena:
+    """One page pool shared by every stage of a serving chain.
+
+    ``stages`` maps stage name -> number of layers hosted by that stage;
+    all stages share one allocator and one block table (a sequence occupies
+    the same physical page ids in every stage's arrays, so one table row
+    drives the whole chain's gather).
+    """
+
+    #: physical page 0 is scratch: masked/empty decode slots write here
+    RESERVED_PAGE = 0
+
+    def __init__(
+        self,
+        stages: dict[str, int],
+        *,
+        num_pages: int,
+        page_size: int,
+        kv_heads: int,
+        head_dim: int,
+        dtype=jnp.bfloat16,
+    ):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is reserved scratch)")
+        if page_size < 1 or page_size & (page_size - 1):
+            raise ValueError(f"page_size must be a power of two, got {page_size}")
+        self.stages = dict(stages)
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self.kv_heads = int(kv_heads)
+        self.head_dim = int(head_dim)
+        self.dtype = jnp.dtype(dtype)
+        self.data: dict[str, dict[str, jax.Array]] = {
+            name: {
+                "k": jnp.zeros((n_layers, num_pages, page_size, kv_heads, head_dim), self.dtype),
+                "v": jnp.zeros((n_layers, num_pages, page_size, kv_heads, head_dim), self.dtype),
+            }
+            for name, n_layers in self.stages.items()
+        }
+        self._lock = threading.Lock()
+        # LIFO free list: recently-freed (cache-warm) pages are reused first
+        self._free: list[int] = list(range(num_pages - 1, 0, -1))
+        self._held: dict[object, list[int]] = {}
+        self._lens: dict[object, int] = {}
+        self._peak_held: dict[object, int] = {}
+
+    # ------------------------------------------------------------ geometry
+
+    @property
+    def page_bytes(self) -> int:
+        """Bytes ONE page occupies across the whole chain (all stages, k+v)
+        — the unit of the per-request RAM bill."""
+        per_layer = 2 * self.page_size * self.kv_heads * self.head_dim * self.dtype.itemsize
+        return per_layer * sum(self.stages.values())
+
+    def pages_for(self, length: int) -> int:
+        return max(1, -(-int(length) // self.page_size))
+
+    def max_pages_per_seq(self, max_len: int) -> int:
+        if max_len % self.page_size:
+            raise ValueError(f"max_len={max_len} must be a multiple of page_size={self.page_size}")
+        return max_len // self.page_size
+
+    # ------------------------------------------------------------ allocator
+
+    def alloc(self, seq_id, length: int) -> list[int]:
+        """Reserve pages for a sequence of ``length`` tokens. Raises
+        :class:`ArenaFull` (allocating nothing) when the pool can't cover
+        it."""
+        need = self.pages_for(length)
+        with self._lock:
+            if seq_id in self._held:
+                raise ValueError(f"sequence {seq_id!r} already holds pages")
+            if need > len(self._free):
+                raise ArenaFull(f"need {need} pages, {len(self._free)} free")
+            pages = [self._free.pop() for _ in range(need)]
+            self._held[seq_id] = pages
+            self._lens[seq_id] = int(length)
+            self._peak_held[seq_id] = need
+            return list(pages)
+
+    def extend(self, seq_id, new_len: int) -> list[int]:
+        """Grow a sequence to ``new_len`` tokens, appending pages as the
+        length crosses page boundaries. Returns the pages added."""
+        with self._lock:
+            if seq_id not in self._held:
+                raise KeyError(f"unknown sequence {seq_id!r}")
+            if new_len < self._lens[seq_id]:
+                raise ValueError("sequences never shrink; free and realloc instead")
+            need = self.pages_for(new_len) - len(self._held[seq_id])
+            if need > len(self._free):
+                raise ArenaFull(f"need {need} more pages, {len(self._free)} free")
+            added = [self._free.pop() for _ in range(need)]
+            self._held[seq_id].extend(added)
+            self._lens[seq_id] = int(new_len)
+            self._peak_held[seq_id] = max(self._peak_held[seq_id], len(self._held[seq_id]))
+            return added
+
+    def free(self, seq_id) -> int:
+        """Return a sequence's pages to the pool; returns how many."""
+        with self._lock:
+            pages = self._held.pop(seq_id, None)
+            self._lens.pop(seq_id, None)
+            self._peak_held.pop(seq_id, None)
+            if pages is None:
+                return 0
+            self._free.extend(reversed(pages))
+            return len(pages)
+
+    # ------------------------------------------------------------ queries
+
+    def pages_held(self, seq_id) -> int:
+        with self._lock:
+            return len(self._held.get(seq_id, ()))
+
+    def peak_pages(self, seq_id) -> int:
+        with self._lock:
+            return self._peak_held.get(seq_id, 0)
+
+    def seq_len(self, seq_id) -> int:
+        with self._lock:
+            return self._lens.get(seq_id, 0)
+
+    def block_row(self, seq_id, width: int) -> np.ndarray:
+        """The sequence's block-table row, padded with the scratch page to
+        ``width`` entries (int32)."""
+        with self._lock:
+            pages = self._held.get(seq_id, [])
+            if len(pages) > width:
+                raise ValueError(f"{seq_id!r} holds {len(pages)} pages > table width {width}")
+            row = np.full((width,), self.RESERVED_PAGE, np.int32)
+            row[: len(pages)] = pages
+            return row
+
+    def used_pages(self) -> int:
+        with self._lock:
+            return sum(len(p) for p in self._held.values())
+
+    def free_pages(self) -> int:
+        with self._lock:
+            return len(self._free)
+
+    def check_consistency(self) -> None:
+        """Fuzz-test invariant: every non-reserved page is in exactly one
+        place (the free list xor one sequence's table), and every row covers
+        its sequence's length."""
+        with self._lock:
+            seen: dict[int, object] = {}
+            for sid, pages in self._held.items():
+                if len(pages) != self.pages_for(self._lens[sid]):
+                    raise AssertionError(
+                        f"{sid!r}: {len(pages)} pages for len {self._lens[sid]}"
+                    )
+                for p in pages:
+                    if p in seen:
+                        raise AssertionError(f"page {p} held by {seen[p]!r} and {sid!r}")
+                    if not 0 < p < self.num_pages:
+                        raise AssertionError(f"page {p} out of range (or reserved)")
+                    seen[p] = sid
+            for p in self._free:
+                if p in seen:
+                    raise AssertionError(f"page {p} both free and held by {seen[p]!r}")
+                seen[p] = "<free>"
+            if len(seen) != self.num_pages - 1:
+                missing = set(range(1, self.num_pages)) - set(seen)
+                raise AssertionError(f"leaked pages: {sorted(missing)}")
+
+    def stats(self) -> dict:
+        with self._lock:
+            held = {str(k): len(v) for k, v in self._held.items()}
+            return {
+                "num_pages": self.num_pages,
+                "page_size": self.page_size,
+                "page_bytes": self.page_bytes,
+                "free": len(self._free),
+                "used": sum(held.values()),
+                "sequences": len(held),
+                "held_by_seq": held,
+            }
+
+    # ------------------------------------------------------------ page data
+
+    def write_prefill(self, seq_id, stage_caches: dict, length: int) -> None:
+        """Copy-on-prefill: scatter a request's dense prefill caches into
+        its allocated pages. ``stage_caches[stage]`` is the chain's dense
+        cache for ONE request — ``{'k','v'}`` of shape ``(L, 1, S, kv, hd)``
+        or ``(L, S, kv, hd)`` — with the first ``length`` positions valid."""
+        with self._lock:
+            pages = list(self._held.get(seq_id, ()))
+        if not pages:
+            raise KeyError(f"no pages allocated for {seq_id!r}")
+        n = self.pages_for(length)
+        ids = jnp.asarray(pages[:n], jnp.int32)
+        span = n * self.page_size
+        for stage, cache in stage_caches.items():
+            if stage not in self.data:
+                continue
+            dst = self.data[stage]
+            for kv in ("k", "v"):
+                src = cache[kv]
+                if src.ndim == 5:  # (L, 1, S, kv, hd) -> (L, S, kv, hd)
+                    src = src[:, 0]
+                if src.shape[1] < span:
+                    raise ValueError(
+                        f"prefill cache covers {src.shape[1]} positions < {span} paged"
+                    )
+                chunks = src[:, :span].reshape(
+                    src.shape[0], n, self.page_size, self.kv_heads, self.head_dim
+                )
+                dst[kv] = dst[kv].at[:, ids].set(chunks.astype(self.dtype))
+
+    def gather(self, seq_id, stage: str, width: int | None = None) -> dict:
+        """Contiguous view of one sequence's cache for a stage — the test
+        oracle (and the shape the gather-fallback decode reconstructs).
+        Returns ``{'k','v'}`` of shape (L, width*page, kv, hd)."""
+        width = width or self.pages_for(self.seq_len(seq_id))
+        row = jnp.asarray(self.block_row(seq_id, width))
+        out = {}
+        for kv in ("k", "v"):
+            pages = self.data[stage][kv][:, row]  # (L, width, page, kv, hd)
+            l = pages.shape[0]
+            out[kv] = pages.reshape(l, width * self.page_size, self.kv_heads, self.head_dim)
+        return out

@@ -351,3 +351,130 @@ def test_explicit_config_cap_clamps_first_window_too():
             assert row["max_delay_ms"] <= 10.0 + 1e-6
     finally:
         sched.shutdown()
+
+
+# ------------------------------------------- cross-lane service-time sharing
+
+
+def test_service_estimate_shared_across_lanes_warm_start():
+    """Two controllers sharing one ServiceTimeEstimate: a batch observed on
+    lane A warms lane B's M/G/1 model before B ever dispatched."""
+    from repro.scheduler import QueueingWindow, ServiceTimeEstimate
+    from repro.scheduler.slo import SLOClass
+
+    est = ServiceTimeEstimate(alpha=0.3)
+    cfg = AdaptiveConfig(max_delay_s=0.020)
+    lane_a = QueueingWindow(8, 0.002, cfg, service=est)
+    lane_b = QueueingWindow(8, 0.002, cfg, slo=SLOClass("strict", 50.0), service=est)
+    lane_a.observe_batch([0.0, 0.001], closed_full=False, service_s=0.008)
+    assert lane_b.service.value == pytest.approx(0.008)
+    assert lane_b.snapshot()["service_ms"] == pytest.approx(8.0)
+    # B's own observations feed back into A's view (one estimate per function)
+    lane_b.observe_batch([0.01], closed_full=False, service_s=0.004)
+    assert lane_a.service.value == pytest.approx(0.3 * 0.004 + 0.7 * 0.008)
+
+
+def test_scheduler_new_class_lane_starts_with_warm_service():
+    """A lane created for a NEW class of an already-hot function must see
+    the function's service EWMA immediately (no cold start)."""
+    from repro.scheduler.slo import SLOClass
+
+    def dispatch(name, args_list):
+        time.sleep(0.004)
+        return [a[0] for a in args_list]
+
+    sched = RequestScheduler(dispatch, max_batch=4, max_delay_ms=1.0, adaptive=True)
+    try:
+        for _ in range(3):
+            assert sched.submit("f", (1,)).result(timeout=5) == 1
+        warm = [r for r in sched.window_snapshot() if r["name"] == "f"]
+        assert warm and warm[0]["service_ms"] > 1.0
+        # first request of a brand-new class: its controller is born warm
+        assert sched.submit("f", (2,), slo=SLOClass("gold", 100.0)).result(timeout=5) == 2
+        rows = {r["slo"]: r for r in sched.window_snapshot() if r["name"] == "f"}
+        assert rows["gold"]["service_ms"] > 1.0
+        # a different FUNCTION still cold-starts (estimates are per function)
+        assert sched.submit("g", (3,)).result(timeout=5) == 3
+    finally:
+        sched.shutdown()
+
+
+# --------------------------------------------------- per-class overload shed
+
+
+def test_overload_sheds_best_effort_not_strict():
+    """rho >= 1 + best-effort backlog at the bound -> fail fast with
+    OverloadShedError; strict submissions keep admitting; shed counts show
+    up in class_stats()."""
+    from repro.scheduler import OverloadShedError
+    from repro.scheduler.slo import SLOClass
+
+    gate = threading.Event()
+    entered = threading.Event()
+
+    def dispatch(name, args_list):
+        entered.set()
+        gate.wait(10)
+        return [a[0] for a in args_list]
+
+    sched = RequestScheduler(dispatch, max_batch=4, max_delay_ms=0.5,
+                             adaptive=True, be_shed_depth=3)
+    try:
+        # strict traffic arms shedding for this function (an all-best-effort
+        # overload is the fission path's job, not admission control's)
+        armer = sched.submit("f", (-1,), slo=SLOClass("strict", 50.0))
+        assert entered.wait(5)
+        # prime the lane + estimates: one dispatched (blocked) best-effort
+        first = sched.submit("f", (0,))
+        lane = next(
+            q for q in sched._queues.values() if q.name == "f" and q.slo.best_effort
+        )
+        deadline = time.perf_counter() + 5
+        while lane.depth() and time.perf_counter() < deadline:
+            time.sleep(0.001)  # first popped into its own (blocked) batch
+        # drive the model to overload: 1ms arrivals, 100ms batches
+        lane.adaptive._ewma_gap_s = 0.001
+        lane.adaptive.service.observe(0.100)
+        assert sched._predicted_rho_locked("f") >= 1.0
+        queued = [sched.submit("f", (i,)) for i in range(1, 4)]  # depth -> 3
+        shed_fut = sched.submit("f", (99,))
+        with pytest.raises(OverloadShedError):
+            shed_fut.result(timeout=1)
+        # strict class is never shed by the best-effort bound
+        strict_fut = sched.submit("f", (7,), slo=SLOClass("strict", 50.0))
+        gate.set()
+        assert strict_fut.result(timeout=5) == 7
+        assert armer.result(timeout=5) == -1
+        assert first.result(timeout=5) == 0
+        assert [f.result(timeout=5) for f in queued] == [1, 2, 3]
+        stats = sched.class_stats()
+        assert stats["best-effort"]["shed"] == 1
+        assert stats.get("strict", {}).get("shed", 0) == 0
+        # reset_stats disarms shedding until strict traffic is seen again —
+        # a warmup's strict request must not arm it forever
+        sched.reset_stats()
+        assert sched._strict_fns == set()
+    finally:
+        gate.set()
+        sched.shutdown()
+
+
+def test_no_shed_below_rho_one():
+    """A deep best-effort backlog alone must NOT shed — only predicted
+    overload does."""
+    gate = threading.Event()
+
+    def dispatch(name, args_list):
+        gate.wait(10)
+        return [a[0] for a in args_list]
+
+    sched = RequestScheduler(dispatch, max_batch=4, max_delay_ms=0.5,
+                             adaptive=True, be_shed_depth=2)
+    try:
+        futs = [sched.submit("f", (i,)) for i in range(8)]  # depth far past bound
+        gate.set()
+        assert [f.result(timeout=5) for f in futs] == list(range(8))
+        assert sched.class_stats()["best-effort"]["shed"] == 0
+    finally:
+        gate.set()
+        sched.shutdown()

@@ -1,0 +1,188 @@
+"""ContinuousBatcher: join/leave semantics, SLO slot lanes, shedding."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced_config
+from repro.core import FusionPolicy, TinyJaxBackend
+from repro.models.model import build_model
+from repro.scheduler.slo import BEST_EFFORT, ClassLanes, SLOClass
+from repro.serving import ContinuousBatcher, ServingEngine, ShedError
+
+
+@pytest.fixture(scope="module")
+def paged_engine():
+    cfg = reduced_config(get_arch("llama3.2-1b"))
+    model = build_model(cfg)
+    platform = TinyJaxBackend(FusionPolicy(min_observations=2, merge_cost_s=0.0))
+    engine = ServingEngine(model, platform, max_len=64, kv_pages=64, kv_page_size=16)
+    yield engine
+    platform.shutdown()
+
+
+# ------------------------------------------------------------- ClassLanes
+
+
+def test_class_lanes_strictest_first_fifo_within():
+    lanes = ClassLanes()
+    strict = SLOClass("strict", 20.0)
+    std = SLOClass("std", 200.0)
+    lanes.push("be1")
+    lanes.push("std1", std)
+    lanes.push("be2")
+    lanes.push("s1", strict)
+    lanes.push("s2", strict)
+    order = [lanes.pop()[0] for _ in range(5)]
+    assert order == ["s1", "s2", "std1", "be1", "be2"]
+    assert lanes.pop() is None
+
+
+def test_class_lanes_requeue_front_and_redefinition():
+    lanes = ClassLanes()
+    std = SLOClass("std", 200.0)
+    lanes.push("a", std)
+    lanes.push("b", std)
+    item, slo = lanes.pop()
+    lanes.requeue(item, slo)
+    assert lanes.pop()[0] == "a"  # requeued item comes back first
+    with pytest.raises(ValueError):
+        lanes.push("x", SLOClass("std", 999.0))
+    assert lanes.depth("std") == 1 and lanes.depth() == 1
+
+
+# ------------------------------------------------------- batcher semantics
+
+
+def test_batcher_matches_per_request_generate(paged_engine):
+    """Ragged joins/leaves must not change any request's tokens: the
+    continuous batch at capacity 4 (masked slots, mixed lengths) produces
+    exactly what solo dense generate produces."""
+    engine = paged_engine
+    prompts = [jnp.full((1, 4 + 3 * i), 3 + i, jnp.int32) for i in range(3)]
+    gens = [6, 9, 5]
+    refs = [np.asarray(engine.generate({"tokens": p}, steps=g)[0])
+            for p, g in zip(prompts, gens)]
+    cb = ContinuousBatcher(engine, capacity=4)
+    try:
+        futs = [cb.submit({"tokens": p}, g) for p, g in zip(prompts, gens)]
+        for f, r in zip(futs, refs):
+            res = f.result(timeout=300)
+            np.testing.assert_array_equal(res["tokens"], r)
+            assert res["pages"] >= 1
+        stats = cb.stats()
+        assert stats["completed"] == 3 and stats["tokens"] == sum(gens)
+    finally:
+        cb.shutdown()
+    engine.arena.check_consistency()
+    assert engine.arena.used_pages() == 0
+
+
+def test_strict_class_preempts_slot_assignment(paged_engine):
+    """With one slot busy, a strict arrival that lands AFTER a best-effort
+    one still takes the freed slot first."""
+    engine = paged_engine
+    cb = ContinuousBatcher(engine, capacity=1)
+    try:
+        prompt = jnp.full((1, 4), 5, jnp.int32)
+        occupant = cb.submit({"tokens": prompt}, 40)
+        deadline = time.time() + 60
+        while cb.stats()["active"] == 0 and time.time() < deadline:
+            time.sleep(0.005)  # occupant admitted
+        be = cb.submit({"tokens": prompt}, 25)
+        strict = cb.submit({"tokens": prompt}, 6, slo=SLOClass("interactive", 50.0))
+        strict.result(timeout=300)
+        assert not be.done(), "best-effort must not have been assigned the slot first"
+        be.result(timeout=300)
+        occupant.result(timeout=300)
+    finally:
+        cb.shutdown()
+
+
+def test_batcher_sheds_best_effort_beyond_queue_bound(paged_engine):
+    engine = paged_engine
+    cb = ContinuousBatcher(engine, capacity=1, max_queue=1)
+    try:
+        prompt = jnp.full((1, 4), 7, jnp.int32)
+        occupant = cb.submit({"tokens": prompt}, 30)
+        deadline = time.time() + 60
+        while cb.stats()["active"] == 0 and time.time() < deadline:
+            time.sleep(0.005)
+        queued = cb.submit({"tokens": prompt}, 4)       # depth 1 (bound)
+        overflow = cb.submit({"tokens": prompt}, 4)     # best-effort: shed
+        with pytest.raises(ShedError):
+            overflow.result(timeout=10)
+        # strict traffic is never shed by the queue bound
+        strict = cb.submit({"tokens": prompt}, 4, slo=SLOClass("interactive", 50.0))
+        assert strict.result(timeout=300)["tokens"].shape == (1, 4)
+        queued.result(timeout=300)
+        occupant.result(timeout=300)
+        assert cb.stats()["shed"] == 1
+    finally:
+        cb.shutdown()
+
+
+def test_unservable_prompt_fails_fast_not_starves(paged_engine):
+    """A prompt that can NEVER fit (more pages than the table holds) must
+    fail its own future immediately instead of requeueing forever and
+    starving every lane behind it."""
+    from repro.serving import ArenaFull
+
+    engine = paged_engine
+    cb = ContinuousBatcher(engine, capacity=2)
+    try:
+        too_long = jnp.full((1, engine.max_len + 16), 3, jnp.int32)
+        doomed = cb.submit({"tokens": too_long}, 4)
+        with pytest.raises(ArenaFull):
+            doomed.result(timeout=30)
+        # prompt fits but prompt + generation outgrows the block table: must
+        # ALSO fail fast (admitting would blow up mid-flight and take the
+        # whole co-resident batch down)
+        overgen = cb.submit({"tokens": jnp.full((1, 8), 3, jnp.int32)}, engine.max_len)
+        with pytest.raises(ArenaFull):
+            overgen.result(timeout=30)
+        # admission keeps flowing for servable requests behind it
+        ok = cb.submit({"tokens": jnp.full((1, 4), 3, jnp.int32)}, 4)
+        assert ok.result(timeout=300)["tokens"].shape == (1, 4)
+    finally:
+        cb.shutdown()
+
+
+def test_cancelled_future_does_not_poison_batch(paged_engine):
+    """A client cancelling its future must not fail co-resident requests or
+    kill the decode loop (regression: InvalidStateError out of _finish)."""
+    engine = paged_engine
+    cb = ContinuousBatcher(engine, capacity=2)
+    try:
+        prompt = jnp.full((1, 4), 11, jnp.int32)
+        ref = np.asarray(engine.generate({"tokens": prompt}, steps=20)[0])
+        f1 = cb.submit({"tokens": prompt}, 20)
+        f2 = cb.submit({"tokens": prompt}, 20)
+        f1.cancel()  # may or may not win the race with admission; both fine
+        res2 = f2.result(timeout=300)
+        np.testing.assert_array_equal(res2["tokens"], ref)
+        # the loop survived: a fresh request still serves
+        f3 = cb.submit({"tokens": prompt}, 5)
+        np.testing.assert_array_equal(f3.result(timeout=300)["tokens"], ref[:, :5])
+        engine.arena.check_consistency()
+    finally:
+        cb.shutdown()
+
+
+def test_batcher_eos_leaves_early(paged_engine):
+    """A request whose greedy token hits eos_id leaves at that step."""
+    engine = paged_engine
+    prompt = jnp.full((1, 4), 9, jnp.int32)
+    ref, _ = engine.generate({"tokens": prompt}, steps=10)
+    toks = np.asarray(ref)[0]
+    eos = int(toks[4])  # force an early exit at the 5th token
+    cb = ContinuousBatcher(engine, capacity=2)
+    try:
+        res = cb.submit({"tokens": prompt}, 10, eos_id=eos).result(timeout=300)
+        got = res["tokens"][0]
+        assert got[-1] == eos and len(got) <= 5
+        np.testing.assert_array_equal(got, toks[: len(got)])
+    finally:
+        cb.shutdown()

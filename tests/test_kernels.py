@@ -48,6 +48,48 @@ def test_decode_attention_vs_ref(b, s, h, kv, hd, dtype):
     np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(expect, np.float32), **tol(dtype))
 
 
+@pytest.mark.parametrize("b,pages,page,h,kv,hd", [
+    (3, 9, 128, 4, 2, 64),
+    (2, 5, 256, 8, 1, 32),   # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention_vs_contiguous(b, pages, page, h, kv, hd, dtype):
+    """Block-table-indirect kernel == gather-to-contiguous + dense oracle."""
+    from repro.kernels.paged_attention import gather_pages, paged_decode_attention
+
+    ks = jax.random.split(RNG, 5)
+    q = jax.random.normal(ks[0], (b, h, hd), jnp.float32).astype(dtype)
+    kp = jax.random.normal(ks[1], (pages, page, kv, hd), jnp.float32).astype(dtype)
+    vp = jax.random.normal(ks[2], (pages, page, kv, hd), jnp.float32).astype(dtype)
+    width = 3
+    # ragged sequences through a shuffled table; padded rows hit page 0
+    bt = jax.random.randint(ks[3], (b, width), 1, pages, jnp.int32)
+    cur = jax.random.randint(ks[4], (b,), 1, width * page, jnp.int32)
+    out = paged_decode_attention(q, kp, vp, bt, cur, interpret=True)
+    expect = ref.decode_attn_ref(q, gather_pages(kp, bt), gather_pages(vp, bt), cur)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(expect, np.float32), **tol(dtype))
+
+
+def test_paged_decode_attention_scratch_rows_masked():
+    """A masked slot (all-scratch row, cur_len 0) must produce EXACT zeros
+    — not a mean of scratch-page garbage — and not disturb live rows."""
+    from repro.kernels.paged_attention import gather_pages, paged_decode_attention
+
+    ks = jax.random.split(RNG, 3)
+    b, pages, page, h, kv, hd = 2, 4, 128, 2, 2, 32
+    q = jax.random.normal(ks[0], (b, h, hd), jnp.float32)
+    kp = jax.random.normal(ks[1], (pages, page, kv, hd), jnp.float32)
+    vp = jax.random.normal(ks[2], (pages, page, kv, hd), jnp.float32)
+    bt = jnp.array([[1, 2], [0, 0]], jnp.int32)
+    cur = jnp.array([page + 7, 0], jnp.int32)
+    out = paged_decode_attention(q, kp, vp, bt, cur, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out[1]), 0.0)
+    expect = ref.decode_attn_ref(
+        q[:1], gather_pages(kp, bt[:1]), gather_pages(vp, bt[:1]), cur[:1]
+    )
+    np.testing.assert_allclose(np.asarray(out[:1]), np.asarray(expect), rtol=2e-5, atol=2e-5)
+
+
 def test_decode_attention_length_edge_cases():
     b, s, h, kv, hd = 2, 256, 2, 2, 32
     ks = jax.random.split(RNG, 3)

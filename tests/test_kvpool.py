@@ -1,0 +1,123 @@
+"""KVArena allocator invariants (seeded fuzz) + page data round-trips."""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.kvpool import ArenaFull, KVArena
+
+
+def make_arena(num_pages=16, page=8, stages=None):
+    return KVArena(
+        stages or {"g0": 2, "g1": 2},
+        num_pages=num_pages,
+        page_size=page,
+        kv_heads=2,
+        head_dim=4,
+        dtype=jnp.float32,
+    )
+
+
+def test_alloc_extend_free_roundtrip():
+    a = make_arena()
+    pages = a.alloc("s1", 10)  # 2 pages of 8
+    assert len(pages) == 2 and a.pages_held("s1") == 2
+    assert a.RESERVED_PAGE not in pages
+    added = a.extend("s1", 17)  # crosses into a 3rd page
+    assert len(added) == 1 and a.pages_held("s1") == 3
+    assert a.extend("s1", 18) == []  # same page
+    row = a.block_row("s1", 5)
+    assert list(row[:3]) == pages + added and list(row[3:]) == [0, 0]
+    assert a.peak_pages("s1") == 3
+    assert a.free("s1") == 3
+    assert a.free("s1") == 0  # idempotent
+    a.check_consistency()
+
+
+def test_arena_full_allocates_nothing():
+    a = make_arena(num_pages=4)  # 3 usable
+    a.alloc("s1", 16)  # 2 pages
+    with pytest.raises(ArenaFull):
+        a.alloc("s2", 17)  # needs 3
+    assert a.pages_held("s2") == 0
+    a.check_consistency()
+    a.alloc("s2", 8)  # 1 page still fits
+    a.check_consistency()
+
+
+def test_double_alloc_and_shrink_rejected():
+    a = make_arena()
+    a.alloc("s1", 8)
+    with pytest.raises(ValueError):
+        a.alloc("s1", 8)
+    with pytest.raises(ValueError):
+        a.extend("s1", 4)
+    with pytest.raises(KeyError):
+        a.extend("ghost", 9)
+
+
+def test_alloc_free_fuzz_no_double_use_no_leak():
+    """Seeded random alloc/extend/free storm; after every op the arena must
+    satisfy: every page in exactly one place, rows cover lengths, page 0
+    never handed out. After all clients exit, zero pages leak."""
+    rng = random.Random(1234)
+    a = make_arena(num_pages=24, page=4)
+    live: dict[int, int] = {}  # seq -> len
+    next_id = 0
+    for _ in range(600):
+        op = rng.random()
+        if op < 0.4 and len(live) < 10:
+            length = rng.randint(1, 40)
+            sid = next_id
+            next_id += 1
+            try:
+                a.alloc(sid, length)
+                live[sid] = length
+            except ArenaFull:
+                assert a.free_pages() < a.pages_for(length)
+        elif op < 0.75 and live:
+            sid = rng.choice(list(live))
+            new_len = live[sid] + rng.randint(1, 12)
+            try:
+                a.extend(sid, new_len)
+                live[sid] = new_len
+            except ArenaFull:
+                pass
+        elif live:
+            sid = rng.choice(list(live))
+            freed = a.free(sid)
+            assert freed == a.pages_for(live.pop(sid))
+        a.check_consistency()
+    for sid in list(live):
+        a.free(sid)
+    a.check_consistency()
+    assert a.used_pages() == 0
+    assert a.free_pages() == a.num_pages - 1  # page 0 reserved, all else free
+
+
+def test_write_prefill_gather_roundtrip():
+    """Scattered prefill pages gather back to the dense source (valid
+    region) through the block table."""
+    a = make_arena(num_pages=12, page=8, stages={"g0": 3})
+    length = 19  # 3 pages, last partially valid
+    a.alloc("s", length)
+    src = jax.random.normal(jax.random.PRNGKey(0), (3, 1, 24, 2, 4), jnp.float32)
+    a.write_prefill("s", {"g0": {"k": src, "v": src * 2.0}}, length)
+    got = a.gather("s", "g0")
+    np.testing.assert_array_equal(np.asarray(got["k"][:, :24]), np.asarray(src[:, 0]))
+    np.testing.assert_array_equal(np.asarray(got["v"][:, :24]), np.asarray(src[:, 0] * 2.0))
+    # a second tenant reusing freed pages sees only its own data
+    a.free("s")
+    a.alloc("t", 8)
+    src2 = jnp.ones((3, 1, 8, 2, 4), jnp.float32) * 7.0
+    a.write_prefill("t", {"g0": {"k": src2, "v": src2}}, 8)
+    got2 = a.gather("t", "g0")
+    np.testing.assert_array_equal(np.asarray(got2["k"][:, :8]), np.asarray(src2[:, 0]))
+
+
+def test_page_bytes_covers_all_stages():
+    a = make_arena(stages={"g0": 3, "g1": 5})
+    # 2 (k+v) x page 8 x kv 2 x hd 4 x f32(4B) x 8 layers
+    assert a.page_bytes == 2 * 8 * 2 * 4 * 4 * 8
