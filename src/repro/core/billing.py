@@ -29,14 +29,22 @@ class ArenaLease:
     page_bytes: int     # bytes per page across the whole chain (all stages)
     t_alloc: float
     t_free: float
+    # pages weighted by 1/refcount at release: a fleet sharing a prompt
+    # prefix splits the prefix pages' bill across the sharers. None means
+    # unshared serving — the nominal `pages` count is billed.
+    amortized_pages: float | None = None
 
     @property
     def duration_s(self) -> float:
         return self.t_free - self.t_alloc
 
     @property
+    def billed_pages(self) -> float:
+        return float(self.pages) if self.amortized_pages is None else self.amortized_pages
+
+    @property
     def gb_seconds(self) -> float:
-        return self.duration_s * self.pages * self.page_bytes / 1e9
+        return self.duration_s * self.billed_pages * self.page_bytes / 1e9
 
 
 @dataclasses.dataclass
@@ -107,12 +115,18 @@ class BillingMeter:
         with self._lock:
             leases = list(self.arena_leases)
         if not leases:
-            return {"requests": 0, "gb_s": 0.0, "mean_pages": 0.0, "max_pages": 0}
+            return {
+                "requests": 0, "gb_s": 0.0, "mean_pages": 0.0, "max_pages": 0,
+                "mean_billed_pages": 0.0,
+            }
         return {
             "requests": len(leases),
             "gb_s": sum(l.gb_seconds for l in leases),
             "mean_pages": sum(l.pages for l in leases) / len(leases),
             "max_pages": max(l.pages for l in leases),
+            # amortized by sharing: the RAM the platform ACTUALLY spent per
+            # request (shared prefix pages counted once across the fleet)
+            "mean_billed_pages": sum(l.billed_pages for l in leases) / len(leases),
             "mean_residency_s": sum(l.duration_s for l in leases) / len(leases),
         }
 

@@ -16,6 +16,7 @@ from repro.kernels.decode_attention import decode_attention as _decode_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.moe_gmm import moe_gmm as _gmm_kernel
 from repro.kernels.paged_attention import gather_pages
+from repro.kernels.paged_attention import paged_chunk_attention as _paged_chunk_kernel
 from repro.kernels.paged_attention import paged_decode_attention as _paged_kernel
 from repro.kernels.ssd_scan import ssd_scan as _ssd_kernel
 
@@ -62,6 +63,20 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, cur_len):
     k = gather_pages(k_pages, block_table)
     v = gather_pages(v_pages, block_table)
     return ref.decode_attn_ref(q, k, v, cur_len)
+
+
+def paged_chunk_attention(q, k_pages, v_pages, block_table, start):
+    """q: (B, C, H, hd); chunked-prefill attention over the page arena.
+
+    Returns the kernel result in kernel/interpret mode, or None when the
+    shapes don't fit the kernel tiling / ref mode is active — the caller
+    (``models/attention.py: paged_chunk_attention``) then runs the bit-exact
+    gather + q-chunked fallback."""
+    mode = _mode()
+    if mode != "ref" and _aligned((k_pages.shape[1], 128), (q.shape[1], 8)):
+        return _paged_chunk_kernel(q, k_pages, v_pages, block_table, start,
+                                   interpret=(mode == "interpret"))
+    return None
 
 
 def ssd(x, bm, cm, dt, a_log, d_skip, *, chunk: int = 256):

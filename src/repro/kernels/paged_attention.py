@@ -124,3 +124,97 @@ def paged_decode_attention(
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
     )(block_table.astype(jnp.int32), cur_len.astype(jnp.int32), q, k_pages, v_pages)
+
+
+def _paged_chunk_kernel(
+    bt_ref, start_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, page: int, num_page_blocks: int, chunk: int,
+):
+    """Chunked-prefill attention over the page arena: C query rows (one
+    prefill chunk starting at absolute position ``start``) sweep the
+    sequence's pages with the same online-softmax schedule as the decode
+    kernel, carrying per-row (m, l, acc) in VMEM scratch. Row i masks
+    columns past ``start + i`` (causal)."""
+    ib, _, ik = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, :]  # (C, hd)
+    k = k_ref[0, :, 0, :]  # (page, hd)
+    v = v_ref[0, :, 0, :]  # (page, hd)
+    start = start_ref[ib]
+
+    s = jnp.einsum(
+        "th,kh->tk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale  # (C, page)
+    cols = ik * page + jax.lax.broadcasted_iota(jnp.int32, (chunk, page), 1)
+    rows = start + jax.lax.broadcasted_iota(jnp.int32, (chunk, page), 0)
+    s = jnp.where(cols <= rows, s, NEG_INF)
+
+    m_prev = m_ref[...]  # (C,)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    # same explicit-zero guard as the decode kernel: a fully-masked row must
+    # contribute nothing, not a mean of scratch-page garbage
+    p = jnp.where(s <= NEG_INF * 0.5, 0.0, jnp.exp(s - m_cur[:, None]))
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    m_ref[...] = m_cur
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.einsum(
+        "tk,kh->th", p, v.astype(jnp.float32)
+    )
+
+    @pl.when(ik == num_page_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_chunk_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_table: jax.Array,
+    start: jax.Array,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, C, H, hd); k_pages/v_pages: (P, page, KV, hd);
+    block_table: (B, n) int32; start: (B,) absolute position of q[:, 0]
+    -> (B, C, H, hd)."""
+    b, c, h, hd = q.shape
+    _, page, kv, _ = k_pages.shape
+    n = block_table.shape[1]
+    g = h // kv
+    grid = (b, h, n)
+    scale = 1.0 / (hd**0.5)
+
+    kernel = functools.partial(
+        _paged_chunk_kernel, scale=scale, page=page, num_page_blocks=n, chunk=c
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block_table, start
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, 1, hd), lambda ib, ih, ik, bt, st: (ib, 0, ih, 0)),
+            pl.BlockSpec((1, page, 1, hd), lambda ib, ih, ik, bt, st, g=g: (bt[ib, ik], 0, ih // g, 0)),
+            pl.BlockSpec((1, page, 1, hd), lambda ib, ih, ik, bt, st, g=g: (bt[ib, ik], 0, ih // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, 1, hd), lambda ib, ih, ik, bt, st: (ib, 0, ih, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((c,), jnp.float32),
+            pltpu.VMEM((c,), jnp.float32),
+            pltpu.VMEM((c, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), start.astype(jnp.int32), q, k_pages, v_pages)

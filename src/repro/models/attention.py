@@ -166,6 +166,40 @@ def paged_decode_attention(
     return decode_attention(q, k_cache, v_cache, cur_len)
 
 
+def paged_chunk_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_table: jax.Array,
+    start: jax.Array,
+) -> jax.Array:
+    """Causal attention for one chunked-prefill block over a paged arena.
+
+    q: (1, C, H, hd) — C chunk rows whose absolute positions begin at
+    ``start`` (shape (1,) int32); pages: (P, page, KV, hd); block_table:
+    (1, n). Each chunk row attends to every position <= its own absolute
+    position, exactly like the matching rows of a dense causal prefill. On
+    TPU the block-table-indirect chunk kernel reads pages directly;
+    elsewhere one gather rebuilds the contiguous view and the q-chunked
+    ``full_attention`` runs with ``q_offset=start`` — masked positions
+    contribute exactly zero, so chunked prefill is bit-exact vs dense."""
+    from repro.kernels import ops as kops
+
+    out = kops.paged_chunk_attention(q, k_pages, v_pages, block_table, start)
+    if out is not None:
+        return out
+    k_cache = gather_pages_cast(k_pages, block_table, q.dtype)
+    v_cache = gather_pages_cast(v_pages, block_table, q.dtype)
+    return full_attention(q, k_cache, v_cache, causal=True, q_offset=start[0])
+
+
+def gather_pages_cast(pages: jax.Array, block_table: jax.Array, dtype) -> jax.Array:
+    from repro.kernels.paged_attention import gather_pages
+
+    out = gather_pages(pages, block_table)
+    return out.astype(dtype) if out.dtype != dtype else out
+
+
 def attn_output(params, attn: jax.Array) -> jax.Array:
     return jnp.einsum("bthk,hkd->btd", attn, params["wo"])
 
@@ -205,4 +239,31 @@ def update_paged_kv(
     slot = cur_len % page
     k_pages = k_pages.at[phys, slot].set(k_new[:, 0].astype(k_pages.dtype))
     v_pages = v_pages.at[phys, slot].set(v_new[:, 0].astype(v_pages.dtype))
+    return k_pages, v_pages
+
+
+def update_paged_kv_chunk(
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    block_table: jax.Array,
+    start: jax.Array,
+    valid: jax.Array,
+):
+    """Scatter one prefill chunk's K/V rows (1, C, KV, hd) into the page
+    arena: chunk row i lands at logical position ``start + i`` -> physical
+    page ``bt[0, (start+i)//page]``, slot ``(start+i) % page``. Rows at
+    ``i >= valid`` are padding (the chunk is padded to a power of two for
+    compile-cache reuse): their writes are routed to the reserved scratch
+    page, same contract as a masked decode slot."""
+    page = k_pages.shape[1]
+    c = k_new.shape[1]
+    idx = jnp.arange(c)
+    pos = start[0] + idx
+    logical = jnp.clip(pos // page, 0, block_table.shape[1] - 1)
+    phys = jnp.where(idx < valid[0], block_table[0, logical], 0)  # (C,)
+    slot = pos % page
+    k_pages = k_pages.at[phys, slot].set(k_new[0].astype(k_pages.dtype))
+    v_pages = v_pages.at[phys, slot].set(v_new[0].astype(v_pages.dtype))
     return k_pages, v_pages

@@ -165,6 +165,7 @@ def apply_block_decode_paged(
     kind: str,
     rules: LogicalRules | None,
     cur_len: jax.Array,
+    write_kv: bool = True,
 ):
     """Single-token block step against one layer's page arena slice.
 
@@ -173,17 +174,66 @@ def apply_block_decode_paged(
     the batch's block table: scatter the new token's K/V into its page,
     then attend through the table (kernel indirection on TPU, contiguous
     gather elsewhere). Attention kinds only — SSM state is recurrent, not
-    length-indexed, so it has no pages."""
+    length-indexed, so it has no pages.
+
+    ``write_kv=False`` runs a FROZEN step: the new token's K/V is assumed
+    already resident at position ``cur_len`` (a shared-prefix-cache hit)
+    and nothing is written — the engine uses this to recover first-token
+    logits for a whole-prompt hit without touching shared pages."""
     if kind == "ssm":
         raise ValueError("paged decode applies to attention caches only")
     metrics = None
     positions = cur_len[:, None]  # (B, 1)
     h = apply_norm(params["ln1"], x, cfg)
     q, k_new, v_new = attn_mod.qkv_project(params["attn"], h, cfg, positions)
-    k_pages, v_pages = attn_mod.update_paged_kv(
-        k_pages, v_pages, k_new, v_new, block_table, cur_len
-    )
+    if write_kv:
+        k_pages, v_pages = attn_mod.update_paged_kv(
+            k_pages, v_pages, k_new, v_new, block_table, cur_len
+        )
     out = attn_mod.paged_decode_attention(q, k_pages, v_pages, block_table, cur_len + 1)
+    x = x + attn_mod.attn_output(params["attn"], out)
+
+    h = apply_norm(params["ln2"], x, cfg)
+    if kind == "moe":
+        y, metrics = moe_mod.apply_moe(params["moe"], h, cfg, rules)
+    else:
+        y = apply_mlp(params["mlp"], h, cfg)
+    x = x + y
+    return x, k_pages, v_pages, _metrics_like(metrics)
+
+
+def apply_block_prefill_chunk_paged(
+    params,
+    x: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_table: jax.Array,
+    cfg: ModelConfig,
+    kind: str,
+    rules: LogicalRules | None,
+    start: jax.Array,
+    valid: jax.Array,
+):
+    """One prefill CHUNK's block step against a layer's page arena slice.
+
+    ``x``: (1, C, d) — C chunk rows whose absolute positions begin at
+    ``start`` (shape (1,)); ``valid`` (shape (1,)) counts the real rows
+    (the rest are compile-cache padding whose K/V writes route to the
+    scratch page). The chunk's K/V is scattered BEFORE attention so chunk
+    tokens attend to themselves and each other, exactly like the matching
+    rows of a dense causal prefill — chunked prefill is bit-exact vs dense
+    on the gather path."""
+    if kind == "ssm":
+        raise ValueError("paged prefill applies to attention caches only")
+    metrics = None
+    c = x.shape[1]
+    positions = start[:, None] + jnp.arange(c)[None, :]  # (1, C)
+    h = apply_norm(params["ln1"], x, cfg)
+    q, k_new, v_new = attn_mod.qkv_project(params["attn"], h, cfg, positions)
+    k_pages, v_pages = attn_mod.update_paged_kv_chunk(
+        k_pages, v_pages, k_new, v_new, block_table, start, valid
+    )
+    out = attn_mod.paged_chunk_attention(q, k_pages, v_pages, block_table, start)
     x = x + attn_mod.attn_output(params["attn"], out)
 
     h = apply_norm(params["ln2"], x, cfg)
@@ -308,6 +358,7 @@ def apply_stack_decode_paged(
     kind: str,
     rules: LogicalRules | None,
     cur_len: jax.Array,
+    write_kv: bool = True,
 ):
     """One decode step through the stack against a paged arena.
 
@@ -315,7 +366,9 @@ def apply_stack_decode_paged(
     stage's slice of the shared pool. Like :func:`apply_stack_decode`'s
     carry mode, the arena rides in the scan CARRY with per-layer in-place
     dynamic updates, so the whole pool stays ONE buffer through the stack
-    instead of double-buffering per layer."""
+    instead of double-buffering per layer. ``write_kv=False`` is the frozen
+    step (see :func:`apply_block_decode_paged`): nothing is scattered and
+    the arena comes back unchanged."""
     n = jax.tree.leaves(stacked_params)[0].shape[0]
 
     def body(carry, inp):
@@ -324,7 +377,51 @@ def apply_stack_decode_paged(
         k_pages = jax.lax.dynamic_index_in_dim(arena_c["k"], i, 0, keepdims=False)
         v_pages = jax.lax.dynamic_index_in_dim(arena_c["v"], i, 0, keepdims=False)
         h, k_pages, v_pages, metrics = apply_block_decode_paged(
-            layer_params, h, k_pages, v_pages, block_table, cfg, kind, rules, cur_len
+            layer_params, h, k_pages, v_pages, block_table, cfg, kind, rules,
+            cur_len, write_kv,
+        )
+        if write_kv:
+            arena_c = {
+                "k": jax.lax.dynamic_update_index_in_dim(
+                    arena_c["k"], k_pages.astype(arena_c["k"].dtype), i, 0
+                ),
+                "v": jax.lax.dynamic_update_index_in_dim(
+                    arena_c["v"], v_pages.astype(arena_c["v"].dtype), i, 0
+                ),
+            }
+        return (h, arena_c), metrics
+
+    (x, new_arena), metrics = jax.lax.scan(
+        body, (x, arena), (jnp.arange(n), stacked_params)
+    )
+    return x, new_arena, jax.tree.map(jnp.sum, metrics)
+
+
+def apply_stack_prefill_chunk_paged(
+    stacked_params,
+    x: jax.Array,
+    arena: dict,
+    block_table: jax.Array,
+    cfg: ModelConfig,
+    kind: str,
+    rules: LogicalRules | None,
+    start: jax.Array,
+    valid: jax.Array,
+):
+    """One prefill chunk through the stack against a paged arena — same
+    single-buffer carry pattern as :func:`apply_stack_decode_paged`, with
+    the chunk block step (scatter C rows, attend causally from ``start``)
+    in place of the single-token one."""
+    n = jax.tree.leaves(stacked_params)[0].shape[0]
+
+    def body(carry, inp):
+        i, layer_params = inp
+        h, arena_c = carry
+        k_pages = jax.lax.dynamic_index_in_dim(arena_c["k"], i, 0, keepdims=False)
+        v_pages = jax.lax.dynamic_index_in_dim(arena_c["v"], i, 0, keepdims=False)
+        h, k_pages, v_pages, metrics = apply_block_prefill_chunk_paged(
+            layer_params, h, k_pages, v_pages, block_table, cfg, kind, rules,
+            start, valid,
         )
         arena_c = {
             "k": jax.lax.dynamic_update_index_in_dim(

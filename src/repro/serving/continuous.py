@@ -19,6 +19,19 @@ the front of its lane; optionally best-effort arrivals beyond
 ``max_queue`` are shed (fail fast) so an overload degrades background
 traffic before strict classes queue.
 
+Chunked prefill: a joiner's prompt no longer serializes in front of the
+batch. Admission starts a *prefill job* (pages allocated through the
+arena's shared-prefix cache) and the loop advances it ONE budgeted chunk
+between decode steps, so residents keep emitting while the joiner's
+prompt streams in. The per-step chunk budget comes from the strict lane's
+inter-token slack: with EWMA estimates of per-token prefill time and the
+batch step time (same :class:`ServiceTimeEstimate` the queueing windows
+use), the budget is the token count that fits inside
+``slack_fraction x min-strict-slack - step_time``, floored at
+``min_chunk`` so prefills always progress. ``serialize_prefill=True``
+restores the old admit-time full prefill (the comparison baseline), and
+``prefill_chunk=N`` pins the chunk size for deterministic tests.
+
 Every request's RAM bill is its pages: on exit the batcher records an
 :class:`~repro.core.billing.ArenaLease` — peak pages held x page bytes x
 residency seconds — the per-request GB-s the paper's RAM-reduction story
@@ -34,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.billing import ArenaLease
+from repro.scheduler.adaptive import ServiceTimeEstimate
 from repro.scheduler.batching import largest_pow2_le
 from repro.scheduler.scheduler import OverloadShedError
 from repro.scheduler.slo import BEST_EFFORT, ClassLanes, SLOClass
@@ -65,7 +79,7 @@ class _Request:
     __slots__ = (
         "inputs", "max_new_tokens", "eos_id", "slo", "future",
         "t_submit", "t_alloc", "t_admit", "tokens", "step_s", "seq_id",
-        "cur_len", "remaining", "next_token", "last_emit",
+        "cur_len", "remaining", "next_token", "last_emit", "job",
     )
 
     def __init__(self, inputs, max_new_tokens, eos_id, slo, future, t_submit):
@@ -84,6 +98,7 @@ class _Request:
         self.remaining = 0
         self.next_token = 0
         self.last_emit = 0.0
+        self.job = None  # PagedPrefillJob while the chunked prefill runs
 
 
 class ContinuousBatcher:
@@ -98,13 +113,25 @@ class ContinuousBatcher:
     loop thread (don't interleave ``generate_paged`` with a live batcher)."""
 
     def __init__(self, engine: ServingEngine, *, capacity: int = 8,
-                 max_queue: int | None = None):
+                 max_queue: int | None = None,
+                 prefill_chunk: int | None = None,
+                 serialize_prefill: bool = False,
+                 min_chunk: int = 8,
+                 slack_fraction: float = 0.5):
         if engine.arena is None:
             raise ValueError("engine needs enable_paging() before continuous batching")
         self.engine = engine
         self.clock = engine.platform.clock
         self.capacity = largest_pow2_le(capacity)
         self.max_queue = max_queue
+        self.prefill_chunk = prefill_chunk      # fixed chunk size override
+        self.serialize_prefill = serialize_prefill
+        self.min_chunk = max(1, int(min_chunk))
+        self.slack_fraction = float(slack_fraction)
+        self._est_prefill = ServiceTimeEstimate()  # seconds per PREFILL TOKEN
+        self._est_step = ServiceTimeEstimate()     # seconds per batch decode step
+        self._job: _Request | None = None          # the one in-flight chunked prefill
+        self.prefill_chunks = 0
         self._slots: list[_Request | None] = [None] * self.capacity
         # persistent per-slot step inputs: block-table rows are rebuilt only
         # when a slot's page set changes (join / page-boundary extend /
@@ -171,6 +198,8 @@ class ContinuousBatcher:
                 "tokens": self.tokens_out,
                 "completed": self.completed,
                 "shed": self.shed,
+                "prefill_chunks": self.prefill_chunks,
+                "prefilling": self._job is not None,
                 "mean_occupancy": (self._occupancy_sum / self.steps / self.capacity)
                 if self.steps else 0.0,
                 "arena": self.engine.arena.stats(),
@@ -184,6 +213,7 @@ class ContinuousBatcher:
             self.tokens_out = 0
             self.completed = 0
             self.shed = 0
+            self.prefill_chunks = 0
             self._occupancy_sum = 0
 
     def shutdown(self, timeout: float = 30.0) -> None:
@@ -196,9 +226,14 @@ class ContinuousBatcher:
 
     def _admit(self) -> None:
         """Fill free slots from the lanes, strictest class first. Runs on
-        the loop thread; prefill happens here (between decode steps), which
-        is the single-device continuous-batching schedule."""
+        the loop thread. The chunked path (default for token prompts)
+        starts ONE prefill job and returns — the loop interleaves its
+        chunks with decode steps via :meth:`_prefill_tick`, and the next
+        admission waits for the job to seat. ``serialize_prefill`` (or a
+        non-token prompt) takes the old full-prefill-at-admit path."""
         while True:
+            if self._job is not None:
+                return  # a chunked prefill is in flight: it owns admission
             free = [i for i, s in enumerate(self._slots) if s is None]
             if not free:
                 return
@@ -225,9 +260,21 @@ class ContinuousBatcher:
                 continue
             self._seq += 1
             req.seq_id = ("cb", self._seq)
-            # residency starts when the pages do: prefill_paged allocates
-            # BEFORE running the chain, and the lease must bill that too
+            # residency starts when the pages do: both admission paths
+            # allocate BEFORE running any chain, and the lease bills that too
             req.t_alloc = self.clock.now()
+            if not self.serialize_prefill and "tokens" in req.inputs:
+                try:
+                    req.job = self.engine.begin_prefill_paged(req.seq_id, req.inputs)
+                except ArenaFull:
+                    with self._cv:
+                        self._lanes.requeue(req, slo)  # transient: residents
+                    return                             # will free pages
+                except BaseException as exc:  # noqa: BLE001 — deliver, don't kill the loop
+                    _deliver(req.future, exc=exc)
+                    continue
+                self._job = req
+                return
             try:
                 logits, t_in = self.engine.prefill_paged(req.seq_id, req.inputs)
             except ArenaFull:
@@ -237,20 +284,80 @@ class ContinuousBatcher:
             except BaseException as exc:  # noqa: BLE001 — deliver, don't kill the loop
                 _deliver(req.future, exc=exc)
                 continue
-            req.t_admit = self.clock.now()
-            req.last_emit = req.t_admit  # first token emitted at admission
             req.cur_len = t_in
-            req.remaining = req.max_new_tokens
-            first = int(np.asarray(_greedy_token(jnp.asarray(logits)))[0, 0])
-            req.tokens.append(first)
-            req.remaining -= 1
-            req.next_token = first
-            if req.remaining <= 0 or first == req.eos_id:
-                self._finish(req)
-                continue
-            slot = free[0]
-            self._slots[slot] = req
-            self._bt[slot] = self.engine.arena.block_row(req.seq_id, self.engine.block_width)
+            self._seat(req, logits)
+
+    def _seat(self, req: _Request, logits) -> None:
+        """Prefill finished (either path): emit the first token and take a
+        free slot — one is guaranteed, because slots only fill through this
+        method and admission checked before starting."""
+        req.t_admit = self.clock.now()
+        req.last_emit = req.t_admit  # first token emitted at admission
+        req.remaining = req.max_new_tokens
+        first = int(np.asarray(_greedy_token(jnp.asarray(logits)))[0, 0])
+        req.tokens.append(first)
+        req.remaining -= 1
+        req.next_token = first
+        if req.remaining <= 0 or first == req.eos_id:
+            self._finish(req)
+            return
+        slot = next(i for i, s in enumerate(self._slots) if s is None)
+        self._slots[slot] = req
+        self._bt[slot] = self.engine.arena.block_row(req.seq_id, self.engine.block_width)
+
+    def _chunk_budget(self, req: _Request) -> int:
+        """Prompt tokens the in-flight prefill may process this tick.
+
+        Derived from the strict residents' inter-token slack: the chunk
+        must fit inside ``slack_fraction x min(target - time_since_last
+        _emit)`` minus the decode step the residents still need, using the
+        EWMA per-token prefill estimate. Floored at ``min_chunk`` so cold
+        starts and exhausted slack still make progress (starving the
+        prefill forever would just move the stall to the joiner)."""
+        remaining = req.job.remaining
+        if self.prefill_chunk is not None:
+            return self.prefill_chunk
+        strict = [r for r in self._slots if r is not None and not r.slo.best_effort]
+        if not strict:
+            return max(self.min_chunk, remaining)  # nobody to protect
+        per_tok = self._est_prefill.value
+        if per_tok is None or per_tok <= 0.0:
+            return self.min_chunk  # cold start: seed the estimate cheaply
+        now = self.clock.now()
+        slack = min(max(0.0, r.slo.target_s - (now - r.last_emit)) for r in strict)
+        step_s = self._est_step.value or 0.0
+        budget_s = max(0.0, self.slack_fraction * slack - step_s)
+        return max(self.min_chunk, int(budget_s / per_tok))
+
+    def _prefill_tick(self) -> bool:
+        """Advance the in-flight chunked prefill by one budgeted chunk;
+        seat the request when its prompt completes. Returns True if a
+        chunk ran (the loop uses it to keep spinning while idle-but-
+        prefilling)."""
+        req = self._job
+        if req is None:
+            return False
+        budget = self._chunk_budget(req)
+        pos0 = req.job.pos
+        t0 = self.clock.now()
+        try:
+            logits = self.engine.prefill_chunk_paged(req.job, budget)
+        except BaseException as exc:  # noqa: BLE001 — deliver, don't kill the loop
+            self._job = None
+            self.engine.arena.free(req.seq_id)
+            _deliver(req.future, exc=exc)
+            return True
+        done = req.job.pos - pos0
+        if done > 0:  # a whole-prompt cache hit computes zero prompt tokens
+            self._est_prefill.observe((self.clock.now() - t0) / done)
+        self.prefill_chunks += 1
+        if logits is None:
+            return True  # more chunks to go
+        self._job = None
+        req.cur_len = req.job.t_in
+        req.job = None
+        self._seat(req, logits)
+        return True
 
     def _release_slot(self, i: int) -> None:
         """Clear a slot back to masked: all-scratch row, zero length/token."""
@@ -261,6 +368,9 @@ class ContinuousBatcher:
 
     def _finish(self, req: _Request) -> None:
         pages = self.engine.arena.peak_pages(req.seq_id)
+        # sampled BEFORE free: each still-held page weighted by 1/refcount,
+        # so a shared prefix is billed once across the fleet holding it
+        amortized = self.engine.arena.amortized_pages(req.seq_id)
         self.engine.arena.free(req.seq_id)
         t_done = self.clock.now()
         self.engine.platform.meter.record_arena(ArenaLease(
@@ -270,6 +380,7 @@ class ContinuousBatcher:
             page_bytes=self.engine.arena.page_bytes,
             t_alloc=req.t_alloc,
             t_free=t_done,
+            amortized_pages=amortized,
         ))
         self.completed += 1
         self.tokens_out += len(req.tokens)
@@ -277,6 +388,7 @@ class ContinuousBatcher:
             "tokens": np.asarray(req.tokens, np.int32)[None, :],
             "step_s": list(req.step_s),
             "pages": pages,
+            "amortized_pages": amortized,
             "queued_s": req.t_admit - req.t_submit,
         })
 
@@ -289,13 +401,17 @@ class ContinuousBatcher:
                 continue
             try:
                 added = self.engine.arena.extend(req.seq_id, req.cur_len + 1)
+                # the write position may sit on a SHARED page (a prefix-
+                # cache hit whose partial tail page another sequence also
+                # holds): copy-on-write it before the step's scatter
+                moved = self.engine.arena.make_private(req.seq_id, req.cur_len)
             except ArenaFull:
                 # pool exhausted mid-flight: truncate THIS request (deliver
                 # what it generated) instead of failing the whole batch
                 self._release_slot(i)
                 self._finish(req)
                 continue
-            if added:  # crossed a page boundary: this slot's row changed
+            if added or moved:  # this slot's page set changed
                 self._bt[i] = self.engine.arena.block_row(req.seq_id, width)
             self._tok[i, 0] = req.next_token
             self._cur[i] = req.cur_len
@@ -324,8 +440,13 @@ class ContinuousBatcher:
     def _loop(self) -> None:
         while True:
             self._admit()
+            # one prefill chunk rides between decode steps: residents keep
+            # emitting while a joiner's prompt streams in
+            prefilled = self._prefill_tick()
             busy = any(s is not None for s in self._slots)
             if not busy:
+                if prefilled:
+                    continue  # mid-prefill with no residents: next chunk now
                 with self._cv:
                     if self._stopped:
                         break
@@ -335,8 +456,10 @@ class ContinuousBatcher:
                     # in simulated time like every other timed wait
                     self.clock.wait_on(self._cv, 0.05)
                     continue
+            t0 = self.clock.now()
             try:
                 self._step()
+                self._est_step.observe(self.clock.now() - t0)
             except BaseException as exc:  # noqa: BLE001 — a raising step must
                 # fail the in-flight requests, not silently kill the loop
                 for i, req in enumerate(self._slots):
@@ -346,9 +469,14 @@ class ContinuousBatcher:
                         _deliver(req.future, exc=exc)
             with self._cv:
                 if self._stopped and all(s is None for s in self._slots) \
-                        and self._lanes.depth() == 0:
+                        and self._lanes.depth() == 0 and self._job is None:
                     break
-        # drain: fail whatever is still queued so no client hangs
+        # drain: fail the in-flight prefill and whatever is still queued so
+        # no client hangs
+        if self._job is not None:
+            req, self._job = self._job, None
+            self.engine.arena.free(req.seq_id)
+            _deliver(req.future, exc=RuntimeError("batcher shut down"))
         with self._cv:
             while True:
                 got = self._lanes.pop()

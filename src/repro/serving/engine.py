@@ -58,6 +58,27 @@ _greedy_token = jax.jit(
 )
 
 
+class PagedPrefillJob:
+    """Host-side cursor for one chunked paged prefill: ``pos`` tracks how
+    many prompt tokens already have resident KV (cached prefix pages count
+    immediately), ``t_in`` is the full prompt length."""
+
+    __slots__ = ("seq_id", "tokens", "pos")
+
+    def __init__(self, seq_id, tokens: np.ndarray, pos: int):
+        self.seq_id = seq_id
+        self.tokens = tokens  # (t_in,) int32
+        self.pos = pos
+
+    @property
+    def t_in(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def remaining(self) -> int:
+        return self.t_in - self.pos
+
+
 def _slice_tree(tree, lo: int, hi: int):
     return jax.tree.map(lambda x: x[lo:hi], tree)
 
@@ -121,10 +142,17 @@ class ServingEngine:
             nxt = names[i + 1] if i + 1 < g else head_name
 
             def group_fn(ctx, params, x, cur_len, caches):
-                if "block_table" in caches:  # paged decode: caches hold the arena
-                    h, new_arena, _ = tfm.apply_stack_decode_paged(
-                        params, x, caches[key], caches["block_table"], cfg, kind, None, cur_len
-                    )
+                if "block_table" in caches:  # paged: caches hold the arena
+                    if "chunk_valid" in caches:  # chunked-prefill rows
+                        h, new_arena, _ = tfm.apply_stack_prefill_chunk_paged(
+                            params, x, caches[key], caches["block_table"], cfg,
+                            kind, None, cur_len, caches["chunk_valid"],
+                        )
+                    else:  # single-token decode ("__frozen__" = no KV write)
+                        h, new_arena, _ = tfm.apply_stack_decode_paged(
+                            params, x, caches[key], caches["block_table"], cfg,
+                            kind, None, cur_len, "__frozen__" not in caches,
+                        )
                     caches = dict(caches)
                     caches[key] = new_arena
                     return ctx.call(nxt, h, cur_len, caches)
@@ -157,7 +185,13 @@ class ServingEngine:
             )
 
         def head_fn(ctx, params, x, cur_len, caches):
-            h = apply_norm(params["ln_f"], x[:, -1:], cfg)
+            if isinstance(caches, dict) and "chunk_valid" in caches:
+                # chunked prefill pads the chunk to a power of two: the last
+                # REAL row's hidden state is at chunk_valid - 1, not -1
+                h = jax.lax.dynamic_slice_in_dim(x, caches["chunk_valid"][0] - 1, 1, axis=1)
+            else:
+                h = x[:, -1:]
+            h = apply_norm(params["ln_f"], h, cfg)
             logits = unembed(params["embed"], h)[:, 0]
             return logits, caches
 
@@ -296,17 +330,88 @@ class ServingEngine:
         """Admit one request into the arena: dense chain prefill (the
         prefill route is unchanged), then copy-on-prefill scatters the built
         cache into freshly allocated pages and the dense pytree is dropped.
+
+        Token prompts go through the arena's shared-prefix cache: leading
+        pages whose content hashes hit are held by reference and skipped by
+        the scatter; a whole-prompt hit skips the dense prefill entirely —
+        one frozen decode step at the last prompt position recovers the
+        first-token logits from the cached pages (bit-exact: the masked
+        padded positions contribute exact zeros, same as the dense path).
         Returns (last logits (1, V), prompt length)."""
         assert self.arena is not None, "enable_paging first"
         t_in = inputs["tokens"].shape[1] if "tokens" in inputs else inputs["embeds"].shape[1]
-        self.arena.alloc(seq_id, t_in)
+        if "tokens" in inputs:
+            _, cached = self.arena.alloc_prefill(seq_id, np.asarray(inputs["tokens"])[0])
+        else:
+            self.arena.alloc(seq_id, t_in)  # no content hash for raw embeds
+            cached = 0
         try:
-            logits, caches, _ = self.prefill(inputs)
-            self.arena.write_prefill(seq_id, caches, t_in)
+            if cached >= t_in:
+                logits = self._frozen_first_token(seq_id, inputs, t_in)
+            else:
+                logits, caches, _ = self.prefill(inputs)
+                self.arena.write_prefill(seq_id, caches, t_in)
+            self.arena.commit_prefill(seq_id)
         except BaseException:
             self.arena.free(seq_id)
             raise
         return logits, t_in
+
+    def _frozen_first_token(self, seq_id, inputs: dict, t_in: int):
+        """First-token logits for a whole-prompt prefix-cache hit: every
+        page is already resident, so ONE frozen (no-KV-write) decode step at
+        position t_in - 1 reads them back — nothing shared is touched."""
+        row = self.arena.block_row(seq_id, self.block_width)
+        last = np.asarray(inputs["tokens"])[:, -1:].astype(np.int32)
+        return self.paged_decode_step(
+            last, np.asarray([t_in - 1], np.int32), row[None, :], write_kv=False
+        )
+
+    def begin_prefill_paged(self, seq_id, inputs: dict) -> "PagedPrefillJob":
+        """Allocate pages for a token prompt (through the shared-prefix
+        cache) and return a chunked-prefill cursor — drive it with
+        :meth:`prefill_chunk_paged` between decode steps. The cursor starts
+        past any cached prefix."""
+        assert self.arena is not None, "enable_paging first"
+        tokens = np.asarray(inputs["tokens"])[0].astype(np.int32)
+        _, cached = self.arena.alloc_prefill(seq_id, tokens)
+        return PagedPrefillJob(seq_id=seq_id, tokens=tokens, pos=int(cached))
+
+    def prefill_chunk_paged(self, job: "PagedPrefillJob", max_tokens: int):
+        """Advance a chunked prefill by up to ``max_tokens`` prompt tokens:
+        one chain invocation scatters the chunk's KV into the job's pages
+        and attends causally from the chunk's start offset. Returns the
+        first-token logits (1, V) once the prompt is fully processed, else
+        None. The chunk buffer is padded to the next power of two (the real
+        count rides in ``chunk_valid``) so the compile cache sees O(log
+        max_len) chunk programs, not one per length."""
+        assert self.arena is not None, "enable_paging first"
+        t_in = job.t_in
+        if job.pos >= t_in:  # whole-prompt hit: nothing to compute
+            logits = self._frozen_first_token(
+                job.seq_id, {"tokens": job.tokens[None, :]}, t_in
+            )
+            self.arena.commit_prefill(job.seq_id)
+            return logits
+        c = max(1, min(int(max_tokens), t_in - job.pos))
+        padded = 1 << (c - 1).bit_length()
+        buf = np.zeros((1, padded), np.int32)
+        buf[0, :c] = job.tokens[job.pos : job.pos + c]
+        row = self.arena.block_row(job.seq_id, self.block_width)
+        caches = self.paged_caches(row[None, :])
+        caches["chunk_valid"] = jnp.asarray([c], jnp.int32)
+        self.platform.handler.note_demand(self.entry)
+        logits, caches = self.platform._invoke_with_retry(
+            self.entry,
+            ({"tokens": jnp.asarray(buf)}, jnp.asarray([job.pos], jnp.int32), caches),
+        )
+        for name in self.arena.data:
+            self.arena.swap_data(name, caches[name])
+        job.pos += c
+        if job.pos >= t_in:
+            self.arena.commit_prefill(job.seq_id)
+            return logits
+        return None
 
     def paged_caches(self, block_table) -> dict:
         """Assemble the decode ``caches`` pytree for a batch served from the
@@ -317,11 +422,16 @@ class ServingEngine:
             caches[name] = stage
         return caches
 
-    def paged_decode_step(self, tokens, cur_len, block_table):
+    def paged_decode_step(self, tokens, cur_len, block_table, *, write_kv: bool = True):
         """One decode step for a batch whose caches live in the arena.
         tokens: (B, 1); cur_len: (B,) — ragged per-request lengths;
         block_table: (B, width). The updated page pools are stored back so
         the arena always holds the latest state.
+
+        ``write_kv=False`` runs the FROZEN variant (shared-prefix whole-hit
+        admission): the step reads pages but writes nothing and no state is
+        stored back. The marker rides in the caches pytree, so the frozen
+        step compiles as its own program.
 
         Dispatches through the no-canary path: ``invoke`` would retain the
         step's args — the ENTIRE arena pytree — as the merge health-check
@@ -330,13 +440,16 @@ class ServingEngine:
         still have canaries from the (dense) prefill invocations; demand is
         noted so the fusion policy sees serve traffic as client load."""
         self.platform.handler.note_demand(self.entry)
+        caches = self.paged_caches(block_table)
+        if not write_kv:
+            caches["__frozen__"] = ()
         logits, caches = self.platform._invoke_with_retry(
             self.entry,
-            ({"tokens": tokens}, jnp.asarray(cur_len, jnp.int32),
-             self.paged_caches(block_table)),
+            ({"tokens": tokens}, jnp.asarray(cur_len, jnp.int32), caches),
         )
-        for name in self.arena.data:
-            self.arena.data[name] = caches[name]
+        if write_kv:
+            for name in self.arena.data:
+                self.arena.swap_data(name, caches[name])
         return logits
 
     def _block_table_for(self, seq_ids) -> np.ndarray:

@@ -171,6 +171,95 @@ def test_cancelled_future_does_not_poison_batch(paged_engine):
         cb.shutdown()
 
 
+def test_chunked_prefill_matches_dense(paged_engine):
+    """A long prompt forced through many small chunks (padded buffers,
+    per-chunk causal offsets, scatter into pages) must produce the same
+    tokens as solo dense generate, bit for bit."""
+    engine = paged_engine
+    prompt = jnp.asarray((np.arange(1, 41) * 5)[None, :] % 97, jnp.int32)
+    ref = np.asarray(engine.generate({"tokens": prompt}, steps=8)[0])
+    cb = ContinuousBatcher(engine, capacity=2, prefill_chunk=7)
+    try:
+        res = cb.submit({"tokens": prompt}, 8).result(timeout=300)
+        np.testing.assert_array_equal(res["tokens"], ref)
+        assert cb.stats()["prefill_chunks"] >= 6  # 40 tokens / 7 per chunk
+    finally:
+        cb.shutdown()
+    engine.arena.check_consistency()
+    assert engine.arena.used_pages() == 0
+
+
+def test_serialized_prefill_flag_matches_dense(paged_engine):
+    """The serialize_prefill=True comparison baseline still serves the old
+    admit-time full-prefill path, bit-identical too."""
+    engine = paged_engine
+    prompt = jnp.asarray((np.arange(1, 23) * 7)[None, :] % 89, jnp.int32)
+    ref = np.asarray(engine.generate({"tokens": prompt}, steps=6)[0])
+    cb = ContinuousBatcher(engine, capacity=2, serialize_prefill=True)
+    try:
+        res = cb.submit({"tokens": prompt}, 6).result(timeout=300)
+        np.testing.assert_array_equal(res["tokens"], ref)
+        assert cb.stats()["prefill_chunks"] == 0
+    finally:
+        cb.shutdown()
+    engine.arena.check_consistency()
+
+
+def test_shared_prefix_cow_parity(paged_engine):
+    """Two requests sharing a whole prompt, resident TOGETHER and then
+    diverging through decode: the second is served from the first's pages
+    by reference (prefix-cache hit), its first divergent write copy-on-
+    writes the shared tail page, and BOTH streams stay bit-identical to
+    unshared dense generate."""
+    engine = paged_engine
+    arena = engine.arena
+    # 40-token prompt, page 16: 2 full pages + a partial tail page the two
+    # residents share until their decode writes diverge onto it
+    prompt = jnp.asarray((np.arange(3, 43) * 11)[None, :] % 101, jnp.int32)
+    ref = np.asarray(engine.generate({"tokens": prompt}, steps=12)[0])
+    hits0, cow0 = arena.shared_hits, arena.cow_copies
+    cb = ContinuousBatcher(engine, capacity=2)
+    try:
+        f1 = cb.submit({"tokens": prompt}, 12)
+        f2 = cb.submit({"tokens": prompt}, 12)
+        r1 = f1.result(timeout=300)
+        r2 = f2.result(timeout=300)
+        np.testing.assert_array_equal(r1["tokens"], ref)
+        np.testing.assert_array_equal(r2["tokens"], ref)
+        assert arena.shared_hits > hits0, "second request must hit the prefix cache"
+        assert arena.cow_copies > cow0, "divergent tail write must copy-on-write"
+        # the sharer's amortized bill is strictly below its nominal pages
+        assert min(r1["amortized_pages"], r2["amortized_pages"]) < min(r1["pages"], r2["pages"])
+    finally:
+        cb.shutdown()
+    engine.arena.check_consistency()
+    assert engine.arena.used_pages() == 0
+
+
+def test_shared_prefix_then_divergent_prompt_parity(paged_engine):
+    """Partial-prefix sharing: request B's prompt shares only the first
+    full pages of A's prompt then diverges IN the prompt — B prefills only
+    its private suffix yet must match its own dense reference exactly."""
+    engine = paged_engine
+    base = (np.arange(5, 45) * 13) % 103
+    prompt_a = jnp.asarray(base[None, :], jnp.int32)                  # 40 tokens
+    prompt_b = jnp.asarray(
+        np.concatenate([base[:32], (base[:8] + 1) % 103])[None, :], jnp.int32
+    )  # same 2 full pages, different tail
+    ref_a = np.asarray(engine.generate({"tokens": prompt_a}, steps=6)[0])
+    ref_b = np.asarray(engine.generate({"tokens": prompt_b}, steps=6)[0])
+    cb = ContinuousBatcher(engine, capacity=2)
+    try:
+        fa = cb.submit({"tokens": prompt_a}, 6)
+        fb = cb.submit({"tokens": prompt_b}, 6)
+        np.testing.assert_array_equal(fa.result(timeout=300)["tokens"], ref_a)
+        np.testing.assert_array_equal(fb.result(timeout=300)["tokens"], ref_b)
+    finally:
+        cb.shutdown()
+    engine.arena.check_consistency()
+    assert engine.arena.used_pages() == 0
+
+
 def test_batcher_eos_leaves_early(paged_engine):
     """A request whose greedy token hits eos_id leaves at that step."""
     engine = paged_engine

@@ -1,5 +1,7 @@
-"""KVArena allocator invariants (seeded fuzz) + page data round-trips."""
+"""KVArena allocator invariants (seeded fuzz) + page data round-trips +
+concurrency regressions + shared-prefix refcounting/CoW."""
 import random
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -121,3 +123,240 @@ def test_page_bytes_covers_all_stages():
     a = make_arena(stages={"g0": 3, "g1": 5})
     # 2 (k+v) x page 8 x kv 2 x hd 4 x f32(4B) x 8 layers
     assert a.page_bytes == 2 * 8 * 2 * 4 * 4 * 8
+
+
+# ------------------------------------------------- concurrency regressions
+
+
+class _BarrierDict(dict):
+    """Stage-data dict whose reads rendezvous two threads: if both writers
+    reach the read concurrently (the pre-fix unlocked RMW), both rebase on
+    the same old array and one loses its pages. The fixed code serializes
+    under the data lock, so the second thread never reaches the barrier and
+    the wait times out harmlessly."""
+
+    def __init__(self, *args, barrier):
+        super().__init__(*args)
+        self._barrier = barrier
+
+    def __getitem__(self, key):
+        try:
+            self._barrier.wait(timeout=0.3)
+        except threading.BrokenBarrierError:
+            pass
+        return super().__getitem__(key)
+
+
+def test_write_prefill_concurrent_rmw_keeps_both_sequences():
+    """Regression (unlocked device-array RMW): two concurrent prefills into
+    the same stage must BOTH land — pre-fix, each rebased on the stale
+    array and silently dropped the other's pages."""
+    a = make_arena(num_pages=12, page=8, stages={"g0": 2})
+    a.alloc("s1", 8)
+    a.alloc("s2", 8)
+    barrier = threading.Barrier(2)
+    a.data["g0"] = _BarrierDict(a.data["g0"], barrier=barrier)
+    src1 = jnp.ones((2, 1, 8, 2, 4), jnp.float32) * 3.0
+    src2 = jnp.ones((2, 1, 8, 2, 4), jnp.float32) * 5.0
+    errs = []
+
+    def write(sid, src):
+        try:
+            a.write_prefill(sid, {"g0": {"k": src, "v": src}}, 8)
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    t1 = threading.Thread(target=write, args=("s1", src1))
+    t2 = threading.Thread(target=write, args=("s2", src2))
+    t1.start(); t2.start(); t1.join(); t2.join()
+    a.data["g0"] = dict(a.data["g0"])  # plain dict again for gather
+    assert not errs
+    np.testing.assert_array_equal(np.asarray(a.gather("s1", "g0")["k"]), np.asarray(src1[:, 0]))
+    np.testing.assert_array_equal(np.asarray(a.gather("s2", "g0")["k"]), np.asarray(src2[:, 0]))
+
+
+class _RacingExtendArena(KVArena):
+    """Simulates a concurrent extend landing between a seq_len read and the
+    page-list read: pre-fix, gather derived its default width from seq_len
+    and then re-read the pages under a SECOND lock acquisition, so the
+    interleaved extend made block_row raise a spurious ValueError."""
+
+    def seq_len(self, seq_id):
+        n = super().seq_len(seq_id)
+        if n and seq_id in self._held:
+            super().extend(seq_id, n + self.page_size)
+        return n
+
+
+def test_gather_width_snapshot_atomic_with_extend():
+    a = _RacingExtendArena(
+        {"g0": 2}, num_pages=16, page_size=8, kv_heads=2, head_dim=4, dtype=jnp.float32
+    )
+    a.alloc("s", 19)  # 3 pages
+    got = a.gather("s", "g0")  # must not raise, must cover the 3-page snapshot
+    assert got["k"].shape[1] == 3 * 8
+    a.check_consistency()
+
+
+def test_write_prefill_unknown_stage_raises_before_writing():
+    """Regression (silent `continue` on unknown stages): a misspelled stage
+    key must raise, and no stage may be partially written first."""
+    a = make_arena(num_pages=12, page=8, stages={"g0": 2})
+    a.alloc("s", 8)
+    src = jnp.ones((2, 1, 8, 2, 4), jnp.float32)
+    with pytest.raises(KeyError, match="gX"):
+        a.write_prefill("s", {"g0": {"k": src, "v": src}, "gX": {"k": src, "v": src}}, 8)
+    # validation happens before ANY write: g0 stayed zero
+    assert not np.asarray(a.gather("s", "g0")["k"]).any()
+
+
+# ------------------------------------------------- shared-prefix page cache
+
+
+def _toks(*vals):
+    return np.asarray(vals, np.int64)
+
+
+def test_alloc_prefill_shares_committed_prefix_and_amortizes():
+    a = make_arena(num_pages=16, page=4, stages={"g0": 2})
+    p1, cached = a.alloc_prefill("a", _toks(*range(1, 11)))  # 10 toks: 2 full + tail
+    assert cached == 0 and len(p1) == 3
+    # pre-commit: the index is not live yet (pages not written)
+    _, cached_pre = a.alloc_prefill("pre", _toks(*range(1, 11)))
+    assert cached_pre == 0
+    a.free("pre")
+    a.commit_prefill("a")
+    # same first 8 tokens, different tail: the 2 FULL pages are shared
+    p2, cached2 = a.alloc_prefill("b", _toks(1, 2, 3, 4, 5, 6, 7, 8, 99, 98))
+    a.commit_prefill("b")
+    assert cached2 == 8 and p2[:2] == p1[:2] and p2[2] != p1[2]
+    assert a.shared_pages("b") == 2
+    # shared pages split their bill: 2 pages at refcount 2 + 1 private
+    assert a.amortized_pages("b") == pytest.approx(2 * 0.5 + 1.0)
+    # an exact repeat prompt is a WHOLE-prompt hit (partial tail included)
+    p3, cached3 = a.alloc_prefill("c", _toks(*range(1, 11)))
+    assert cached3 == 10 and p3 == p1
+    a.check_consistency()
+    for s in ("a", "b", "c"):
+        a.free(s)
+    a.check_consistency()
+    assert a.used_pages() == 0
+
+
+def test_prefix_cache_survives_free_and_resurrects():
+    """Freed pages keep their index entries (free-but-cached) until reused:
+    a sequential repeat request still hits, pulling pages back off the free
+    list."""
+    a = make_arena(num_pages=16, page=4, stages={"g0": 2})
+    prompt = _toks(*range(20, 30))
+    pages, _ = a.alloc_prefill("x", prompt)
+    a.commit_prefill("x")
+    a.free("x")
+    assert a.used_pages() == 0
+    p2, cached = a.alloc_prefill("y", prompt)
+    assert cached == 10 and p2 == pages and a.shared_hits == 1
+    a.check_consistency()
+    a.free("y")
+    # allocation pressure reuses cached-free pages and purges their keys
+    big = [a.alloc(("fill", i), 4 * 5) for i in range(3)]  # 3 x 5 pages = all 15
+    assert sum(len(p) for p in big) == 15
+    a.check_consistency()
+    assert a.stats()["prefix_index"] == 0  # every cached page was evicted
+    for i in range(3):
+        a.free(("fill", i))
+    _, cached3 = a.alloc_prefill("z", prompt)
+    assert cached3 == 0  # cache was evicted, no stale hit
+    a.check_consistency()
+
+
+def test_make_private_copies_page_data_and_reroutes_row():
+    a = make_arena(num_pages=16, page=4, stages={"g0": 2})
+    prompt = _toks(7, 7, 7, 7, 8, 8)  # 1 full page + tail
+    a.alloc_prefill("a", prompt)
+    src = jnp.arange(2 * 8 * 2 * 4, dtype=jnp.float32).reshape(2, 1, 8, 2, 4)
+    a.write_prefill("a", {"g0": {"k": src, "v": src}}, 6)
+    a.commit_prefill("a")
+    _, cached = a.alloc_prefill("b", prompt)  # whole hit: shares the tail page
+    assert cached == 6
+    row_before = list(a.block_row("b", 2))
+    assert a.make_private("b", 5) is True  # tail page (pos 5 -> page idx 1)
+    row_after = list(a.block_row("b", 2))
+    assert row_before[0] == row_after[0] and row_before[1] != row_after[1]
+    assert a.make_private("b", 5) is False  # already private: no-op
+    # the copy carried the data: b's gathered view still matches the source
+    np.testing.assert_array_equal(np.asarray(a.gather("b", "g0")["k"]), np.asarray(src[:, 0]))
+    assert a.cow_copies == 1
+    a.check_consistency()
+    a.free("a")
+    a.free("b")
+    a.check_consistency()
+
+
+def test_concurrent_sharing_fuzz_consistent():
+    """Three threads storm the arena with the full op mix — content-aware
+    alloc (shared prompt pool), write_prefill, extend, gather, make_private,
+    free — and the refcount/free-list/index invariants must hold after
+    every round."""
+    a = make_arena(num_pages=32, page=4, stages={"g0": 2, "g1": 2})
+    prompts = [_toks(*range(s, s + n)) for s, n in
+               [(0, 9), (0, 12), (100, 6), (100, 17), (200, 4)]]
+
+    errors: list[BaseException] = []
+
+    def worker(tid: int):
+        rng = random.Random(1000 + tid)
+        live: dict[tuple, int] = {}  # only THIS thread touches its seq ids
+        try:
+            for i in range(40):
+                op = rng.random()
+                if op < 0.35 and len(live) < 4:
+                    sid = (tid, i)
+                    prompt = rng.choice(prompts)
+                    try:
+                        a.alloc_prefill(sid, prompt)
+                    except ArenaFull:
+                        continue
+                    length = len(prompt)
+                    span = a.pages_for(length) * a.page_size
+                    src = jnp.full((2, 1, span, 2, 4), float(tid + 1), jnp.float32)
+                    a.write_prefill(sid, {"g0": {"k": src, "v": src}}, length)
+                    a.commit_prefill(sid)
+                    live[sid] = length
+                elif op < 0.55 and live:
+                    sid = rng.choice(list(live))
+                    new_len = live[sid] + rng.randint(1, 6)
+                    try:
+                        a.extend(sid, new_len)
+                        live[sid] = new_len
+                    except ArenaFull:
+                        pass
+                elif op < 0.7 and live:
+                    sid = rng.choice(list(live))
+                    got = a.gather(sid, rng.choice(["g0", "g1"]))
+                    assert got["k"].ndim == 4
+                elif op < 0.85 and live:
+                    sid = rng.choice(list(live))
+                    try:
+                        a.make_private(sid, live[sid] - 1)
+                    except ArenaFull:
+                        pass
+                elif live:
+                    sid = rng.choice(list(live))
+                    live.pop(sid)
+                    a.free(sid)
+        except BaseException as e:  # noqa: BLE001 — surface in the main thread
+            errors.append(e)
+        finally:
+            for sid in live:
+                a.free(sid)
+
+    for _ in range(3):  # rounds: storm, join, audit
+        threads = [threading.Thread(target=worker, args=(t,)) for t in range(3)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors, errors
+        a.check_consistency()
+    assert a.used_pages() == 0
+    assert a.free_pages() == a.num_pages - 1

@@ -19,8 +19,10 @@ import math
 import threading
 from concurrent.futures import wait
 
+import numpy as np
 import pytest
 
+from repro.core.billing import BillingMeter
 from repro.scheduler import (
     BEST_EFFORT,
     IMMEDIATE,
@@ -31,6 +33,9 @@ from repro.scheduler import (
     SLOClass,
     VirtualClock,
 )
+from repro.serving.continuous import ContinuousBatcher
+from repro.serving.engine import PagedPrefillJob
+from repro.serving.kvpool import KVArena
 
 #: Real-time budget for one whole simulation (CI boxes are slow; the point
 #: is that simulated time is orders of magnitude larger than real time).
@@ -537,3 +542,163 @@ def test_sim_violation_signal_ages_out_of_the_recent_window():
     finally:
         release.set()
         sched.shutdown()
+
+
+# ------------------------------- continuous batcher: chunked prefill sim
+
+
+class _SimPlatform:
+    def __init__(self, clock):
+        self.clock = clock
+        self.meter = BillingMeter(clock=clock)
+
+
+class _SimEngine:
+    """Timing model of the paged ServingEngine for virtual-clock sims.
+
+    Page bookkeeping is the REAL :class:`KVArena`; the XLA compute is
+    replaced by virtual sleeps — ``per_token_s`` per prompt token of
+    prefill, ``step_s`` per whole-batch decode step. Those two constants
+    are exactly the ratio that makes a long joiner prompt dangerous: an
+    80-token prompt costs 40 decode steps' worth of accelerator time, so
+    serializing it in front of the batch stalls every resident stream by
+    400 simulated ms."""
+
+    def __init__(self, clock, *, per_token_s=0.005, step_s=0.010,
+                 num_pages=64, page_size=8, block_width=16):
+        self.platform = _SimPlatform(clock)
+        self.clock = clock
+        self.entry = "sim/embed"
+        self.block_width = block_width
+        self.per_token_s = per_token_s
+        self.step_s = step_s
+        import jax.numpy as jnp
+
+        self.arena = KVArena({"sim": 1}, num_pages=num_pages,
+                             page_size=page_size, kv_heads=1, head_dim=2,
+                             dtype=jnp.float32)
+
+    def _logits(self, batch):
+        out = np.zeros((batch, 16), np.float32)
+        out[:, 7] = 1.0  # deterministic greedy token, never EOS
+        return out
+
+    # ------------- the engine surface the continuous batcher drives
+
+    def begin_prefill_paged(self, seq_id, inputs):
+        tokens = np.asarray(inputs["tokens"], np.int32)[0]
+        self.arena.alloc(seq_id, len(tokens))
+        return PagedPrefillJob(seq_id, tokens, 0)
+
+    def prefill_chunk_paged(self, job, max_tokens):
+        c = max(1, min(int(max_tokens), job.remaining))
+        self.clock.sleep(c * self.per_token_s)
+        job.pos += c
+        return self._logits(1) if job.pos >= job.t_in else None
+
+    def prefill_paged(self, seq_id, inputs):
+        tokens = np.asarray(inputs["tokens"], np.int32)[0]
+        self.arena.alloc(seq_id, len(tokens))
+        self.clock.sleep(len(tokens) * self.per_token_s)
+        return self._logits(1), len(tokens)
+
+    def paged_decode_step(self, tok, cur, bt, *, write_kv=True):
+        self.clock.sleep(self.step_s)
+        return self._logits(int(tok.shape[0]))
+
+
+def _advance_until(clock, dt, pred, max_iters=2000):
+    """Drive simulated time on a fixed grid until ``pred()`` holds: settle
+    (so the loop thread is parked on the clock), then advance one grid
+    step. Every sleep in the sim lands on the 10ms grid, so dt=0.01 hits
+    each deadline exactly."""
+    for _ in range(max_iters):
+        if pred():
+            return
+        settle(clock)
+        clock.advance(dt)
+    raise AssertionError("simulation did not converge")
+
+
+def _run_batcher_sim(serialize_prefill):
+    """One strict resident stream + three long-prompt best-effort joiners
+    admitted mid-stream, under chunked (default) or serialized prefill.
+    Returns (strict result, joiner results, stats)."""
+    clock = VirtualClock()
+    eng = _SimEngine(clock)
+    gold = SLOClass("gold", 100.0)  # 100ms inter-token target
+    b = ContinuousBatcher(eng, capacity=4, serialize_prefill=serialize_prefill,
+                          min_chunk=2, slack_fraction=0.5)
+    try:
+        strict_fut = b.submit({"tokens": np.arange(1, 9, dtype=np.int32)[None, :]},
+                              60, slo=gold)
+        # phase 1: the strict stream reaches steady state (~20 emissions)
+        t_joiners = 0.2
+        _advance_until(clock, 0.01, lambda: clock.now() >= t_joiners - 1e-9)
+        prompt = (np.arange(2, 82, dtype=np.int32) % 13)[None, :]  # 80 tokens
+        joiner_futs = [b.submit({"tokens": prompt}, 8) for _ in range(3)]
+        if not serialize_prefill:
+            # mid-stream co-residency: drive until the first joiner's
+            # chunked prefill finishes and seats it — the strict stream
+            # must still be emitting at that moment
+            _advance_until(clock, 0.01, lambda: b.stats()["active"] >= 2)
+            st = b.stats()
+            assert not strict_fut.done(), "strict stream must still be mid-flight"
+            assert st["prefill_chunks"] > 3, st
+        futs = [strict_fut] + joiner_futs
+        _advance_until(clock, 0.01, lambda: all(f.done() for f in futs))
+        strict = strict_fut.result(timeout=5)
+        joiners = [f.result(timeout=5) for f in joiner_futs]
+        stats = b.stats()
+    finally:
+        b.shutdown()
+    clock.assert_elapsed_real_below(REAL_BUDGET_S)
+    return strict, joiners, stats
+
+
+def test_sim_chunked_prefill_protects_strict_stream_and_joiners():
+    """The tentpole's latency story, end to end on the virtual clock.
+
+    Serialized prefill (the old admit-time path): three 400ms joiner
+    prompts run back-to-back in front of the batch, so the strict
+    resident's worst inter-token gap blows through its 100ms target and
+    already-seated joiners stall behind later arrivals' prompts.
+
+    Chunked prefill: the same trace holds the strict stream's inter-token
+    p95 (and max) under target — each chunk is budgeted from the strict
+    lane's slack — while joiners still seat mid-stream, and the joiners'
+    own emission-to-emission p95 strictly improves."""
+    strict_c, joiners_c, stats_c = _run_batcher_sim(serialize_prefill=False)
+    strict_s, joiners_s, stats_s = _run_batcher_sim(serialize_prefill=True)
+    target_s = 0.100
+
+    # every stream ran to completion in both modes
+    assert strict_c["tokens"].shape == strict_s["tokens"].shape == (1, 60)
+    for j in joiners_c + joiners_s:
+        assert j["tokens"].shape == (1, 8)
+
+    # the serialized baseline really does violate the strict target
+    gaps_strict_s = np.asarray(strict_s["step_s"])
+    assert gaps_strict_s.max() > target_s, (
+        f"baseline not stressful: max strict gap {gaps_strict_s.max():.3f}s"
+    )
+    assert stats_s["prefill_chunks"] == 0
+
+    # chunked: strict inter-token p95 AND worst case inside the target,
+    # with the prompts streamed in as budgeted chunks
+    gaps_strict_c = np.asarray(strict_c["step_s"])
+    assert np.percentile(gaps_strict_c, 95) <= target_s + 1e-6, gaps_strict_c
+    assert gaps_strict_c.max() <= target_s + 1e-6, (
+        f"strict stream stalled {gaps_strict_c.max():.3f}s under chunked prefill"
+    )
+    assert stats_c["prefill_chunks"] >= 30  # 3 x 80-token prompts, <= 8/chunk
+
+    # joiners: emission-to-emission p95 strictly improves — seated joiners
+    # no longer absorb later arrivals' whole prompts as one stall
+    j_gaps_c = np.concatenate([np.asarray(j["step_s"]) for j in joiners_c])
+    j_gaps_s = np.concatenate([np.asarray(j["step_s"]) for j in joiners_s])
+    p95_c = float(np.percentile(j_gaps_c, 95))
+    p95_s = float(np.percentile(j_gaps_s, 95))
+    assert p95_c < p95_s, f"chunked {p95_c:.3f}s !< serialized {p95_s:.3f}s"
+    # and not marginally: the serialized tail contains whole-prompt stalls
+    assert p95_s > 2 * p95_c, (p95_c, p95_s)
