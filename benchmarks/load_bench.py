@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.dispatch import TRACER
 from repro.configs import get_arch, reduced_config
 from repro.core import FusionPolicy, OrchestratedBackend, TinyJaxBackend
 from repro.models.model import build_model
@@ -755,6 +756,13 @@ def run_serve(args, *, smoke: bool = False) -> dict:
         # warmup + calibration must not pollute the measured leases/occupancy
         platform.meter.reset()
         cb.reset_stats()
+        # dispatch-hygiene gate: warmup compiled every program the stream
+        # can touch, so the timed window must compile nothing and must not
+        # sync the host more than once per batched step (+ seat/finish per
+        # request) — a per-token-per-lane sync or a mid-stream recompile
+        # shows up here, not in a reviewer's profile later
+        TRACER.arm()
+        dispatch_t0 = TRACER.snapshot()
         results = []
         t0 = time.perf_counter()
         pend = []
@@ -767,6 +775,21 @@ def run_serve(args, *, smoke: bool = False) -> dict:
         for f in pend:
             results.append(f.result(timeout=600))
         paged_elapsed = time.perf_counter() - t0
+        hygiene = TRACER.delta(dispatch_t0)
+        TRACER.disarm()
+        print(f"[serve] dispatch hygiene: {hygiene.compiles} steady-state compiles, "
+              f"{hygiene.host_syncs} host syncs over {hygiene.decode_steps} decode steps "
+              f"/ {n_requests} requests")
+        assert hygiene.compiles == 0, (
+            f"steady-state serve stream compiled {hygiene.compiles} new program(s) "
+            f"after warmup — a shape bucket is leaking"
+        )
+        sync_budget = hygiene.decode_steps + 2 * n_requests + c
+        assert hygiene.host_syncs <= sync_budget, (
+            f"{hygiene.host_syncs} device->host syncs for {hygiene.decode_steps} "
+            f"decode steps (budget {sync_budget}: one batched token fetch per "
+            f"step + seat/finish per request) — something syncs per token"
+        )
         paged_tokens = sum(r["tokens"].shape[1] for r in results)
         itl = [s for r in results for s in r["step_s"]]
         arena = platform.meter.arena_summary()

@@ -1,0 +1,29 @@
+"""provlint: repo-native static analysis + instrumented-runtime checks.
+
+Four passes (see ``python -m repro.analysis.lint``):
+
+* lock-discipline  — ``GUARDED_FIELDS`` / ``GUARDED_WRITES`` /
+  ``@guarded_by`` annotations checked by an AST domination pass
+* lock-order       — static nested-``with`` acquisition graph +
+  runtime :class:`InstrumentedLock` recorder for the fuzz suites
+* clock-hygiene    — raw ``time.*`` / ``Condition.wait`` banned outside
+  ``scheduler/clock.py``; big sleeps in tier-1 tests banned
+* dispatch-hygiene — armable :data:`TRACER` counting steady-state
+  recompiles and device→host syncs for the smoke benchmarks
+"""
+from repro.analysis.dispatch import TRACER, DispatchSnapshot, DispatchTracer
+from repro.analysis.findings import WAIVER, Finding
+from repro.analysis.guards import guarded_by
+from repro.analysis.lockorder import InstrumentedLock, LockGraph, patched_locks
+
+__all__ = [
+    "TRACER",
+    "DispatchSnapshot",
+    "DispatchTracer",
+    "Finding",
+    "InstrumentedLock",
+    "LockGraph",
+    "WAIVER",
+    "guarded_by",
+    "patched_locks",
+]

@@ -1,0 +1,164 @@
+"""Dispatch-hygiene tracer: steady-state recompiles and host syncs.
+
+Two hazards this repo has already shipped and hand-fixed once each:
+
+* **Steady-state recompiles** — a decode loop whose batch/chunk shapes are
+  not padded to a closed bucket set retraces and recompiles mid-stream
+  (the PR 5 non-pow2 bucket bug). Compiles are observed via
+  ``jax.monitoring``'s ``/jax/core/compile/backend_compile_duration``
+  event, which fires exactly once per backend compile and never on cache
+  hits, so ``delta(snapshot).compiles == 0`` is a precise "no new
+  programs" assertion.
+
+* **Per-token host syncs** — an eager ``int(...)``/``np.asarray(...)`` on
+  a device array inside the token loop serializes every step on a
+  device→host transfer (the PR 5 eager-argmax bug). JAX's transfer guard
+  is a no-op on the CPU backend, so while armed the tracer patches
+  ``numpy.asarray`` and ``jax.device_get`` and counts calls whose
+  argument is a concrete ``jax.Array``. The smoke gate allows one batched
+  fetch per decode step plus O(1) per request (seating/finishing) and
+  fails on anything per-token-per-lane.
+
+The tracer is a process-wide singleton (``TRACER``), disarmed by default
+(zero overhead: arming is what installs the patches). ``load_bench
+--serve --smoke`` arms it after warmup and asserts on the deltas;
+``kernels/ops.py`` reports eager kernel entries informationally (eager
+dispatch is legitimate on the unfused interpreter path).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class DispatchSnapshot:
+    compiles: int
+    host_syncs: int
+    decode_steps: int
+    kernel_calls: int
+
+
+class DispatchTracer:
+    """Armable recompile + host-sync counter. See module docstring."""
+
+    _EVENT = "/jax/core/compile/backend_compile_duration"
+
+    def __init__(self):
+        self._mu = threading.Lock()
+        self._armed = False
+        self._listener_installed = False
+        self._patched = False
+        self.compiles = 0
+        self.host_syncs = 0
+        self.decode_steps = 0
+        self.kernel_calls: dict[str, int] = {}
+
+    @property
+    def armed(self) -> bool:
+        return self._armed
+
+    # -- wiring ------------------------------------------------------------
+
+    def _on_event(self, event: str, duration: float, **kw) -> None:
+        if event == self._EVENT:
+            with self._mu:
+                self.compiles += 1
+
+    def _install_listener(self) -> None:
+        if self._listener_installed:
+            return
+        import jax.monitoring
+        # there is no unregister API; the listener stays and filters by event
+        jax.monitoring.register_event_duration_secs_listener(self._on_event)
+        self._listener_installed = True
+
+    def _is_device_array(self, x) -> bool:
+        import jax
+        return isinstance(x, jax.Array) and not isinstance(x, jax.core.Tracer)
+
+    def _patch_transfers(self) -> None:
+        if self._patched:
+            return
+        import jax
+        import numpy
+
+        orig_asarray = numpy.asarray
+        orig_device_get = jax.device_get
+        tracer = self
+
+        def asarray(a, *args, **kw):
+            if tracer._armed and tracer._is_device_array(a):
+                with tracer._mu:
+                    tracer.host_syncs += 1
+            return orig_asarray(a, *args, **kw)
+
+        def device_get(x):
+            if tracer._armed:
+                with tracer._mu:
+                    tracer.host_syncs += 1
+            return orig_device_get(x)
+
+        numpy.asarray = asarray
+        jax.device_get = device_get
+        self._unpatch = lambda: (
+            setattr(numpy, "asarray", orig_asarray),
+            setattr(jax, "device_get", orig_device_get),
+        )
+        self._patched = True
+
+    # -- public API --------------------------------------------------------
+
+    def arm(self) -> None:
+        self._install_listener()
+        self._patch_transfers()
+        self._armed = True
+
+    def disarm(self) -> None:
+        self._armed = False
+        if self._patched:
+            self._unpatch()
+            self._patched = False
+
+    def note_decode_step(self) -> None:
+        if self._armed:
+            with self._mu:
+                self.decode_steps += 1
+
+    def note_kernel_call(self, name: str, probe=None) -> None:
+        """Informational: an op entry executed eagerly (concrete operand).
+
+        Legitimate on the unfused interpreter path; recorded so smoke
+        reports show the eager/traced split, never asserted on."""
+        if not self._armed:
+            return
+        if probe is not None:
+            try:
+                if not self._is_device_array(probe):
+                    return
+            except Exception:
+                return
+        with self._mu:
+            self.kernel_calls[name] = self.kernel_calls.get(name, 0) + 1
+
+    def snapshot(self) -> DispatchSnapshot:
+        with self._mu:
+            return DispatchSnapshot(
+                compiles=self.compiles,
+                host_syncs=self.host_syncs,
+                decode_steps=self.decode_steps,
+                kernel_calls=sum(self.kernel_calls.values()),
+            )
+
+    def delta(self, since: DispatchSnapshot) -> DispatchSnapshot:
+        now = self.snapshot()
+        return DispatchSnapshot(
+            compiles=now.compiles - since.compiles,
+            host_syncs=now.host_syncs - since.host_syncs,
+            decode_steps=now.decode_steps - since.decode_steps,
+            kernel_calls=now.kernel_calls - since.kernel_calls,
+        )
+
+
+#: Process-wide tracer instance the instrumentation hooks report into.
+TRACER = DispatchTracer()

@@ -1,0 +1,48 @@
+"""Lock-discipline annotations consumed by provlint's static checker.
+
+Two conventions, both zero-cost at runtime:
+
+``GUARDED_FIELDS`` — a plain (un-annotated, so dataclass-safe) class
+attribute mapping attribute name -> the ``self.<lock>`` attribute that must
+be held for ANY access (read or write) from the class's own methods::
+
+    class KVArena:
+        GUARDED_FIELDS = {"_held": "_lock", "_free": "_lock"}
+
+``GUARDED_WRITES`` — same shape, but only *writes* (including subscript
+stores through a local alias, the classic functional-RMW swap) require the
+lock; unlocked reads are allowed. This is for fields where a torn read is
+benign (a GIL-atomic reference read) but a read-modify-write races::
+
+    class KVArena:
+        GUARDED_WRITES = {"data": "_data_lock"}
+
+``@guarded_by("<lock>")`` — marks a method whose CALLER must already hold
+the lock (the ``_locked``-suffix contract made machine-readable). Inside
+the method the lock counts as held; calls to it from a context that does
+not hold the lock are flagged::
+
+    @guarded_by("_lock")
+    def _pop_free_page_locked(self): ...
+
+The decorator only attaches metadata — no wrapper, no per-call overhead on
+hot paths. ``__init__`` / ``__post_init__`` are exempt from checking
+(construction happens before the object is shared).
+
+Condition variables constructed over an existing lock
+(``self._cond = threading.Condition(self._lock)``) are understood by the
+checker: holding either name counts as holding the one underlying lock.
+"""
+from __future__ import annotations
+
+GUARDED_BY_ATTR = "__guarded_by__"
+
+
+def guarded_by(lock_name: str):
+    """Declare that callers of this method must hold ``self.<lock_name>``."""
+
+    def mark(fn):
+        setattr(fn, GUARDED_BY_ATTR, lock_name)
+        return fn
+
+    return mark

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 import ml_dtypes
 import numpy as np
 
+from repro.scheduler.clock import SYSTEM_CLOCK
+
 # numpy can't serialize ml_dtypes types; store them as same-width uint views
 # and record the true dtype in meta.json.
 _VIEW_AS = {
@@ -49,10 +51,12 @@ def _flatten_with_paths(tree):
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, *, retain: int = 3, async_save: bool = False):
+    def __init__(self, directory: str, *, retain: int = 3, async_save: bool = False,
+                 clock=None):
         self.directory = directory
         self.retain = retain
         self.async_save = async_save
+        self.clock = clock if clock is not None else SYSTEM_CLOCK
         os.makedirs(directory, exist_ok=True)
         self._save_thread: threading.Thread | None = None
         self.save_log: list[dict] = []
@@ -89,7 +93,7 @@ class CheckpointManager:
             "keys": sorted(arrays),
             "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
             "shapes": {k: list(v.shape) for k, v in arrays.items()},
-            "wall_time": time.time(),
+            "wall_time": self.clock.now(),
         }
         arrays = {
             k: (v.view(_VIEW_AS[v.dtype]) if v.dtype in _VIEW_AS else v)

@@ -71,6 +71,11 @@ class InvocationRecord:
 
 
 class BillingMeter:
+    GUARDED_FIELDS = {
+        "records": "_lock",
+        "arena_leases": "_lock",
+    }
+
     def __init__(self, clock=None):
         self._lock = threading.Lock()
         self.records: list[InvocationRecord] = []

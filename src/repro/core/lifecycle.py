@@ -75,6 +75,15 @@ class ControlPlane:
     the default deadline after which a queued transition runs trough or not.
     """
 
+    # provlint: _idle_cv is Condition(self._queue_lock) — either name
+    # counts as holding the queue lock.
+    GUARDED_FIELDS = {
+        "events": "_events_lock",
+        "_queue": "_queue_lock",
+        "_executing": "_queue_lock",
+        "_wake_flag": "_wake_cv",
+    }
+
     def __init__(self, platform, registry, *, tick_s: float = 0.02,
                  max_defer_s: float = 1.0, trough_quiet_s: float = 0.01,
                  trough_gap_mult: float = 3.0, drain_timeout_s: float = 0.5,

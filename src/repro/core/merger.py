@@ -87,6 +87,17 @@ def _allclose_tree(a, b, rtol: float, atol: float) -> bool:
 
 
 class Merger:
+    # provlint: merge_log/split_log are append-only observability lists
+    # read after quiesce; the operational state below is lock-guarded.
+    GUARDED_FIELDS = {
+        "_groups": "_lock",
+        "_inflight": "_lock",
+        "_quarantined": "_lock",
+        "_failed_groups": "_lock",
+        "_failed_splits": "_lock",
+        "_threads": "_lock",
+    }
+
     def __init__(self, platform, policy, *, health_rtol: float = 2e-2, health_atol: float = 1e-2, async_build: bool = False):
         self.platform = platform
         self.policy = policy

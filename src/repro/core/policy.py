@@ -94,6 +94,18 @@ class FusionPolicy:
     gates this: blocking must be a meaningful share of observed latency.
     """
 
+    # provlint: un-annotated, so dataclasses ignores it (not a field).
+    # merge_cost_s is RMW'd by feedback_merge_cost while decide reads it —
+    # both must hold _lock (the PR 2 race).
+    GUARDED_FIELDS = {
+        "merge_cost_s": "_lock",
+        "groups": "_lock",
+        "_fused_edges": "_lock",
+        "_edge_backoff": "_lock",
+        "_sat_streak": "_lock",
+        "_slo_streak": "_lock",
+    }
+
     min_observations: int = 3
     amortization_horizon: int = 500
     merge_cost_s: float = 2.0

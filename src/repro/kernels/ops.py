@@ -11,6 +11,7 @@ import os
 
 import jax
 
+from repro.analysis.dispatch import TRACER
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
@@ -36,6 +37,7 @@ def _aligned(*dims_and_blocks: tuple[int, int]) -> bool:
 
 
 def attention(q, k, v, *, causal: bool = True):
+    TRACER.note_kernel_call("attention", q)
     mode = _mode()
     if mode != "ref" and _aligned((q.shape[1], 128), (k.shape[1], 128)):
         return _flash_kernel(q, k, v, causal=causal, interpret=(mode == "interpret"))
@@ -43,6 +45,7 @@ def attention(q, k, v, *, causal: bool = True):
 
 
 def decode_attention(q, k, v, cur_len):
+    TRACER.note_kernel_call("decode_attention", q)
     mode = _mode()
     if mode != "ref" and _aligned((k.shape[1], 512)):
         return _decode_kernel(q, k, v, cur_len, interpret=(mode == "interpret"))
@@ -56,6 +59,7 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, cur_len):
     ref path gathers pages contiguous (one XLA gather, fused into the
     surrounding program) and reuses the dense decode oracle — bit-identical
     to a dense cache of the same gathered width."""
+    TRACER.note_kernel_call("paged_decode_attention", q)
     mode = _mode()
     if mode != "ref" and _aligned((k_pages.shape[1], 128)):
         return _paged_kernel(q, k_pages, v_pages, block_table, cur_len,
@@ -72,6 +76,7 @@ def paged_chunk_attention(q, k_pages, v_pages, block_table, start):
     shapes don't fit the kernel tiling / ref mode is active — the caller
     (``models/attention.py: paged_chunk_attention``) then runs the bit-exact
     gather + q-chunked fallback."""
+    TRACER.note_kernel_call("paged_chunk_attention", q)
     mode = _mode()
     if mode != "ref" and _aligned((k_pages.shape[1], 128), (q.shape[1], 8)):
         return _paged_chunk_kernel(q, k_pages, v_pages, block_table, start,
@@ -80,6 +85,7 @@ def paged_chunk_attention(q, k_pages, v_pages, block_table, start):
 
 
 def ssd(x, bm, cm, dt, a_log, d_skip, *, chunk: int = 256):
+    TRACER.note_kernel_call("ssd", x)
     mode = _mode()
     if mode != "ref" and _aligned((x.shape[1], chunk)):
         return _ssd_kernel(x, bm, cm, dt, a_log, d_skip, chunk=chunk, interpret=(mode == "interpret"))
@@ -88,6 +94,7 @@ def ssd(x, bm, cm, dt, a_log, d_skip, *, chunk: int = 256):
 
 
 def gmm(xe, w):
+    TRACER.note_kernel_call("gmm", xe)
     mode = _mode()
     e, c, d = xe.shape
     f = w.shape[2]

@@ -65,6 +65,10 @@ class ServiceTimeEstimate:
 
     Thread-safe: lanes' dispatcher threads update concurrently."""
 
+    # provlint: the `value` property reads _value unlocked by design — a
+    # GIL-atomic reference read of a float; only writes take the lock.
+    GUARDED_WRITES = {"_value": "_lock"}
+
     def __init__(self, alpha: float = 0.3):
         self.alpha = alpha
         self._lock = threading.Lock()

@@ -61,6 +61,13 @@ class AdmissionQueue:
     receives (name, [args...]) and must return one result per request, in
     order."""
 
+    GUARDED_FIELDS = {
+        "_items": "_cv",
+        "_stopped": "_cv",
+        "_window_open": "_cv",
+        "_preempted": "_cv",
+    }
+
     def __init__(
         self,
         name: str,

@@ -46,6 +46,7 @@ import threading
 from concurrent.futures import Future
 from typing import Callable
 
+from repro.analysis.guards import guarded_by
 from repro.scheduler.adaptive import (
     AdaptiveConfig,
     QueueingWindow,
@@ -86,6 +87,28 @@ class OverloadShedError(RuntimeError):
 
 
 class RequestScheduler:
+    # provlint: _cond is Condition(self._lock), so holding either counts.
+    GUARDED_FIELDS = {
+        "_queues": "_lock",
+        "_lanes_by_base": "_lock",
+        "_queues_by_name": "_lock",
+        "_shed": "_lock",
+        "_strict_fns": "_lock",
+        "_slo_classes": "_lock",
+        "_inflight": "_lock",
+        "_per_name": "_lock",
+        "_per_class": "_lock",
+        "_recent_class_lats": "_lock",
+        "_recent_by_name": "_lock",
+        "_recent_lat_by_name": "_lock",
+        "_batch_sizes": "_lock",
+        "_batches": "_lock",
+        "_signals_cache": "_lock",
+        "_last_strict_submit_t": "_lock",
+        "_closed": "_lock",
+        "_service_by_fn": "_lock",
+    }
+
     def __init__(
         self,
         dispatch_batch: Callable[[str, list[tuple]], list],
@@ -243,6 +266,7 @@ class RequestScheduler:
                         other.preempt_window()
         return req.future
 
+    @guarded_by("_lock")
     def _predicted_rho_locked(self, name: str) -> float:
         """Function-level offered load vs full-batch capacity:
         ``sum(lane arrival rates) x shared service / max_batch``. 0.0 until
@@ -258,6 +282,7 @@ class RequestScheduler:
         )
         return lam * svc / self.max_batch
 
+    @guarded_by("_lock")
     def _make_queue(self, name: str, key: tuple, slo: SLOClass) -> AdmissionQueue:
         controller = None
         if self.adaptive:

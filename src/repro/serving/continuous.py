@@ -112,6 +112,14 @@ class ContinuousBatcher:
     all page allocation and all decode-step store-backs happen on its one
     loop thread (don't interleave ``generate_paged`` with a live batcher)."""
 
+    # provlint: submit-side state shared with the loop thread. Slot state
+    # (_slots/_bt/_cur/_tok/...) is loop-thread-only and needs no lock.
+    GUARDED_FIELDS = {
+        "_lanes": "_cv",
+        "_stopped": "_cv",
+        "shed": "_cv",
+    }
+
     def __init__(self, engine: ServingEngine, *, capacity: int = 8,
                  max_queue: int | None = None,
                  prefill_chunk: int | None = None,

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.dispatch import TRACER
 from repro.configs.base import ModelConfig
 from repro.core.function import FunctionSpec
 from repro.core.platform import ProvusePlatform
@@ -439,6 +440,7 @@ class ServingEngine:
         doubling the very RAM paging exists to save. Merge health checks
         still have canaries from the (dense) prefill invocations; demand is
         noted so the fusion policy sees serve traffic as client load."""
+        TRACER.note_decode_step()
         self.platform.handler.note_demand(self.entry)
         caches = self.paged_caches(block_table)
         if not write_kv:
@@ -473,6 +475,7 @@ class ServingEngine:
         return logits, caches, cur_len
 
     def decode_step(self, tokens, cur_len, caches):
+        TRACER.note_decode_step()
         if self.cfg.family == "audio":
             return self.platform.invoke(self.dec_name, tokens, cur_len, caches)
         inputs = {"tokens": tokens}

@@ -63,6 +63,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.guards import guarded_by
+
 
 class ArenaFull(RuntimeError):
     """No free pages left for an allocation (admission should back off)."""
@@ -79,6 +81,25 @@ class KVArena:
 
     #: physical page 0 is scratch: masked/empty decode slots write here
     RESERVED_PAGE = 0
+
+    # provlint: host-side bookkeeping is guarded by _lock; the device
+    # arrays in `data` tolerate unlocked reads (GIL-atomic reference
+    # loads) but every functional RMW swap must hold _data_lock.
+    GUARDED_FIELDS = {
+        "_free": "_lock",
+        "_held": "_lock",
+        "_lens": "_lock",
+        "_peak_held": "_lock",
+        "_refs": "_lock",
+        "_index": "_lock",
+        "_page_keys": "_lock",
+        "_pending": "_lock",
+        "_shared_upto": "_lock",
+        "shared_hits": "_lock",
+        "shared_pages_served": "_lock",
+        "cow_copies": "_lock",
+    }
+    GUARDED_WRITES = {"data": "_data_lock"}
 
     def __init__(
         self,
@@ -171,11 +192,13 @@ class KVArena:
 
     # ------------------------------------------------------------ allocator
 
+    @guarded_by("_lock")
     def _purge_keys_locked(self, page: int) -> None:
         for key in self._page_keys.pop(page, ()):
             if self._index.get(key) == page:
                 del self._index[key]
 
+    @guarded_by("_lock")
     def _pop_free_page_locked(self) -> int:
         """Pop a free page, preferring pages with no retained index entries
         (reusing an indexed free page evicts its cached prefix)."""
@@ -396,6 +419,7 @@ class KVArena:
         with self._lock:
             return self._block_row_locked(seq_id, width)
 
+    @guarded_by("_lock")
     def _block_row_locked(self, seq_id, width: int) -> np.ndarray:
         pages = self._held.get(seq_id, [])
         if len(pages) > width:

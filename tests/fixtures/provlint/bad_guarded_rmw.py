@@ -1,0 +1,24 @@
+"""Known-bad: the PR 6 ``write_prefill`` shape — a functional RMW swap of a
+write-guarded device array through a local alias, outside its lock."""
+import threading
+
+
+class Arena:
+    GUARDED_FIELDS = {"_held": "_lock"}
+    GUARDED_WRITES = {"data": "_data_lock"}
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._data_lock = threading.Lock()
+        self.data = {}
+        self._held = {}
+
+    def write_prefill(self, stage, kv, ids, rows):
+        with self._lock:
+            held = list(self._held)
+        dst = self.data[stage]
+        dst[kv] = dst[kv].at[:, ids].set(rows)  # line 20: RMW without _data_lock
+        return held
+
+    def gather(self, seq_id):
+        return self._held.get(seq_id)  # line 24: read without _lock

@@ -1,0 +1,20 @@
+"""Known-bad: two methods nest the same pair of locks in opposite orders —
+the classic ABBA deadlock, visible statically."""
+import threading
+
+
+class TwoLocks:
+    def __init__(self):
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+        self.x = 0
+
+    def forward(self):
+        with self._a:
+            with self._b:  # line 14: a -> b
+                self.x += 1
+
+    def backward(self):
+        with self._b:
+            with self._a:  # line 19: b -> a — closes the cycle
+                self.x -= 1

@@ -1,0 +1,12 @@
+"""Known-bad: src-style module calling raw time primitives instead of the
+injectable Clock."""
+import time
+
+
+def poll_until_ready(check):
+    deadline = time.monotonic() + 5.0  # line 7
+    while time.monotonic() < deadline:  # line 8
+        if check():
+            return True
+        time.sleep(0.01)  # line 11
+    return False

@@ -1,0 +1,7 @@
+"""Known-bad: a tier-1 test burning real wall-clock without a slow mark."""
+import time
+
+
+def test_waits_for_worker():
+    time.sleep(0.5)  # line 6: >= 0.25s and not @pytest.mark.slow
+    assert True

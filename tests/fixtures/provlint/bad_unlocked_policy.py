@@ -1,0 +1,18 @@
+"""Known-bad: the PR 2 ``merge_cost_s`` shape — an EWMA read-modify-write of
+a guarded field with the lock dropped."""
+import threading
+
+
+class Policy:
+    GUARDED_FIELDS = {"merge_cost_s": "_lock"}
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.merge_cost_s = 2.0
+
+    def feedback_merge_cost(self, seconds):
+        self.merge_cost_s = 0.5 * self.merge_cost_s + 0.5 * seconds  # line 14
+
+    def decide(self):
+        with self._lock:
+            return self.merge_cost_s  # correctly locked: no finding

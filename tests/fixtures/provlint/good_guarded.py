@@ -1,0 +1,40 @@
+"""Known-good: every guarded access locked, every nesting one order,
+condition-alias and guarded-method contracts exercised. Zero findings."""
+import threading
+
+from repro.analysis.guards import guarded_by
+
+
+class Disciplined:
+    GUARDED_FIELDS = {"items": "_lock", "closed": "_lock"}
+    GUARDED_WRITES = {"snapshot": "_data_lock"}
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._data_lock = threading.Lock()
+        self.items = []
+        self.closed = False
+        self.snapshot = ()
+
+    def put(self, x):
+        with self._cond:  # alias of _lock: counts as holding it
+            self.items.append(x)
+            self._count_locked()
+
+    def publish(self):
+        with self._lock:
+            live = tuple(self.items)
+        peek = self.snapshot  # unlocked READ of a write-guarded field: ok
+        with self._data_lock:
+            self.snapshot = live + tuple(peek[:0])
+
+    def close(self):
+        with self._lock:
+            with self._data_lock:  # consistent _lock -> _data_lock order
+                self.closed = True
+                self.snapshot = ()
+
+    @guarded_by("_lock")
+    def _count_locked(self):
+        return len(self.items)

@@ -1,0 +1,18 @@
+"""Known-good test module: tiny sleeps, slow-marked big sleep, waived sleep.
+Zero findings."""
+import time
+
+import pytest
+
+
+def test_tiny_sleep_is_fine():
+    time.sleep(0.01)
+
+
+@pytest.mark.slow
+def test_marked_slow_may_sleep():
+    time.sleep(1.0)
+
+
+def test_waived_sleep():
+    time.sleep(0.5)  # provlint: ok — scenario needs the real drain

@@ -76,7 +76,7 @@ def test_async_edges_never_fuse(backend_cls):
         x = jnp.ones((4, 64))
         for _ in range(8):
             p.invoke("A", x)
-        time.sleep(0.5)  # let async D invocations drain
+        time.sleep(0.5)  # let async D invocations drain; provlint: ok
         d_inst = p.registry.resolve("D")
         assert d_inst.members.keys() == {"D"}
         edges = p.handler.edges

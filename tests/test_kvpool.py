@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import InstrumentedLock, LockGraph
 from repro.serving.kvpool import ArenaFull, KVArena
 
 
@@ -298,6 +299,13 @@ def test_concurrent_sharing_fuzz_consistent():
     free — and the refcount/free-list/index invariants must hold after
     every round."""
     a = make_arena(num_pages=32, page=4, stages={"g0": 2, "g1": 2})
+    # provlint runtime net: record the observed acquisition order of the
+    # arena's two locks; any nesting inversion across the op mix is an
+    # ABBA cycle and fails the round
+    lock_graph = LockGraph()
+    a._lock = InstrumentedLock(lock_graph, inner=a._lock, name="KVArena._lock")
+    a._data_lock = InstrumentedLock(lock_graph, inner=a._data_lock,
+                                    name="KVArena._data_lock")
     prompts = [_toks(*range(s, s + n)) for s, n in
                [(0, 9), (0, 12), (100, 6), (100, 17), (200, 4)]]
 
@@ -358,5 +366,7 @@ def test_concurrent_sharing_fuzz_consistent():
             t.join()
         assert not errors, errors
         a.check_consistency()
+        lock_graph.assert_acyclic()
+    assert "KVArena._lock" in lock_graph.edges(), "instrumentation never fired"
     assert a.used_pages() == 0
     assert a.free_pages() == a.num_pages - 1

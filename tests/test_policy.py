@@ -136,7 +136,7 @@ def test_concurrent_feedback_and_decide_keep_estimate_consistent():
         t.start()
     import time
 
-    time.sleep(0.3)
+    time.sleep(0.3)  # provlint: ok — contention window is the scenario
     stop.set()
     for t in threads:
         t.join(timeout=5)

@@ -1,0 +1,236 @@
+"""provlint's own tests: fixture snippets pinned to exact diagnostics, the
+revert-a-real-fix acceptance demonstrations, the runtime lock recorder, the
+dispatch tracer, and the exit-0-at-HEAD CLI gate."""
+import subprocess
+import sys
+import threading
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import InstrumentedLock, LockGraph, patched_locks
+from repro.analysis import clocklint, lockcheck, lockorder
+from repro.analysis.dispatch import DispatchTracer
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "fixtures" / "provlint"
+
+
+def _findings(pass_mod, name, checker="check_source"):
+    src = (FIXTURES / name).read_text(encoding="utf-8")
+    return getattr(pass_mod, checker)(src, name)
+
+
+# --------------------------------------------------------------- fixtures
+
+
+def test_bad_guarded_rmw_pins_both_sites():
+    got = {(f.pass_name, f.line) for f in _findings(lockcheck, "bad_guarded_rmw.py")}
+    assert ("lock-discipline", 20) in got  # aliased RMW outside _data_lock
+    assert ("lock-discipline", 24) in got  # read outside _lock
+    assert len(got) == 2
+
+
+def test_bad_unlocked_policy_pins_the_rmw():
+    got = _findings(lockcheck, "bad_unlocked_policy.py")
+    assert {(f.pass_name, f.line) for f in got} == {("lock-discipline", 14)}
+    assert any("merge_cost_s" in f.message for f in got)
+
+
+def test_bad_lock_order_reports_the_cycle():
+    got = _findings(lockorder, "bad_lock_order.py")
+    assert len(got) == 1
+    f = got[0]
+    assert f.pass_name == "lock-order"
+    assert f.line in (14, 19)  # anchored at one participating nesting
+    assert "_a" in f.message and "_b" in f.message
+
+
+def test_bad_sleep_src_pins_every_raw_time_call():
+    got = {(f.pass_name, f.line) for f in _findings(clocklint, "bad_sleep_src.py")}
+    assert got == {("clock-hygiene", 7), ("clock-hygiene", 8), ("clock-hygiene", 11)}
+
+
+def test_bad_sleeping_test_pins_the_sleep():
+    got = _findings(clocklint, "bad_sleeping_test.py", "check_test_source")
+    assert {(f.pass_name, f.line) for f in got} == {("test-sleep", 6)}
+
+
+def test_good_fixtures_are_clean():
+    assert _findings(lockcheck, "good_guarded.py") == []
+    assert _findings(lockorder, "good_guarded.py") == []
+    assert _findings(clocklint, "good_test.py", "check_test_source") == []
+
+
+# ------------------------------------------- revert-a-real-fix acceptance
+
+
+def test_reverting_pr6_write_prefill_fix_is_caught():
+    """Strip ``with self._data_lock:`` from the real ``write_prefill`` and
+    the lock-discipline pass must flag the RMW at its exact site."""
+    path = "src/repro/serving/kvpool.py"
+    src = (REPO / path).read_text(encoding="utf-8")
+    assert not lockcheck.check_source(src, path)  # clean at HEAD
+    import re
+    bad, n = re.subn(
+        r"( +)with self\._data_lock:\n((?:\1    .*\n|\n)+?)(?=\1\S|\Z)",
+        lambda m: "".join(
+            line[4:] if line.strip() else line
+            for line in m.group(2).splitlines(keepends=True)
+        ),
+        src, count=1)
+    assert n == 1 and bad != src
+    findings = lockcheck.check_source(bad, path)
+    assert findings, "de-locking write_prefill must produce findings"
+    assert all(f.pass_name == "lock-discipline" for f in findings)
+    assert any("data" in f.message and "_data_lock" in f.message for f in findings)
+
+
+def test_reverting_pr2_merge_cost_fix_is_caught():
+    """Move the ``merge_cost_s`` EWMA out from under ``_lock`` in the real
+    policy module and the pass reports exactly that line."""
+    path = "src/repro/core/policy.py"
+    src = (REPO / path).read_text(encoding="utf-8")
+    assert not lockcheck.check_source(src, path)  # clean at HEAD
+    locked = ("        with self._lock:\n"
+              "            self.merge_cost_s = 0.5 * self.merge_cost_s + 0.5 * seconds")
+    unlocked = "        self.merge_cost_s = 0.5 * self.merge_cost_s + 0.5 * seconds"
+    assert locked in src
+    bad = src.replace(locked, unlocked)
+    findings = lockcheck.check_source(bad, path)
+    assert findings and all("merge_cost_s" in f.message for f in findings)
+    # both the read and the write of the RMW land on the de-indented line
+    assert {f.line for f in findings} == {bad[: bad.index(unlocked)].count("\n") + 1}
+
+
+def test_reverting_pr6_gather_snapshot_fix_is_caught():
+    """Move ``gather``'s held/lens snapshot out of the lock (the non-atomic
+    snapshot race PR 6 fixed) and the pass flags the unlocked reads."""
+    path = "src/repro/serving/kvpool.py"
+    src = (REPO / path).read_text(encoding="utf-8")
+    marker = ("        with self._lock:\n"
+              "            pages = self._held.get(seq_id, [])")
+    assert marker in src
+    bad = src.replace(
+        marker, "        if True:\n            pages = self._held.get(seq_id, [])")
+    findings = lockcheck.check_source(bad, path)
+    assert any("_held" in f.message for f in findings), findings
+    assert any("_block_row_locked" in f.message for f in findings), findings
+
+
+# ----------------------------------------------------- runtime lock graph
+
+
+def test_instrumented_lock_records_and_detects_cycles():
+    g = LockGraph()
+    a = InstrumentedLock(g, name="A")
+    b = InstrumentedLock(g, name="B")
+    with a:
+        with b:
+            pass
+    g.assert_acyclic()
+    assert g.edges()["A"] == {"B"}
+
+    done = threading.Event()
+
+    def inverted():
+        with b:
+            with a:
+                pass
+        done.set()
+
+    t = threading.Thread(target=inverted)
+    t.start()
+    t.join(5)
+    assert done.is_set()
+    with pytest.raises(AssertionError, match="cycle"):
+        g.assert_acyclic()
+    assert g.find_cycle() is not None
+
+
+def test_instrumented_rlock_reentry_is_not_a_self_edge():
+    g = LockGraph()
+    r = InstrumentedLock(g, name="R", reentrant=True)
+    with r:
+        with r:
+            pass
+    g.assert_acyclic()
+    assert g.edges().get("R", set()) == set()
+
+
+def test_patched_locks_instruments_condition_over_lock():
+    g = LockGraph()
+    with patched_locks(g):
+        lk = threading.Lock()
+        cv = threading.Condition(lk)
+        other = threading.Lock()
+    assert isinstance(lk, InstrumentedLock)
+    with cv:
+        with other:
+            cv.notify_all()  # exercises _is_owned on the duck-typed lock
+    g.assert_acyclic()
+    assert any(g.edges().values()), "no edges recorded through the condition"
+    # patch is scoped: new locks outside are the real thing again
+    assert not isinstance(threading.Lock(), InstrumentedLock)
+
+
+# ------------------------------------------------------- dispatch tracer
+
+
+def test_dispatch_tracer_counts_compiles_and_host_syncs():
+    jax = pytest.importorskip("jax")
+    import numpy as np
+
+    import jax.numpy as jnp
+
+    tracer = DispatchTracer()
+    tracer.arm()
+    try:
+        base = tracer.snapshot()
+
+        @jax.jit
+        def f(x):
+            return x * 2 + 1
+
+        x = jnp.arange(8.0)
+        x2 = x + 1  # compiled here, not inside the steady-state window
+        y = f(x)  # first call: one backend compile
+        d1 = tracer.delta(base)
+        assert d1.compiles >= 1
+        mid = tracer.snapshot()
+        y = f(x2)  # cache hit: zero new compiles
+        np.asarray(y)  # one counted device->host sync
+        np.asarray(np.arange(4))  # numpy->numpy: NOT counted
+        d2 = tracer.delta(mid)
+        assert d2.compiles == 0
+        assert d2.host_syncs == 1
+        tracer.note_decode_step()
+        tracer.note_kernel_call("attention", y)
+        tracer.note_kernel_call("attention", np.arange(3))  # not a jax.Array
+        d3 = tracer.delta(mid)
+        assert d3.decode_steps == 1
+        assert tracer.kernel_calls == {"attention": 1}
+    finally:
+        tracer.disarm()
+    # disarmed: nothing counts
+    after = tracer.snapshot()
+    np.asarray(jnp.arange(3.0))
+    assert tracer.delta(after).host_syncs == 0
+
+
+# ------------------------------------------------------------- CLI gate
+
+
+def test_lint_cli_exits_zero_at_head(tmp_path):
+    report = tmp_path / "report.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", "--root", str(REPO),
+         "--json", str(report)],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    import json
+    data = json.loads(report.read_text())
+    assert data["ok"] is True and data["findings"] == []

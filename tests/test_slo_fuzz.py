@@ -20,6 +20,7 @@ from concurrent.futures import Future, wait
 
 import pytest
 
+from repro.analysis import LockGraph, patched_locks
 from repro.scheduler import (
     BEST_EFFORT,
     IMMEDIATE,
@@ -70,6 +71,14 @@ def test_conservation_random_traces(seed):
         if calls["n"] % 5 == 0:
             raise RuntimeError("injected metrics fault")
 
+    # provlint runtime net: every lock the scheduler stack creates during
+    # this trace (scheduler lock, lane cvs, future conditions) records its
+    # acquisition order; the trace fails if the observed graph has a cycle.
+    # The patch must stay active through the submit loop because lane cvs
+    # are created lazily on first submit per (class, shape) key.
+    lock_graph = LockGraph()
+    lock_patch = patched_locks(lock_graph)
+    lock_patch.__enter__()
     sched = RequestScheduler(
         dispatch,
         max_batch=rng.choice([2, 4, 8]),
@@ -109,7 +118,11 @@ def test_conservation_random_traces(seed):
                 time.sleep(rng.choice([0.0005, 0.002]))
 
         done, not_done = wait([f for _, f in futs], timeout=30)
+        lock_patch.__exit__(None, None, None)
+        lock_patch = None
         assert not not_done, f"{len(not_done)} futures hung (conservation violated)"
+        lock_graph.assert_acyclic()
+        assert lock_graph.edges(), "lock instrumentation never fired"
         assert not violations, violations[:3]
         ok = failed = shed = 0
         for idx, fut in futs:
@@ -140,7 +153,10 @@ def test_conservation_random_traces(seed):
                 "a future resolved more than once"
             )
     finally:
+        if lock_patch is not None:
+            lock_patch.__exit__(None, None, None)
         sched.shutdown()
+        lock_graph.assert_acyclic()  # shutdown's drain is part of the trace
     # post-shutdown: nothing accepted, nothing hung
     with pytest.raises(RuntimeError):
         sched.submit("f", (0, 0, (0,)))

@@ -56,7 +56,7 @@ def test_straggler_detection():
     def slow_step(state, batch):
         calls["n"] += 1
         if calls["n"] == 8:
-            time.sleep(1.5)  # the straggler
+            time.sleep(1.5)  # the straggler; provlint: ok
         return state, {"loss": jnp.float32(1.0)}
 
     cfg = reduced_config(get_arch("llama3.2-1b"))
