@@ -1,1 +1,7 @@
-from repro.checkpointing.manager import CheckpointManager  # noqa: F401
+from repro.checkpointing.manager import (  # noqa: F401
+    CheckpointManager,
+    CheckpointSaveError,
+    SnapshotIntegrityError,
+    SnapshotStore,
+    snapshot_digest,
+)

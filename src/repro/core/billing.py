@@ -48,6 +48,26 @@ class ArenaLease:
 
 
 @dataclasses.dataclass
+class ProvisioningRecord:
+    """One provisioning transition's bill. Restore/resurrect time IS billed
+    (the function is being readied on a customer's invoke path); time spent
+    idle as a snapshot is not billed at all — scale-to-zero's whole point —
+    so parks and platform-initiated merges/splits carry ``billed=False`` and
+    appear in the summary only as counts."""
+
+    kind: str  # "resurrect" | "park" | "merge" | "split"
+    functions: tuple[str, ...]
+    seconds: float
+    resident_bytes: int
+    warm: bool
+    billed: bool = False
+
+    @property
+    def gb_seconds(self) -> float:
+        return self.seconds * self.resident_bytes / 1e9
+
+
+@dataclasses.dataclass
 class InvocationRecord:
     function: str
     instance: str
@@ -74,12 +94,14 @@ class BillingMeter:
     GUARDED_FIELDS = {
         "records": "_lock",
         "arena_leases": "_lock",
+        "provisioning": "_lock",
     }
 
     def __init__(self, clock=None):
         self._lock = threading.Lock()
         self.records: list[InvocationRecord] = []
         self.arena_leases: list[ArenaLease] = []
+        self.provisioning: list[ProvisioningRecord] = []
         from repro.scheduler.metrics import LatencyWindow
 
         # the platform's time source: latency durations arrive already
@@ -97,6 +119,10 @@ class BillingMeter:
         with self._lock:
             self.arena_leases.append(lease)
 
+    def record_provisioning(self, rec: ProvisioningRecord) -> None:
+        with self._lock:
+            self.provisioning.append(rec)
+
     def observe_latency(self, function: str, seconds: float) -> None:
         """One *external* request completed end-to-end (admission/arrival ->
         response ready) after ``seconds``. Serial `invoke` and the scheduler's
@@ -109,6 +135,7 @@ class BillingMeter:
         with self._lock:
             self.records = []
             self.arena_leases = []
+            self.provisioning = []
         self._latency.reset()
 
     def arena_gb_seconds(self) -> float:
@@ -164,6 +191,19 @@ class BillingMeter:
         arena = self.arena_summary()
         if arena["requests"]:
             out["arena"] = arena
+        with self._lock:
+            prov = list(self.provisioning)
+        if prov:
+            # a SEPARATE line item, not folded into total_gb_s: invocation
+            # GB-s is the paper's double-billing comparison and must not
+            # shift when provisioning accounting is enabled
+            out["provisioning"] = {
+                "events": len(prov),
+                "billed_gb_s": sum(p.gb_seconds for p in prov if p.billed),
+                "billed_s": sum(p.seconds for p in prov if p.billed),
+                "warm": sum(1 for p in prov if p.warm),
+                "cold": sum(1 for p in prov if not p.warm),
+            }
         return out
 
 

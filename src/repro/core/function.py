@@ -126,6 +126,12 @@ class FunctionInstance:
     _counter = 0
     _counter_lock = threading.Lock()
 
+    GUARDED_FIELDS = {
+        "cache_hits": "_lock",
+        "cache_misses": "_lock",
+        "compile_wall_s": "_lock",
+    }
+
     def __init__(self, specs: dict[str, FunctionSpec], platform):
         with FunctionInstance._counter_lock:
             FunctionInstance._counter += 1
@@ -143,6 +149,22 @@ class FunctionInstance:
         self._idle_event = threading.Event()
         self._idle_event.set()
         self.created_at = time.perf_counter()
+        # provisioning profile: executable-index hits vs real XLA compiles
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.compile_wall_s = 0.0
+        # Content digest of every member's behavior (TraceContext.call inlines
+        # co-located members, so the compiled program depends on ALL of them)
+        # plus the param-tree structure. None disables executable sharing for
+        # this instance — indexing is an optimization, never a requirement.
+        try:
+            from repro.launch.compile_cache import members_digest
+
+            self._members_digest = members_digest(self.members)
+            self._params_skey = _struct_key(self.params)
+        except Exception:  # pragma: no cover - undigestable spec
+            self._members_digest = None
+            self._params_skey = None
 
     # ----------------------------------------------------------- lifecycle
 
@@ -211,6 +233,20 @@ class FunctionInstance:
 
         return run
 
+    def _executable_key(self, kind: str, entry: str, skey: tuple, bucket: int | None = None):
+        """Process-wide executable-index key, or None when indexing is off."""
+        if self._members_digest is None:
+            return None
+        from repro.launch.compile_cache import environment_key
+
+        return (kind, entry, self._members_digest, self._params_skey, skey,
+                bucket, environment_key())
+
+    def _note_compile(self, *, hit: bool, seconds: float, saved_s: float = 0.0) -> None:
+        note = getattr(self.platform, "note_compile", None)
+        if note is not None:
+            note(hit=hit, seconds=seconds, saved_s=saved_s)
+
     def get_compiled(self, entry: str, args: tuple) -> CompiledEntry | None:
         """Compiled program for this entry, or None when the entry crosses an
         instance boundary synchronously (-> interpreter-glue execution)."""
@@ -222,14 +258,28 @@ class FunctionInstance:
         if got is not None:
             return got
         from repro.core.context import BoundaryCall
+        from repro.launch.compile_cache import EXECUTABLE_INDEX
 
         t0 = time.perf_counter()
+        # Index lookup happens BEFORE tracing: the key doesn't depend on the
+        # trace, and only effect-free programs are ever inserted, so a hit is
+        # always a pure program safe to share across instances/platforms.
+        xkey = self._executable_key("single", entry, key[1])
+        cached = EXECUTABLE_INDEX.lookup(xkey)
+        if cached is not None:
+            entry_obj = dataclasses.replace(cached, compile_s=time.perf_counter() - t0)
+            with self._lock:
+                self._compiled[key] = entry_obj
+                self.cache_hits += 1
+            self._note_compile(hit=True, seconds=entry_obj.compile_s,
+                               saved_s=cached.compile_s)
+            return entry_obj
         run = self._entry_callable(entry)
         params_structs = _structs_of(self.params)
         arg_structs = _structs_of(args)
         try:
-            lowered = jax.jit(run).lower(params_structs, *arg_structs)
-            compiled = lowered.compile()
+            traced = jax.jit(run).trace(params_structs, *arg_structs)
+            compiled = traced.lower().compile()
         except BoundaryCall:
             with self._lock:
                 self._eager_entries.add(key)
@@ -237,6 +287,14 @@ class FunctionInstance:
         entry_obj = _finalize_compiled(compiled, t0)
         with self._lock:
             self._compiled[key] = entry_obj
+            self.cache_misses += 1
+            self.compile_wall_s += entry_obj.compile_s
+        # Effectful programs (ctx.call_async -> io_callback closing over THIS
+        # platform) must stay private to this instance; sharing one would
+        # route another platform's async calls through a dead dispatcher.
+        if not traced.jaxpr.effects:
+            EXECUTABLE_INDEX.insert(xkey, entry_obj)
+        self._note_compile(hit=False, seconds=entry_obj.compile_s)
         return entry_obj
 
     # ----------------------------------------------------------- execute
@@ -275,9 +333,20 @@ class FunctionInstance:
             got = self._compiled.get(key)
         if got is not None:
             return got
+        from repro.launch.compile_cache import EXECUTABLE_INDEX
         from repro.scheduler.batching import split_results, stack_requests
 
         t0 = time.perf_counter()
+        xkey = self._executable_key("batch", entry, key[2], bucket)
+        cached = EXECUTABLE_INDEX.lookup(xkey)
+        if cached is not None:
+            entry_obj = dataclasses.replace(cached, compile_s=time.perf_counter() - t0)
+            with self._lock:
+                self._compiled[key] = entry_obj
+                self.cache_hits += 1
+            self._note_compile(hit=True, seconds=entry_obj.compile_s,
+                               saved_s=cached.compile_s)
+            return entry_obj
         run = self._entry_callable(entry)
 
         def batched_run(params, *requests):
@@ -308,6 +377,12 @@ class FunctionInstance:
         entry_obj = _finalize_compiled(compiled, t0)
         with self._lock:
             self._compiled[key] = entry_obj
+            self.cache_misses += 1
+            self.compile_wall_s += entry_obj.compile_s
+        # Reaching here implies traced.jaxpr.effects was empty (effectful
+        # entries raised BatchingUnsupported above) — safe to share.
+        EXECUTABLE_INDEX.insert(xkey, entry_obj)
+        self._note_compile(hit=False, seconds=entry_obj.compile_s)
         return entry_obj
 
     def execute_batch(self, entry: str, args_list: list[tuple], max_bucket: int | None = None) -> list:
@@ -351,6 +426,18 @@ class FunctionInstance:
         return list(outs[:k])
 
     # ----------------------------------------------------------- metrics
+
+    def provision_profile(self) -> dict:
+        """How this instance's programs came to exist: executable-index hits
+        vs real XLA compiles (and their wall seconds). A fully warm build has
+        ``cache_misses == 0`` — the signal the provisioning stats use to
+        classify a merge/split/resurrect as warm."""
+        with self._lock:
+            return {
+                "cache_hits": self.cache_hits,
+                "cache_misses": self.cache_misses,
+                "compile_wall_s": round(self.compile_wall_s, 4),
+            }
 
     def resident_bytes(self) -> int:
         """Live footprint of this execution unit: the container runtime

@@ -234,6 +234,22 @@ class FunctionHandler:
                 if callee == function and caller not in exclude
             )
 
+    def last_activity(self, function: str) -> float | None:
+        """Most recent timestamp this function saw ANY traffic: direct
+        external demand or an inbound synchronous dispatch. None if it has
+        never been called — the idle-park tick treats never-invoked functions
+        by their deploy time instead."""
+        with self._lock:
+            last: float | None = None
+            recent = self._recent_calls.get(function)
+            if recent:
+                last = recent[-1]
+            for (caller, callee), st in self.edges.items():
+                if callee == function and st.recent_ts:
+                    t = st.recent_ts[-1]
+                    last = t if last is None else max(last, t)
+            return last
+
     def sync_edges(self) -> dict[tuple[str, str], EdgeStats]:
         with self._lock:
             return {k: dataclasses.replace(v) for k, v in self.edges.items() if v.sync_count}

@@ -48,7 +48,7 @@ class EpochEvent:
     """One routing-epoch transition, as recorded in ``platform.stats()``."""
 
     epoch: int
-    kind: str  # "deploy" | "merge" | "split" | "redeploy"
+    kind: str  # "deploy" | "merge" | "split" | "redeploy" | "park" | "resurrect"
     names: tuple[str, ...]
     reason: str = ""
     retired: tuple[str, ...] = ()  # instance_ids drained + retired by this epoch
@@ -169,6 +169,35 @@ class ControlPlane:
             epoch=epoch, kind=kind, names=tuple(sorted(routes)), reason=reason,
             retired=tuple(i.instance_id for i in doomed), freed_bytes=freed,
             t_completed=self.clock.now(), deferred_s=round(deferred_s, 4),
+        )
+        with self._events_lock:
+            self.events.append(event)
+        return event
+
+    def park(self, instance: "FunctionInstance", *, reason: str = "") -> EpochEvent | None:
+        """Scale-to-zero epoch: atomically UNROUTE an instance's functions
+        (they stop resolving — the platform resurrects them from snapshot on
+        the next invoke), then drain + retire it outside the lock.
+
+        Only names still routed to THIS instance are removed — a publish that
+        raced the park (redeploy, merge) keeps its routes. Returns the
+        recorded event, or None if nothing was routed here anymore."""
+        platform = self.platform
+        registry = self.registry
+        with registry.mutex:
+            names = tuple(sorted(
+                m for m in instance.members if registry.get(m) is instance
+            ))
+            if not names:
+                return None
+            registry.unpublish(names)
+            instance.begin_drain()
+            epoch = registry.version
+        freed = platform.retire_instance(instance)
+        event = EpochEvent(
+            epoch=epoch, kind="park", names=names, reason=reason,
+            retired=(instance.instance_id,), freed_bytes=freed,
+            t_completed=self.clock.now(),
         )
         with self._events_lock:
             self.events.append(event)

@@ -40,6 +40,10 @@ class MergeEvent:
     # the billing meter, so tests can account for merge traffic exactly.
     checked_members: tuple[str, ...] = ()
     epoch: int = 0  # routing epoch this merge published (0: never swapped)
+    # True when the merged unit's build was served entirely from the
+    # executable index (zero recompiles) — the restore-not-rebuild signal.
+    # None: unknown (unhealthy merges abort before the profile is read).
+    warm: bool | None = None
 
 
 @dataclasses.dataclass
@@ -54,6 +58,7 @@ class SplitEvent:
     checked_members: tuple[str, ...] = ()
     epoch: int = 0
     build_s: float = 0.0
+    warm: bool | None = None  # every rebuilt unit hit the executable index
 
 
 @dataclasses.dataclass
@@ -297,13 +302,38 @@ class Merger:
 
             build_s = self._clock.now() - t0
             self.policy.feedback_merge_cost(build_s)
+            # Warm iff the canary warm-up above compiled NOTHING — every
+            # entry came out of the executable index. A re-merge of a
+            # previously-seen group should read warm; the first ever merge
+            # of this shape reads cold.
+            profile = merged.provision_profile()
+            warm = profile["cache_misses"] == 0 and profile["cache_hits"] > 0
+            note = getattr(platform, "note_provisioning", None)
+            if note is not None:
+                note("merge", build_s, warm=warm,
+                     functions=tuple(sorted(group)),
+                     resident_bytes=merged.resident_bytes())
             self.merge_log.append(
                 MergeEvent(self._clock.now(), tuple(sorted(group)), freed, build_s, True,
-                           checked_members=tuple(checked), epoch=event.epoch)
+                           checked_members=tuple(checked), epoch=event.epoch, warm=warm)
             )
         finally:
             with self._lock:
                 self._inflight.discard((caller, callee))
+
+    def forget_instance(self, instance: FunctionInstance) -> None:
+        """Drop the committed-group record backing ``instance`` (scale-to-zero
+        park retired it). Members resurrect as SINGLETON units, so the policy's
+        group state must dissolve too — with zero backoff: the park was an
+        idleness decision, not a flap, and the first hot edge after resurrect
+        should be free to re-fuse immediately."""
+        members = frozenset(instance.members)
+        with self._lock:
+            rec = self._groups.get(members)
+            if rec is not None and rec.instance is instance:
+                del self._groups[members]
+        if len(members) >= 2:
+            self.policy.dissolve([frozenset([m]) for m in members], backoff_s=0.0)
 
     # ------------------------------------------------------------ fission
 
@@ -485,10 +515,19 @@ class Merger:
                         baseline_p95_ms={m: v for m, v in (rec.baseline_p95_ms if rec else {}).items() if m in cell},
                         baseline_rates={m: v for m, v in (rec.baseline_rates if rec else {}).items() if m in cell},
                     )
+        build_s = self._clock.now() - t0
+        profiles = [units[cell].provision_profile() for cell in cells]
+        warm = (all(p["cache_misses"] == 0 for p in profiles)
+                and any(p["cache_hits"] > 0 for p in profiles))
+        note = getattr(platform, "note_provisioning", None)
+        if note is not None:
+            note("split", build_s, warm=warm,
+                 functions=tuple(sorted(members)),
+                 resident_bytes=sum(u.resident_bytes() for u in units.values()))
         event = SplitEvent(
             self._clock.now(), tuple(sorted(members)),
             tuple(tuple(sorted(c)) for c in cells), True, reason,
-            tuple(checked), epoch=epoch_event.epoch, build_s=self._clock.now() - t0,
+            tuple(checked), epoch=epoch_event.epoch, build_s=build_s, warm=warm,
         )
         self.split_log.append(event)
         return event

@@ -16,6 +16,7 @@ Provuse mechanism is backend-agnostic, as the paper demonstrates.
 """
 from __future__ import annotations
 
+import dataclasses
 import queue
 import threading
 from concurrent.futures import Future, ThreadPoolExecutor
@@ -37,6 +38,18 @@ from repro.scheduler.clock import SYSTEM_CLOCK
 from repro.scheduler.slo import SLOClass
 
 
+@dataclasses.dataclass
+class _ParkedFunction:
+    """Scale-to-zero residue of one function: a params-free spec stub plus
+    the snapshot address to resurrect from. While parked the function holds
+    NO live weights or programs — and generates no billing records."""
+
+    spec: FunctionSpec        # params=None stub (behavior only)
+    digest: str               # SnapshotStore content address of the params
+    like: Any                 # ShapeDtypeStruct tree for restore()
+    parked_t: float
+
+
 class ProvusePlatform:
     """Base platform: deploy / invoke / observe / fuse / schedule.
 
@@ -47,9 +60,29 @@ class ProvusePlatform:
     * ``invoke_async`` — returns a Future; the request scheduler coalesces
       concurrent compatible requests into micro-batches that run as ONE
       (vmapped) XLA execution on the routed — possibly fused — instance.
+
+    With ``enable_snapshots`` (or ``snapshot_dir=``) the platform gains
+    scale-to-zero: ``scale_to_zero(name)`` snapshots an instance's weights
+    into the content-addressed :class:`SnapshotStore` and unroutes it (a
+    "park" epoch); the next invoke transparently resurrects it — restore
+    from snapshot, health-check on the captured canary, publish — paying an
+    executable-index hit instead of an XLA recompile when the program was
+    seen before. ``idle_park_s > 0`` parks instances automatically from the
+    reconciler tick once every member has been idle that long.
     """
 
     backend_name = "base"
+
+    GUARDED_FIELDS = {
+        "_parked": "_parked_lock",
+        "_resurrecting": "_parked_lock",
+        "_deployed_at": "_parked_lock",
+        "_prov_records": "_prov_lock",
+        "_compile_hits": "_prov_lock",
+        "_compile_misses": "_prov_lock",
+        "_compile_saved_s": "_prov_lock",
+        "_compile_spent_s": "_prov_lock",
+    }
 
     def __init__(self, policy: FusionPolicy | None = None, *, async_build: bool = False,
                  health_rtol: float = 2e-2, health_atol: float = 1e-2,
@@ -58,6 +91,7 @@ class ProvusePlatform:
                  be_shed_depth: int | None = None,
                  fission: bool = False, fission_interval_s: float = 0.25,
                  trough_merges: bool = False, max_defer_s: float = 1.0,
+                 snapshot_dir: str | None = None, idle_park_s: float = 0.0,
                  clock=None):
         # One injectable time source for the whole platform: scheduler
         # windows, handler edge heat, lifecycle deferrals, and merge ages
@@ -107,6 +141,21 @@ class ProvusePlatform:
         self._pending_candidates: list[tuple[str, str]] = []
         self._pending_lock = threading.Lock()
         self._draining = threading.Lock()
+        # --- warm provisioning / scale-to-zero state ---
+        self.snapshots = None  # SnapshotStore once enable_snapshots() runs
+        self._idle_park_s = 0.0
+        self._parked: dict[str, _ParkedFunction] = {}
+        self._resurrecting: dict[str, tuple[threading.Thread, threading.Event]] = {}
+        self._deployed_at: dict[str, float] = {}
+        self._parked_lock = threading.Lock()
+        self._prov_records: list = []
+        self._compile_hits = 0
+        self._compile_misses = 0
+        self._compile_saved_s = 0.0
+        self._compile_spent_s = 0.0
+        self._prov_lock = threading.Lock()
+        if snapshot_dir is not None:
+            self.enable_snapshots(snapshot_dir, idle_park_s=idle_park_s)
 
     # ------------------------------------------------------------- deploy
 
@@ -118,6 +167,8 @@ class ProvusePlatform:
         self.attach_instance(instance)
         instance.mark_ready()
         self.lifecycle.publish({spec.name: instance}, kind="deploy", reason="deploy")
+        with self._parked_lock:
+            self._deployed_at[spec.name] = self.clock.now()
         return instance
 
     def spec_of(self, name: str) -> FunctionSpec:
@@ -126,9 +177,238 @@ class ProvusePlatform:
         except KeyError:
             raise UnknownFunctionError(name) from None
 
+    # ------------------------------------- scale-to-zero / warm provisioning
+
+    def enable_snapshots(self, directory: str, *, idle_park_s: float = 0.0,
+                         retain: int = 0):
+        """Turn on instance snapshots (warm-provisioning level 2) backed by a
+        :class:`SnapshotStore` at ``directory``. ``idle_park_s > 0`` also
+        registers a reconciler tick hook that parks instances whose members
+        have ALL been idle at least that long (scale-to-zero)."""
+        from repro.checkpointing import SnapshotStore
+
+        self.snapshots = SnapshotStore(directory, retain=retain, clock=self.clock)
+        self._idle_park_s = float(idle_park_s)
+        if self._idle_park_s > 0:
+            self.lifecycle.add_tick_hook(self._idle_park_tick)
+        return self.snapshots
+
+    def scale_to_zero(self, name: str) -> tuple[str, ...]:
+        """Park the instance serving ``name``: snapshot every member's
+        weights (content-addressed — identical weights store once), release
+        the live spec params, and unroute via a "park" epoch. The functions
+        stop resolving and stop billing; the next invoke resurrects them.
+        Returns the parked names (empty if nothing was routed here)."""
+        if self.snapshots is None:
+            raise RuntimeError("scale_to_zero requires enable_snapshots(...)")
+        inst = self.registry.get(name)
+        if inst is None:
+            return ()
+        t0 = self.clock.now()
+        members = tuple(sorted(
+            m for m in inst.members if self.registry.get(m) is inst
+        ))
+        if not members:
+            return ()
+        recs: dict[str, _ParkedFunction] = {}
+        live_specs: dict[str, FunctionSpec] = {}
+        for m in members:
+            spec = self.spec_of(m)
+            recs[m] = _ParkedFunction(
+                spec=dataclasses.replace(spec, params=None),
+                digest=self.snapshots.put(spec.params),
+                like=_structs_of(spec.params),
+                parked_t=t0,
+            )
+            live_specs[m] = spec
+        with self._parked_lock:
+            if any(m in self._parked for m in members):
+                # a concurrent park of this instance won (e.g. the idle tick
+                # racing an explicit scale_to_zero) — claiming is atomic with
+                # this check, so exactly one caller installs the park state
+                return ()
+            for m in members:
+                self._parked[m] = recs[m]
+                # drop the live param references: the snapshot is now the
+                # only copy, so the weights' memory actually frees when the
+                # instance retires below
+                self._specs[m] = recs[m].spec
+        event = self.lifecycle.park(inst, reason=f"scale-to-zero {'+'.join(members)}")
+        if event is None:
+            # a publish raced the park (redeploy/merge rerouted the names):
+            # the functions are still live — undo the bookkeeping
+            with self._parked_lock:
+                for m in members:
+                    self._parked.pop(m, None)
+                    self._specs[m] = live_specs[m]
+            return ()
+        # a parked fused group must not leave "committed" policy edges
+        # behind, or the resurrected singletons could never re-merge
+        self.merger.forget_instance(inst)
+        self.note_provisioning("park", self.clock.now() - t0, warm=True,
+                               functions=members)
+        return members
+
+    def _ensure_live(self, name: str) -> None:
+        """Data-path gate: if ``name`` is parked, resurrect it (one thread
+        does the work, the rest wait on its event). No-op for live names —
+        one dict lookup under a short lock."""
+        if self.snapshots is None:
+            return
+        while True:
+            with self._parked_lock:
+                rec = self._parked.get(name)
+                waiter = self._resurrecting.get(name)
+                if waiter is not None and waiter[0] is threading.current_thread():
+                    # re-entrant: the resurrect's own canary health check
+                    # dispatches through the data path
+                    return
+                if rec is None and waiter is None:
+                    return  # live
+                if rec is not None and waiter is None:
+                    ev = threading.Event()
+                    self._resurrecting[name] = (threading.current_thread(), ev)
+                    break  # we own the resurrect
+                ev = waiter[1]
+            ev.wait(60.0)  # owner finished (or failed) -> re-check
+        try:
+            self._resurrect(name)
+        finally:
+            with self._parked_lock:
+                self._resurrecting.pop(name, None)
+            ev.set()
+
+    def _resurrect(self, name: str) -> None:
+        """PROVISIONING fast path: restore(snapshot) -> health-check on the
+        captured canary -> publish. The restored params are digest-verified
+        bit-exact, and the program normally comes from the executable index —
+        a warm resurrect performs zero XLA compiles."""
+        with self._parked_lock:
+            rec = self._parked[name]
+        t0 = self.clock.now()
+        params = self.snapshots.restore(rec.digest, rec.like)
+        spec = dataclasses.replace(rec.spec, params=params)
+        inst = FunctionInstance({name: spec}, self)
+        self.attach_instance(inst)
+        canary = self.handler.canary(name)
+        if canary is not None:
+            inst.execute(name, canary)  # health check before routing
+        inst.mark_ready()
+        self._specs[name] = spec
+        self.lifecycle.publish({name: inst}, kind="resurrect",
+                               reason=f"resurrect {name}")
+        with self._parked_lock:
+            self._parked.pop(name, None)
+            self._deployed_at[name] = self.clock.now()
+        profile = inst.provision_profile()
+        self.note_provisioning(
+            "resurrect", self.clock.now() - t0,
+            warm=profile["cache_misses"] == 0,
+            functions=(name,), resident_bytes=inst.resident_bytes(),
+            billed=True,  # restore time IS billed; parked idle time was not
+        )
+
+    def _idle_park_tick(self) -> None:
+        """Reconciler tick hook: scale-to-zero instances whose members have
+        all been idle >= idle_park_s (never-invoked members age from their
+        deploy time)."""
+        if self.snapshots is None or self._idle_park_s <= 0:
+            return
+        now = self.clock.now()
+        for inst in self.registry.live_instances():
+            members = sorted(inst.members)
+            idle = True
+            for m in members:
+                last = self.handler.last_activity(m)
+                if last is None:
+                    with self._parked_lock:
+                        last = self._deployed_at.get(m, now)
+                if now - last < self._idle_park_s:
+                    idle = False
+                    break
+            if idle:
+                try:
+                    self.scale_to_zero(members[0])
+                except Exception:  # noqa: BLE001 — a failed park must not
+                    pass  # kill the reconciler; the instance stays live
+
+    def note_compile(self, *, hit: bool, seconds: float, saved_s: float = 0.0) -> None:
+        """FunctionInstance callback: one program came into being (index hit
+        or real XLA compile). Feeds platform.stats()['provisioning']."""
+        with self._prov_lock:
+            if hit:
+                self._compile_hits += 1
+                self._compile_saved_s += saved_s
+            else:
+                self._compile_misses += 1
+                self._compile_spent_s += seconds
+
+    def note_provisioning(self, kind: str, seconds: float, *, warm: bool,
+                          functions=(), resident_bytes: int = 0,
+                          billed: bool = False) -> None:
+        """Record one provisioning transition (merge/split/resurrect/park)
+        with its warm-vs-cold classification; billed records also reach the
+        billing meter (restore time is billed, idle snapshot time is not)."""
+        from repro.core.billing import ProvisioningRecord
+
+        rec = ProvisioningRecord(
+            kind=kind, functions=tuple(functions), seconds=float(seconds),
+            resident_bytes=int(resident_bytes), warm=bool(warm), billed=bool(billed),
+        )
+        with self._prov_lock:
+            self._prov_records.append(rec)
+        self.meter.record_provisioning(rec)
+
+    def provisioning_stats(self) -> dict:
+        """Warm/cold provisioning latency aggregates + compile-cache and
+        snapshot-store counters — platform.stats()['provisioning']."""
+        from repro.launch.compile_cache import EXECUTABLE_INDEX
+
+        with self._prov_lock:
+            records = list(self._prov_records)
+            compile_cache = {
+                "hits": self._compile_hits,
+                "misses": self._compile_misses,
+                "saved_s": round(self._compile_saved_s, 4),
+                "spent_s": round(self._compile_spent_s, 4),
+            }
+        builds = [r for r in records if r.kind != "park"]
+        warm = [r for r in builds if r.warm]
+        cold = [r for r in builds if not r.warm]
+        warm_mean = sum(r.seconds for r in warm) / len(warm) if warm else 0.0
+        cold_mean = sum(r.seconds for r in cold) / len(cold) if cold else 0.0
+        counts: dict[str, int] = {}
+        for r in records:
+            counts[r.kind] = counts.get(r.kind, 0) + 1
+        with self._parked_lock:
+            parked = sorted(self._parked)
+        out = {
+            "counts": counts,
+            "warm": len(warm),
+            "cold": len(cold),
+            "warm_mean_s": round(warm_mean, 4),
+            "cold_mean_s": round(cold_mean, 4),
+            "warm_speedup": (
+                round(cold_mean / warm_mean, 2) if warm and cold and warm_mean > 0
+                else None
+            ),
+            "compile_cache": compile_cache,
+            "executable_index": EXECUTABLE_INDEX.stats(),
+            "parked": parked,
+            "events": [
+                {"kind": r.kind, "functions": list(r.functions),
+                 "seconds": round(r.seconds, 4), "warm": r.warm, "billed": r.billed}
+                for r in records[-32:]
+            ],
+        }
+        if self.snapshots is not None:
+            out["snapshots"] = self.snapshots.stats()
+        return out
+
     # ------------------------------------------------------------- shapes
 
     def output_structs(self, name: str, args: tuple):
+        self._ensure_live(name)  # a parked spec is a params-free stub
         key = (name, _struct_key(args))
         with self._shape_lock:
             if key in self._shape_cache:
@@ -214,8 +494,15 @@ class ProvusePlatform:
         """Serial dispatch with swap-race recovery. Also the Merger's canary
         replay path — no latency observation here, so control-plane traffic
         never pollutes the external latency percentiles."""
+        self._ensure_live(name)
         try:
             try:
+                return self._dispatch_sync(name, args)
+            except UnknownFunctionError:
+                # raced a scale-to-zero park: the route vanished between
+                # _ensure_live and resolve — resurrect and retry (a truly
+                # unknown name stays unknown and re-raises)
+                self._ensure_live(name)
                 return self._dispatch_sync(name, args)
             except InvocationError:
                 # A request can race a merge swap: it resolved the old
@@ -258,8 +545,12 @@ class ProvusePlatform:
 
     def _dispatch_batch(self, name: str, args_list: list[tuple]) -> list:
         """Scheduler callback: execute one coalesced batch."""
+        self._ensure_live(name)
         try:
             try:
+                return self._dispatch_batch_impl(name, args_list)
+            except UnknownFunctionError:
+                self._ensure_live(name)  # raced a park — resurrect and retry
                 return self._dispatch_batch_impl(name, args_list)
             except InvocationError:
                 try:  # routing may have swapped mid-flight (see invoke)
@@ -271,6 +562,14 @@ class ProvusePlatform:
             self._drain_candidates()
 
     def _redeploy(self, name: str) -> None:
+        if self.snapshots is not None:
+            with self._parked_lock:
+                parked = name in self._parked
+            if parked:
+                # a parked spec is a params-free stub — resurrect instead of
+                # rebuilding from it
+                self._ensure_live(name)
+                return
         spec = self.spec_of(name)
         fresh = FunctionInstance({name: spec}, self)
         self.attach_instance(fresh)
@@ -293,8 +592,13 @@ class ProvusePlatform:
         """Blocking function-to-function dispatch (runs inside the caller's
         pure_callback — the caller's program is parked until this returns)."""
         self.handler.record_canary(callee, args)
+        self._ensure_live(callee)
         t0 = self.clock.now()
-        out = self._dispatch_sync(callee, args)
+        try:
+            out = self._dispatch_sync(callee, args)
+        except UnknownFunctionError:
+            self._ensure_live(callee)  # raced a park — resurrect and retry
+            out = self._dispatch_sync(callee, args)
         wait = self.clock.now() - t0
         self.handler.attribute_blocked(wait)
         self.handler.observe_edge(caller_fn, callee, sync=True, wait_s=wait)
@@ -323,6 +627,7 @@ class ProvusePlatform:
                     "healthy": e.healthy,
                     "epoch": e.epoch,
                     "reason": e.reason,
+                    "warm": e.warm,
                 }
                 for e in self.merger.merge_log
             ],
@@ -334,10 +639,12 @@ class ProvusePlatform:
                     "epoch": e.epoch,
                     "reason": e.reason,
                     "build_s": round(e.build_s, 4),
+                    "warm": e.warm,
                 }
                 for e in self.merger.split_log
             ],
             "lifecycle": self.lifecycle.stats(),
+            "provisioning": self.provisioning_stats(),
             "billing": self.meter.summary(),
             "latency": self.meter.latency_summary(),
             "scheduler": self.scheduler.stats(),

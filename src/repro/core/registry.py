@@ -58,6 +58,20 @@ class RoutingTable:
     def register(self, name: str, instance: "FunctionInstance") -> None:
         self.publish({name: instance})
 
+    def unpublish(self, names: Iterable[str]) -> dict[str, "FunctionInstance"]:
+        """Atomically remove routes (scale-to-zero park): the names simply
+        stop resolving. Returns the removed mapping; ``version`` bumps once
+        iff something was actually routed."""
+        with self._lock:
+            removed = {}
+            for name in names:
+                inst = self._routes.pop(name, None)
+                if inst is not None:
+                    removed[name] = inst
+            if removed:
+                self.version += 1
+            return removed
+
     def resolve(self, name: str) -> "FunctionInstance":
         with self._lock:
             try:

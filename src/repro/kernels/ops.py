@@ -32,6 +32,14 @@ def _mode() -> str:
     return "ref"
 
 
+def dispatch_mode() -> str:
+    """Public view of the kernel dispatch mode: 'kernel' | 'interpret' |
+    'ref'. Part of every executable-cache key (``launch/compile_cache``):
+    the same entry lowers to a different program per mode, so a mode flip
+    must miss the cache rather than reuse a stale lowering."""
+    return _mode()
+
+
 def _aligned(*dims_and_blocks: tuple[int, int]) -> bool:
     return all(d % b == 0 for d, b in dims_and_blocks)
 

@@ -283,6 +283,31 @@ class ServingEngine:
             FunctionSpec(head_name, head_fn, {"ln_f": self.params["ln_f"], "embed": self.params["embed"]}, self.trust)
         )
 
+    # ------------------------------------------------------- provisioning
+
+    def chain_names(self) -> list[str]:
+        """Every function name this engine deployed, in chain order."""
+        fam = self.cfg.family
+        if fam == "audio":
+            return [self.entry, self.dec_name]
+        if fam == "hybrid":
+            return [self.entry, f"{self.prefix}/core", f"{self.prefix}/head"]
+        return [self.entry, *self.group_names, f"{self.prefix}/head"]
+
+    def scale_to_zero(self) -> tuple[str, ...]:
+        """Park the whole serving chain as snapshots (platform must have
+        snapshots enabled). Idle models stop paying for resident params; the
+        next prefill/decode resurrects the chain from its snapshots. Returns
+        the parked function names."""
+        parked: list[str] = []
+        for name in self.chain_names():
+            if name in parked:
+                continue  # co-parked as a member of an earlier fused group
+            if self.platform.registry.get(name) is None:
+                continue  # already parked (or never routed)
+            parked.extend(self.platform.scale_to_zero(name))
+        return tuple(parked)
+
     # ------------------------------------------------------------ caches
 
     def empty_caches(self, batch: int):

@@ -1,4 +1,5 @@
-"""Checkpoint manager: atomicity, bf16 round-trip, retention, async save."""
+"""Checkpoint manager: atomicity, bf16 round-trip, retention, async save —
+plus the snapshot store backing scale-to-zero provisioning."""
 import os
 
 import jax
@@ -6,7 +7,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpointing import CheckpointManager
+from repro.checkpointing import (
+    CheckpointManager,
+    CheckpointSaveError,
+    SnapshotIntegrityError,
+    SnapshotStore,
+    snapshot_digest,
+)
 
 
 def make_state(seed=0):
@@ -73,3 +80,124 @@ def test_restore_into_structs(tmp_path):
     like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
     restored = m.restore(like, 2)
     assert_tree_equal(state, restored)
+
+
+# --------------------------------------------------------- async save errors
+
+
+def _failing_writer(path, **arrays):
+    raise OSError("disk full (injected)")
+
+
+def test_async_save_failure_surfaces_on_wait(tmp_path):
+    """A worker-thread save failure must not vanish: wait() raises it."""
+    m = CheckpointManager(str(tmp_path), async_save=True, writer=_failing_writer)
+    m.save(1, make_state())
+    with pytest.raises(CheckpointSaveError, match="disk full"):
+        m.wait()
+    # surfaced once: the caller was told, the manager is usable again
+    m.wait()
+
+
+def test_async_save_failure_surfaces_on_latest_step(tmp_path):
+    """A loop that never calls wait() still hears about the dead save the
+    moment it asks which step is current — the failed step must not let an
+    older checkpoint masquerade as latest."""
+    m = CheckpointManager(str(tmp_path), async_save=True, writer=_failing_writer)
+    m.save(5, make_state())
+    m._save_thread.join()  # let the worker die without consuming the error
+    with pytest.raises(CheckpointSaveError):
+        m.latest_step()
+
+
+def test_async_save_failure_then_next_save_succeeds(tmp_path):
+    """Transient failure: the next save() surfaces the old error, and a
+    recovered writer persists normally afterwards."""
+    m = CheckpointManager(str(tmp_path), async_save=True, writer=_failing_writer)
+    state = make_state()
+    m.save(1, state)
+    m._save_thread.join()
+    m._writer = np.savez  # the disk came back
+    with pytest.raises(CheckpointSaveError):
+        m.save(2, state)  # surfaces step 1's failure...
+    m.save(2, state)  # ...and the retry goes through
+    m.wait()
+    assert m.latest_step() == 2
+    assert_tree_equal(state, m.restore(state, 2))
+
+
+def test_sync_save_failure_raises_inline(tmp_path):
+    """Synchronous saves keep raising at the call site, not via wait()."""
+    m = CheckpointManager(str(tmp_path), writer=_failing_writer)
+    with pytest.raises(OSError, match="disk full"):
+        m.save(1, make_state())
+
+
+# ------------------------------------------------------------ snapshot store
+
+
+def test_snapshot_roundtrip_bit_exact_including_bf16(tmp_path):
+    store = SnapshotStore(str(tmp_path))
+    state = make_state()
+    digest = store.put(state)
+    assert store.contains(digest)
+    restored = store.restore(digest, state)
+    assert_tree_equal(state, restored)
+    # content address is a function of the bytes: restored re-hashes to it
+    assert snapshot_digest(jax.tree.map(np.asarray, restored)) == digest
+
+
+def test_snapshot_restore_into_structs(tmp_path):
+    """Resurrect path: the parked spec keeps only ShapeDtypeStructs."""
+    store = SnapshotStore(str(tmp_path))
+    state = make_state()
+    digest = store.put(state)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    assert_tree_equal(state, store.restore(digest, like))
+
+
+def test_snapshot_put_dedups_identical_content(tmp_path):
+    store = SnapshotStore(str(tmp_path))
+    d1 = store.put(make_state(seed=3))
+    d2 = store.put(make_state(seed=3))  # same bytes, fresh tree
+    assert d1 == d2
+    assert store.stats()["puts"] == 1
+    assert store.stats()["dedup_hits"] == 1
+    assert store.stats()["entries"] == 1
+
+
+def test_snapshot_distinct_content_distinct_digests(tmp_path):
+    store = SnapshotStore(str(tmp_path))
+    assert store.put(make_state(seed=0)) != store.put(make_state(seed=1))
+    assert store.stats()["entries"] == 2
+
+
+def test_snapshot_retention_evicts_lru(tmp_path):
+    store = SnapshotStore(str(tmp_path), retain=2)
+    digests = [store.put(make_state(seed=s)) for s in range(4)]
+    # os.utime granularity can tie mtimes on fast filesystems; eviction keeps
+    # exactly `retain` entries either way
+    assert store.stats()["entries"] == 2
+    assert store.stats()["evicted"] == 2
+    assert store.contains(digests[-1])
+
+
+def test_snapshot_corruption_detected(tmp_path):
+    store = SnapshotStore(str(tmp_path))
+    state = make_state()
+    digest = store.put(state)
+    # flip bytes in one stored leaf
+    leaf = os.path.join(store.path_of(digest), "leaf_00000.npy")
+    raw = bytearray(open(leaf, "rb").read())
+    raw[-4] ^= 0xFF
+    open(leaf, "wb").write(bytes(raw))
+    with pytest.raises(SnapshotIntegrityError):
+        store.restore(digest, state)
+    # verify=False is the caller's explicit opt-out
+    store.restore(digest, state, verify=False)
+
+
+def test_snapshot_missing_digest_raises(tmp_path):
+    store = SnapshotStore(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        store.restore("0" * 32, make_state())
