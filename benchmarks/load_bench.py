@@ -687,6 +687,232 @@ def run_coldstart_smoke(args) -> int:
             return 1
 
 
+def run_replicas(args, *, smoke: bool = False) -> dict:
+    """Replicated-data-plane gate: rho-driven autoscaling must recover the
+    throughput a single hot instance caps, on hot-skewed load at fixed
+    concurrency.
+
+    The hot function models the I/O-bound FaaS handler replication exists
+    for: eager local compute, a fixed host-side wait (the downstream RPC
+    most real handlers block on), then a boundary ``ctx.call`` to the
+    downstream function — so the entry runs on the platform's eager glue
+    path, per request, on its pod's own thread. The wait releases the GIL,
+    so replica pods overlap their waits — the speedup is a property of the
+    data plane, not of how many cores the CI box happens to have — while
+    the single-instance baseline serializes every request through one
+    pod's FIFO. (A compiled-program sleep via ``pure_callback`` would NOT
+    show this: XLA host callbacks share one runtime thread on small boxes,
+    serializing the waits platform-wide.)
+
+    Run A (baseline): one instance, no autoscaler. Run B: the same offered
+    load with ``autoscale_config`` — the scheduler's predicted rho crosses
+    the threshold, the autoscaler spins replicas out through the warm
+    provisioning path, and least-outstanding spread fans the lanes across
+    the set. Asserted:
+
+    * autoscaled throughput >= 1.5x the single-instance baseline;
+    * the strict class meets the SAME fixed p95 target in BOTH runs
+      (replication must not cost conformance);
+    * every scale-out provisioning record is warm, and the dispatch tracer
+      (armed from the end of run B's warmup) sees ZERO compiles — replica
+      spin-up restores from the executable index, never rebuilds;
+    * spread picks land on >= 2 replicas (the set actually shares load).
+    """
+    from repro.core import FunctionSpec
+    from repro.scheduler.slo import SLOClass
+
+    from repro.scheduler.adaptive import AdaptiveConfig
+
+    duration = 2.0 if smoke else max(4.0, args.duration)
+    ramp = 1.5  # run B: unmeasured window for the autoscaler to act in
+    io_wait_s = 0.005  # the simulated downstream RPC — host-independent
+    max_batch = 4
+    strict = SLOClass("gold", 250.0)
+    strict_rate = 10.0
+
+    w = jnp.asarray(np.random.RandomState(0).randn(64, 64).astype(np.float32) * 0.05)
+
+    def fn_hot(ctx, params, x):
+        y = jnp.tanh(x @ params)      # eager local compute
+        time.sleep(io_wait_s)         # the downstream RPC's network wait
+        return ctx.call("downstream", y)  # boundary: keeps the entry eager
+
+    def fn_downstream(ctx, params, x):
+        return x + 1.0
+
+    # hot-skewed load: 8 shape-distinct closed-loop BE clients (one lane
+    # each — replication is under test here, not coalescing) + a strict
+    # trickle on its own shape, all on ONE function
+    n_clients = 8
+    lane_xs = [jnp.ones((4 + lane, 64), jnp.float32) for lane in range(n_clients)]
+    x_strict = jnp.ones((3, 64), jnp.float32)
+
+    def build(autoscale: bool):
+        platform = BACKENDS["orchestrated"](
+            FusionPolicy(enabled=False), max_batch=max_batch, max_delay_ms=2.0,
+            adaptive=True,  # predicted_rho needs the adaptive estimators
+            # single-client lanes never fill a batch: an uncapped window
+            # would grow toward occupancy and dominate every round trip
+            adaptive_config=AdaptiveConfig(max_delay_s=0.002),
+            be_shed_depth=10**6,  # measure conservation, not shedding
+            autoscale=autoscale,
+            autoscale_config=dict(
+                rho_high=0.35, rho_low=0.05, sustain=2,
+                max_replicas=3, cooldown_s=0.25, eval_interval_s=0.05,
+            ) if autoscale else None,
+        )
+        platform.deploy(FunctionSpec("downstream", fn_downstream, None))
+        platform.deploy(FunctionSpec("hot", fn_hot, w))
+        # compile (and index) every program the run can touch — one
+        # downstream program per lane shape; the hot entry itself is
+        # boundary glue (nothing to compile). A mid-run compile after this
+        # would trip the spin-up tracer gate.
+        for x in (*lane_xs, x_strict):
+            platform.invoke("hot", x)
+        return platform
+
+    def drive(platform, span_s: float) -> dict:
+        """Closed-loop BE clients + open-loop strict trickle for span_s."""
+        strict_lats: list[float] = []
+        lock = threading.Lock()
+        counts = [0] * n_clients
+        t_end = time.perf_counter() + span_s
+
+        def be_client(cid: int):
+            x = lane_xs[cid % len(lane_xs)]
+            while time.perf_counter() < t_end:
+                platform.invoke_async("hot", x).result(timeout=120)
+                counts[cid] += 1
+
+        def strict_client():
+            futs = []
+            while time.perf_counter() < t_end:
+                t_s = time.perf_counter()
+                fut = platform.invoke_async("hot", x_strict, slo=strict)
+
+                def cb(_fut, t_submit=t_s):
+                    dt = time.perf_counter() - t_submit
+                    with lock:
+                        strict_lats.append(dt)
+                fut.add_done_callback(cb)
+                futs.append(fut)
+                time.sleep(1.0 / strict_rate)
+            for f in futs:
+                f.result(timeout=120)
+
+        threads = [threading.Thread(target=be_client, args=(i,), daemon=True)
+                   for i in range(n_clients)]
+        threads.append(threading.Thread(target=strict_client, daemon=True))
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        elapsed = time.perf_counter() - t0
+        with lock:
+            lats = list(strict_lats)
+        return {
+            "requests": sum(counts),
+            "elapsed_s": elapsed,
+            "throughput_rps": sum(counts) / elapsed,
+            "strict_p95_ms": percentiles_ms(lats)["p95_ms"] if lats else 0.0,
+            "strict_requests": len(lats),
+        }
+
+    # --- run A: single instance, no autoscaler -------------------------
+    platform = build(autoscale=False)
+    try:
+        base = drive(platform, duration)
+        assert platform.registry.replica_count("hot") == 1
+    finally:
+        platform.shutdown()
+
+    # --- run B: same load, rho-driven autoscaling ----------------------
+    platform = build(autoscale=True)
+    armed = False
+    try:
+        tr0 = TRACER.snapshot()
+        TRACER.arm()  # spin-ups from here on must be restore-not-rebuild
+        armed = True
+        drive(platform, ramp)  # unmeasured: the autoscaler reacts in here
+        n_replicas = platform.registry.replica_count("hot")
+        assert n_replicas >= 2, (
+            f"autoscaler never scaled out under saturation (replicas={n_replicas})"
+        )
+        auto = drive(platform, duration)
+        spinups = TRACER.delta(tr0)
+        TRACER.disarm()
+        armed = False
+
+        replicas = platform.stats()["replicas"]
+        info = replicas["functions"]["hot"]
+        prov = platform.provisioning_stats()
+        scale_outs = [e for e in prov["events"] if e["kind"] == "scale-out"]
+    finally:
+        if armed:
+            TRACER.disarm()
+        platform.shutdown()
+
+    ratio = auto["throughput_rps"] / max(base["throughput_rps"], 1e-9)
+    out = {
+        "mode": "replicas",
+        "baseline_rps": round(base["throughput_rps"], 1),
+        "autoscaled_rps": round(auto["throughput_rps"], 1),
+        "speedup": round(ratio, 2),
+        "replicas": len(info["replicas"]),
+        "picks": info["picks"],
+        "spread": replicas["spread"],
+        "spinup_estimate_s": replicas["spinup_estimate_s"],
+        "scale_outs": len(scale_outs),
+        "spinup_compiles": spinups.compiles,
+        "strict_target_ms": strict.target_p95_ms,
+        "baseline_strict_p95_ms": round(base["strict_p95_ms"], 1),
+        "autoscaled_strict_p95_ms": round(auto["strict_p95_ms"], 1),
+    }
+    print(f"[replicas] single instance: {base['throughput_rps']:8.1f} req/s   "
+          f"strict p95 {base['strict_p95_ms']:6.1f} ms   ({base['requests']} reqs)")
+    print(f"[replicas] autoscaled x{out['replicas']}: {auto['throughput_rps']:8.1f} req/s   "
+          f"strict p95 {auto['strict_p95_ms']:6.1f} ms   ({auto['requests']} reqs)")
+    print(f"[replicas] speedup {ratio:.2f}x   {out['scale_outs']} warm scale-outs "
+          f"({spinups.compiles} compiles)   picks {out['picks']}")
+    assert scale_outs and all(e["warm"] for e in scale_outs), (
+        f"replica spin-up must be warm (restore-not-rebuild): {scale_outs}"
+    )
+    assert spinups.compiles == 0, (
+        f"replica spin-ups recompiled {spinups.compiles} programs — the "
+        f"executable index is not covering the replicated route"
+    )
+    busy = [iid for iid, n in info["picks"].items() if n > 0]
+    assert len(busy) >= 2, f"spread never fanned out: picks {info['picks']}"
+    for label, res in (("baseline", base), ("autoscaled", auto)):
+        assert res["strict_p95_ms"] <= strict.target_p95_ms, (
+            f"{label} strict p95 {res['strict_p95_ms']:.1f}ms > "
+            f"{strict.target_p95_ms:.1f}ms target"
+        )
+    assert ratio >= 1.5, (
+        f"autoscaled replica set must deliver >=1.5x the single-instance "
+        f"baseline (got {ratio:.2f}x)"
+    )
+    return out
+
+
+def run_replicas_smoke(args) -> int:
+    """CI gate for the replicated data plane; one retry (same policy as the
+    other smokes — timing ratios can flake on shared boxes, the warm/compile
+    counter assertions cannot, and a real regression fails both attempts)."""
+    try:
+        run_replicas(args, smoke=True)
+        return 0
+    except AssertionError:
+        print("[replicas-smoke] attempt 1 flaked; retrying once")
+        try:
+            run_replicas(args, smoke=True)
+            return 0
+        except AssertionError as exc:
+            print(f"[replicas-smoke] FAIL: {exc}")
+            return 1
+
+
 def run_slo(args, *, smoke: bool = False) -> dict:
     """Multi-level SLO demonstration: three classes under mixed open-loop
     load on one calibrated function, on the tinyjax backend with adaptive
@@ -1280,6 +1506,10 @@ def main():
     ap.add_argument("--serve", action="store_true",
                     help="paged continuous-batching serve demo vs the per-client-pytree "
                          "baseline (with --smoke: tiny CI gate)")
+    ap.add_argument("--replicas", action="store_true",
+                    help="replicated-data-plane demo: rho-driven autoscaling vs the "
+                         "single-instance baseline on hot-skewed load "
+                         "(with --smoke: tiny CI gate)")
     ap.add_argument("--coldstart", action="store_true",
                     help="warm-provisioning demo: merge/split churn from the executable "
                          "index + scale-to-zero resurrect vs cold build "
@@ -1300,6 +1530,13 @@ def main():
         if args.smoke:
             sys.exit(run_coldstart_smoke(args))
         out = run_coldstart(args)
+        if args.json:
+            print(json.dumps(out, indent=2))
+        return
+    if args.replicas:
+        if args.smoke:
+            sys.exit(run_replicas_smoke(args))
+        out = run_replicas(args)
         if args.json:
             print(json.dumps(out, indent=2))
         return

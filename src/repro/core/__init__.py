@@ -1,4 +1,5 @@
 """Provuse core: platform-side function fusion (the paper's contribution)."""
+from repro.core.autoscaler import Autoscaler  # noqa: F401
 from repro.core.billing import BillingMeter  # noqa: F401
 from repro.core.errors import (  # noqa: F401
     DeploymentError,
@@ -13,6 +14,12 @@ from repro.core.lifecycle import ControlPlane, EpochEvent  # noqa: F401
 from repro.core.merger import GroupRecord, MergeEvent, Merger, SplitEvent  # noqa: F401
 from repro.core.platform import OrchestratedBackend, ProvusePlatform, TinyJaxBackend  # noqa: F401
 from repro.core.policy import FusionDecision, FusionPolicy, SplitDecision  # noqa: F401
+from repro.core.registry import (  # noqa: F401
+    LeastOutstandingSpread,
+    RoundRobinSpread,
+    RoutingTable,
+    SpreadPolicy,
+)
 from repro.scheduler import RequestScheduler  # noqa: F401
 from repro.scheduler.clock import SYSTEM_CLOCK, SystemClock, VirtualClock  # noqa: F401
 from repro.scheduler.slo import BEST_EFFORT, IMMEDIATE, SLOClass  # noqa: F401

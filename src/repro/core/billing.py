@@ -175,6 +175,21 @@ class BillingMeter:
         """p50/p95/p99 of external request latency + sustained throughput."""
         return self._latency.snapshot()
 
+    def by_instance(self) -> dict[str, dict]:
+        """Billing split by the execution unit that actually served each
+        request — the per-replica view behind ``platform.stats()['replicas']``.
+        Each client request appears in exactly one instance's bucket (the
+        replica the spread routed it to), so bucket call counts sum to the
+        total client request count no matter how many replicas share a name;
+        micro-batched requests already split their shared GB-s by batch."""
+        with self._lock:
+            out: dict[str, dict] = {}
+            for r in self.records:
+                d = out.setdefault(r.instance, {"calls": 0, "gb_s": 0.0})
+                d["calls"] += 1
+                d["gb_s"] += r.gb_seconds
+            return out
+
     def summary(self) -> dict:
         with self._lock:
             by_fn: dict[str, dict] = {}

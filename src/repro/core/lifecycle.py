@@ -48,7 +48,9 @@ class EpochEvent:
     """One routing-epoch transition, as recorded in ``platform.stats()``."""
 
     epoch: int
-    kind: str  # "deploy" | "merge" | "split" | "redeploy" | "park" | "resurrect"
+    # "deploy" | "merge" | "split" | "redeploy" | "park" | "resurrect"
+    # | "scale-out" | "scale-in"
+    kind: str
     names: tuple[str, ...]
     reason: str = ""
     retired: tuple[str, ...] = ()  # instance_ids drained + retired by this epoch
@@ -144,12 +146,18 @@ class ControlPlane:
                     if registry.get(name) is not inst:
                         return None
             displaced = registry.publish(routes)
-            for inst in {id(i): i for i in routes.values()}.values():
+            fresh: dict[int, "FunctionInstance"] = {}
+            for value in routes.values():
+                for inst in (value if isinstance(value, (tuple, list)) else (value,)):
+                    fresh[id(inst)] = inst
+            for inst in fresh.values():
                 inst.mark_serving()
             still_routed = {id(i) for i in registry.live_instances()}
             doomed = [
                 inst
-                for inst in {id(v): v for v in displaced.values()}.values()
+                for inst in {
+                    id(v): v for tup in displaced.values() for v in tup
+                }.values()
                 if id(inst) not in still_routed
             ]
             for inst in doomed:
@@ -196,6 +204,62 @@ class ControlPlane:
         freed = platform.retire_instance(instance)
         event = EpochEvent(
             epoch=epoch, kind="park", names=names, reason=reason,
+            retired=(instance.instance_id,), freed_bytes=freed,
+            t_completed=self.clock.now(),
+        )
+        with self._events_lock:
+            self.events.append(event)
+        return event
+
+    def scale_out(self, instance: "FunctionInstance", names, *,
+                  reason: str = "") -> EpochEvent | None:
+        """Scale-out epoch: atomically APPEND ``instance`` as a replica of
+        every still-routed name in ``names`` and mark it SERVING. Names whose
+        route vanished (a racing park or merge won) or that already hold this
+        replica are skipped; returns None when nothing changed so the caller
+        can retire the unused unit instead of leaking it."""
+        registry = self.registry
+        with registry.mutex:
+            added = registry.add_replicas(names, instance)
+            if not added:
+                return None
+            instance.mark_serving()
+            epoch = registry.version
+        event = EpochEvent(
+            epoch=epoch, kind="scale-out", names=added, reason=reason,
+            t_completed=self.clock.now(),
+        )
+        with self._events_lock:
+            self.events.append(event)
+        return event
+
+    def scale_in(self, instance: "FunctionInstance", *,
+                 reason: str = "") -> EpochEvent | None:
+        """Scale-in epoch: atomically REMOVE ``instance`` from every replica
+        set that holds it and mark it DRAINING in the same critical section —
+        the displacement invariant, so a concurrent resolve can never pick a
+        draining replica. Refuses (returns None) if the instance holds no
+        route, or if it is ANY name's only replica — scale-in shrinks sets,
+        it never unroutes a function (that is :meth:`park`). Drain + retire
+        happen outside the lock, so in-flight requests finish before the
+        unit's memory is freed."""
+        platform = self.platform
+        registry = self.registry
+        with registry.mutex:
+            holding = tuple(sorted(
+                m for m in instance.members
+                if any(r is instance for r in registry.replicas(m))
+            ))
+            if not holding:
+                return None
+            if any(len(registry.replicas(m)) <= 1 for m in holding):
+                return None
+            removed = registry.remove_replicas(holding, instance)
+            instance.begin_drain()
+            epoch = registry.version
+        freed = platform.retire_instance(instance)
+        event = EpochEvent(
+            epoch=epoch, kind="scale-in", names=removed, reason=reason,
             retired=(instance.instance_id,), freed_bytes=freed,
             t_completed=self.clock.now(),
         )

@@ -158,9 +158,30 @@ class Merger:
         # Passed lazily — decide only snapshots it past its cheap early-outs.
         signals_fn = getattr(self.platform, "scheduler_signals", None)
         signals = (lambda: signals_fn((caller, callee))) if signals_fn is not None else None
-        decision = self.policy.decide(
-            caller, callee, stats, spec_a.trust_domain, spec_b.trust_domain, signals=signals
+        # Fuse-vs-replicate inputs: the platform's measured warm spin-up
+        # estimate and the callee's current replica count. Both None/1 on
+        # platforms without the replicated data plane — the replicate arm
+        # then never fires and decide() behaves exactly as before.
+        spinup_fn = getattr(self.platform, "replica_spinup_estimate", None)
+        replica_spinup_s = spinup_fn(callee) if spinup_fn is not None else None
+        registry = getattr(self.platform, "registry", None)
+        callee_replicas = (
+            registry.replica_count(callee)
+            if registry is not None and hasattr(registry, "replica_count")
+            else 1
         )
+        decision = self.policy.decide(
+            caller, callee, stats, spec_a.trust_domain, spec_b.trust_domain,
+            signals=signals, replica_spinup_s=replica_spinup_s,
+            callee_replicas=callee_replicas,
+        )
+        if decision.replicate:
+            # The cost model chose capacity over consolidation: hint the
+            # autoscaler to clone the saturated callee instead of merging.
+            request = getattr(self.platform, "request_replica", None)
+            if request is not None:
+                request(callee, reason=decision.reason)
+            return
         if not decision.fuse:
             return
         with self._lock:
@@ -373,6 +394,10 @@ class Merger:
             current_p95 = max(
                 (scheduler.recent_p95_ms(m) for m in rec.members), default=0.0
             ) if scheduler is not None else 0.0
+            count_fn = getattr(platform.registry, "replica_count", None)
+            replica_count = (
+                max(count_fn(m) for m in rec.members) if count_fn is not None else 1
+            )
             decision = self.policy.decide_split(
                 rec.members,
                 signals=signals,
@@ -381,6 +406,7 @@ class Merger:
                 baseline_p95_ms=max(rec.baseline_p95_ms.values(), default=0.0),
                 current_p95_ms=current_p95,
                 age_s=self._clock.now() - rec.committed_t,
+                replica_count=replica_count,
             )
             if decision.split:
                 event = self.split(rec.members, decision.partition, reason=decision.reason)

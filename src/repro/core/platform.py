@@ -82,6 +82,7 @@ class ProvusePlatform:
         "_compile_misses": "_prov_lock",
         "_compile_saved_s": "_prov_lock",
         "_compile_spent_s": "_prov_lock",
+        "_spinup_ewma_s": "_prov_lock",
     }
 
     def __init__(self, policy: FusionPolicy | None = None, *, async_build: bool = False,
@@ -92,12 +93,16 @@ class ProvusePlatform:
                  fission: bool = False, fission_interval_s: float = 0.25,
                  trough_merges: bool = False, max_defer_s: float = 1.0,
                  snapshot_dir: str | None = None, idle_park_s: float = 0.0,
+                 spread=None, autoscale: bool = False,
+                 autoscale_config: dict | None = None,
                  clock=None):
         # One injectable time source for the whole platform: scheduler
         # windows, handler edge heat, lifecycle deferrals, and merge ages
         # all move on the same axis (virtual in simulation tests).
         self.clock = clock or SYSTEM_CLOCK
-        self.registry = RoutingTable()
+        # spread: replica selection policy for multi-replica routes —
+        # "least-outstanding" (default) or "round-robin" (see registry).
+        self.registry = RoutingTable(spread=spread)
         self.meter = BillingMeter(clock=self.clock)
         self.policy = policy or FusionPolicy()
         self.handler = FunctionHandler(self.meter, on_fusion_candidate=self._on_candidate,
@@ -153,9 +158,16 @@ class ProvusePlatform:
         self._compile_misses = 0
         self._compile_saved_s = 0.0
         self._compile_spent_s = 0.0
+        # EWMA of measured replica spin-up wall time (None until the first
+        # spin-up) — the fusion policy's replicate-arm cost input.
+        self._spinup_ewma_s: float | None = None
         self._prov_lock = threading.Lock()
         if snapshot_dir is not None:
             self.enable_snapshots(snapshot_dir, idle_park_s=idle_park_s)
+        # --- replicated data plane ---
+        self.autoscaler = None
+        if autoscale:
+            self.enable_autoscaler(**(autoscale_config or {}))
 
     # ------------------------------------------------------------- deploy
 
@@ -405,6 +417,110 @@ class ProvusePlatform:
             out["snapshots"] = self.snapshots.stats()
         return out
 
+    # ------------------------------------- replicated data plane / autoscaling
+
+    def enable_autoscaler(self, **knobs):
+        """Turn on rho-driven replica autoscaling: registers an
+        :class:`repro.core.autoscaler.Autoscaler` as a reconciler tick hook.
+        ``knobs`` forward to its constructor (rho_high, rho_low, depth_high,
+        sustain, max_replicas, min_replicas, cooldown_s, eval_interval_s)."""
+        from repro.core.autoscaler import Autoscaler
+
+        self.autoscaler = Autoscaler(self, **knobs)
+        self.lifecycle.add_tick_hook(self.autoscaler.tick)
+        return self.autoscaler
+
+    def request_replica(self, name: str, reason: str = "") -> None:
+        """Scale-out hint (the fusion policy's replicate arm routes here).
+        No-op without an autoscaler — the hint is advisory, and the
+        autoscaler owns the max-replica/cooldown guards."""
+        scaler = self.autoscaler
+        if scaler is not None:
+            scaler.request_scale_out(name, reason=reason)
+
+    def replica_spinup_estimate(self, name: str | None = None) -> float | None:
+        """EWMA of measured warm replica spin-up seconds, or None before any
+        replica has ever spun up (the policy's replicate arm then stays
+        cold — it never bets on an unmeasured cost)."""
+        with self._prov_lock:
+            return self._spinup_ewma_s
+
+    def _spawn_replica(self, name: str) -> FunctionInstance | None:
+        """Build one replica of the unit currently routed for ``name`` and
+        publish it through a scale-out epoch. With the executable index warm
+        (PR 8) the replica's programs restore instead of rebuilding — the
+        canary warm-up below performs zero XLA compiles.
+
+        The canary health check runs via DIRECT ``replica.execute`` — never
+        ``invoke`` — so spin-up traffic stamps no demand (note_demand) and
+        bills nothing: per-replica demand attribution stays consistent with
+        what clients actually sent. Returns None when the route vanished
+        under us (a racing park/merge won)."""
+        inst = self.registry.get(name)
+        if inst is None:
+            return None
+        t0 = self.clock.now()
+        specs = {m: self.spec_of(m) for m in inst.members}
+        replica = FunctionInstance(specs, self)
+        self.attach_instance(replica)
+        for m in sorted(replica.members):
+            canary = self.handler.canary(m)
+            if canary is None:
+                continue
+            if replica.get_compiled(m, canary) is None:
+                # boundary entry: replaying it would dispatch outbound calls
+                # through live routing (edge stats + billing pollution);
+                # get_compiled above still warmed what could be warmed
+                continue
+            replica.execute(m, canary)
+        replica.mark_ready()
+        event = self.lifecycle.scale_out(
+            replica, tuple(sorted(replica.members)),
+            reason=f"replica of {inst.instance_id}",
+        )
+        if event is None:
+            self.detach_instance(replica)
+            return None
+        seconds = self.clock.now() - t0
+        profile = replica.provision_profile()
+        self.note_provisioning(
+            "scale-out", seconds, warm=profile["cache_misses"] == 0,
+            functions=tuple(sorted(replica.members)),
+            resident_bytes=replica.resident_bytes(), billed=True,
+        )
+        with self._prov_lock:
+            prev = self._spinup_ewma_s
+            self._spinup_ewma_s = seconds if prev is None else 0.5 * prev + 0.5 * seconds
+        return replica
+
+    def replica_stats(self) -> dict:
+        """Per-replica view for ``stats()["replicas"]``: replica ids, spread
+        pick counts, in-flight counts, per-replica billing split, and the
+        name-level demand rate. Demand is stamped ONCE per client request at
+        the entry points (note_demand) — never per replica pick — so the
+        fission divergence signals see replicated traffic exactly once."""
+        summary = self.registry.replica_summary()
+        per_instance = self.meter.by_instance()
+        functions = {}
+        for name, info in summary.items():
+            functions[name] = {
+                **info,
+                "demand_rps": round(self.handler.recent_rate(name), 3),
+                "billing": {
+                    iid: per_instance[iid]
+                    for iid in info["replicas"]
+                    if iid in per_instance
+                },
+            }
+        out = {
+            "spread": self.registry.spread_name,
+            "spinup_estimate_s": self.replica_spinup_estimate(),
+            "functions": functions,
+        }
+        if self.autoscaler is not None:
+            out["autoscaler"] = self.autoscaler.stats()
+        return out
+
     # ------------------------------------------------------------- shapes
 
     def output_structs(self, name: str, args: tuple):
@@ -648,6 +764,7 @@ class ProvusePlatform:
             "billing": self.meter.summary(),
             "latency": self.meter.latency_summary(),
             "scheduler": self.scheduler.stats(),
+            "replicas": self.replica_stats(),
         }
 
     # ------------------------------------------------------------- backend API

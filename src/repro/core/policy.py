@@ -60,6 +60,11 @@ class FusionDecision:
     fuse: bool
     reason: str
     group: frozenset[str] = frozenset()
+    # The alternative arm of the fuse decision (Konflux frames fusion as a
+    # cost-model choice): don't merge — add a replica of the saturated callee
+    # instead. Set only when replica spin-up is estimated cheaper than the
+    # merge; the Merger forwards it to the autoscaler as a scale-out hint.
+    replicate: bool = False
 
 
 @dataclasses.dataclass
@@ -115,6 +120,18 @@ class FusionPolicy:
     saturation_penalty: float = 4.0
     promote_wait_s: float = 0.05
     promote_discount: float = 0.5
+    # ---- fuse-vs-replicate knobs ----
+    # A SATURATED callee poses a choice: merging drags the caller into the
+    # hot instance (and pays a recompile stall mid-overload), while a replica
+    # is warm (restore-not-rebuild) and adds capacity directly. When the
+    # measured replica spin-up time is <= replicate_bias x the merge cost,
+    # `decide` returns replicate=True instead of weighing the penalized
+    # merge. max_replica_hint stops hinting once the callee already holds
+    # that many replicas — more capacity isn't the fix at that point, and
+    # the penalized-merge arm gets its turn again.
+    replicate_enabled: bool = True
+    replicate_bias: float = 1.0
+    max_replica_hint: int = 4
     # ---- fission (reversible fusion) knobs ----
     # split_occupancy/split_depth/split_sustain: a fused group whose batches
     # run at least split_occupancy full with split_depth+ requests queued for
@@ -168,11 +185,19 @@ class FusionPolicy:
         trust_a: str,
         trust_b: str,
         signals: SchedulerSignals | Callable[[], SchedulerSignals] | None = None,
+        *,
+        replica_spinup_s: float | None = None,
+        callee_replicas: int = 1,
     ) -> FusionDecision:
         """``signals``: a :class:`SchedulerSignals`, or a zero-arg callable
         returning one — resolved only past the cheap early-outs so hot
         unfusable edges (observed on every sync call) don't pay for a
-        scheduler snapshot per invocation."""
+        scheduler snapshot per invocation.
+
+        ``replica_spinup_s``: the platform's measured warm replica spin-up
+        estimate (None when no replica has ever spun up — the replicate arm
+        then never fires, so callers without an autoscaler are unaffected).
+        ``callee_replicas``: how many replicas already serve the callee."""
         with self._lock:
             if not self.enabled:
                 return FusionDecision(False, "fusion disabled")
@@ -219,6 +244,19 @@ class FusionPolicy:
                     and edge_wait_s > 0.0
                 )
                 if saturated:
+                    if (
+                        self.replicate_enabled
+                        and replica_spinup_s is not None
+                        and callee_replicas < self.max_replica_hint
+                        and replica_spinup_s <= self.merge_cost_s * self.replicate_bias
+                    ):
+                        return FusionDecision(
+                            False,
+                            f"saturated callee: warm replica "
+                            f"(~{replica_spinup_s:.3f}s) beats merge "
+                            f"(~{self.merge_cost_s:.3f}s) — replicate instead",
+                            replicate=True,
+                        )
                     required_cost *= self.saturation_penalty
                     note = " [deprioritized: chain saturated]"
                 elif slo_fixable:
@@ -265,6 +303,7 @@ class FusionPolicy:
         baseline_p95_ms: float = 0.0,
         current_p95_ms: float = 0.0,
         age_s: float = 0.0,
+        replica_count: int = 1,
     ) -> SplitDecision:
         """Regret check for one committed fusion group, evaluated off the
         data path by the control plane's reconciler.
@@ -276,7 +315,15 @@ class FusionPolicy:
         the merge committed. Four regret signals, checked in order:
         sustained saturation, a sustained SLO-class violation on the group,
         post-merge tail regression, member traffic divergence (edge gone
-        cold)."""
+        cold).
+
+        ``replica_count``: how many replicas the platform already runs of
+        this fused unit. Replication is itself a fission-pressure signal —
+        the autoscaler had to clone the WHOLE group to keep up, so the
+        co-located unit is the bottleneck replica_count times over, and
+        splitting wins back per-member parallel dispatch on every replica.
+        A replicated group therefore needs only half the sustained-streak
+        evidence before the saturation/SLO checks fire."""
         members = frozenset(members)
         with self._lock:
             if not self.fission_enabled or len(members) < 2:
@@ -286,6 +333,17 @@ class FusionPolicy:
                     False, f"group too young ({age_s:.2f}s < {self.min_group_age_s}s hysteresis)"
                 )
             singletons = tuple(frozenset((m,)) for m in sorted(members))
+            # replication pressure (see docstring): a cloned group halves the
+            # sustained-evidence requirement for the streak-based checks
+            sustain = (
+                self.split_sustain
+                if replica_count <= 1
+                else max(1, self.split_sustain // 2)
+            )
+            pressure = "" if replica_count <= 1 else (
+                f"; replica pressure: {replica_count} replicas halved the "
+                f"sustain floor"
+            )
             # --- sustained saturation: the fused unit serializes a load the
             # scheduler could be running in parallel across per-member units
             saturated = (
@@ -296,12 +354,13 @@ class FusionPolicy:
             if saturated:
                 streak = self._sat_streak.get(members, 0) + 1
                 self._sat_streak[members] = streak
-                if streak >= self.split_sustain:
+                if streak >= sustain:
                     self._sat_streak.pop(members, None)
                     return SplitDecision(
                         True,
                         f"sustained saturation ({streak} consecutive evaluations at "
-                        f"occupancy {signals.mean_occupancy:.2f}, depth {signals.queue_depth})",
+                        f"occupancy {signals.mean_occupancy:.2f}, depth "
+                        f"{signals.queue_depth}{pressure})",
                         singletons,
                     )
             else:
@@ -317,13 +376,13 @@ class FusionPolicy:
             if viol is not None:
                 streak = self._slo_streak.get(members, 0) + 1
                 self._slo_streak[members] = streak
-                if streak >= self.split_sustain:
+                if streak >= sustain:
                     self._slo_streak.pop(members, None)
                     return SplitDecision(
                         True,
                         f"SLO class {viol[0]!r} violated on fused group ({streak} "
                         f"consecutive evaluations at p95 {viol[1]:.1f}ms vs target "
-                        f"{viol[2]:.1f}ms)",
+                        f"{viol[2]:.1f}ms{pressure})",
                         singletons,
                     )
             else:

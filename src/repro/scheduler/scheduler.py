@@ -282,6 +282,13 @@ class RequestScheduler:
         )
         return lam * svc / self.max_batch
 
+    def predicted_rho(self, name: str) -> float:
+        """Public snapshot of the M/G/1 offered-load prediction for ``name``
+        (sum of lane arrival rates x shared service / max_batch) — the
+        autoscaler's scale-out signal. 0.0 until adaptive estimates exist."""
+        with self._lock:
+            return self._predicted_rho_locked(name)
+
     @guarded_by("_lock")
     def _make_queue(self, name: str, key: tuple, slo: SLOClass) -> AdmissionQueue:
         controller = None

@@ -1,0 +1,25 @@
+"""Known-bad: the ISSUE 9 replica-cursor shape — a spread policy's
+round-robin cursor read-modify-written outside the lock that concurrent
+resolve threads race through (two resolves read the same cursor, pick the
+same replica, and one increment is lost)."""
+import threading
+
+
+class BadReplicaCursor:
+    GUARDED_FIELDS = {"_cursor": "_lock", "_replicas": "_lock"}
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cursor = {}
+        self._replicas = {}
+
+    def add(self, name, replica):
+        with self._lock:
+            self._replicas.setdefault(name, []).append(replica)
+
+    def pick(self, name):
+        with self._lock:
+            replicas = list(self._replicas.get(name, ()))
+        i = self._cursor.get(name, 0)  # line 23: cursor read without _lock
+        self._cursor[name] = i + 1  # line 24: cursor RMW without _lock
+        return replicas[i % len(replicas)] if replicas else None

@@ -37,6 +37,17 @@ def test_bad_unlocked_policy_pins_the_rmw():
     assert any("merge_cost_s" in f.message for f in got)
 
 
+def test_bad_replica_cursor_pins_the_unlocked_rmw():
+    """The ISSUE 9 shape: a spread policy's round-robin cursor RMW'd outside
+    its lock — both halves of the RMW pin to their exact lines."""
+    got = _findings(lockcheck, "bad_replica_cursor.py")
+    assert {(f.pass_name, f.line) for f in got} == {
+        ("lock-discipline", 23),  # unlocked cursor read
+        ("lock-discipline", 24),  # unlocked cursor write-back
+    }
+    assert all("_cursor" in f.message for f in got)
+
+
 def test_bad_lock_order_reports_the_cycle():
     got = _findings(lockorder, "bad_lock_order.py")
     assert len(got) == 1
@@ -101,6 +112,28 @@ def test_reverting_pr2_merge_cost_fix_is_caught():
     assert findings and all("merge_cost_s" in f.message for f in findings)
     # both the read and the write of the RMW land on the de-indented line
     assert {f.line for f in findings} == {bad[: bad.index(unlocked)].count("\n") + 1}
+
+
+def test_delocking_the_spread_cursor_is_caught():
+    """Strip the lock from the real least-outstanding tie rotor and the
+    lock-discipline pass flags the cursor RMW at its site — the exact race
+    the bad_replica_cursor fixture distills."""
+    path = "src/repro/core/registry.py"
+    src = (REPO / path).read_text(encoding="utf-8")
+    assert not lockcheck.check_source(src, path)  # clean at HEAD
+    locked = ("        with self._lock:\n"
+              "            i = self._cursor.get(name, 0) % len(tied)\n"
+              "            self._cursor[name] = i + 1\n"
+              "        return tied[i]")
+    unlocked = ("        i = self._cursor.get(name, 0) % len(tied)\n"
+                "        self._cursor[name] = i + 1\n"
+                "        return tied[i]")
+    assert locked in src
+    bad = src.replace(locked, unlocked)
+    findings = lockcheck.check_source(bad, path)
+    assert findings, "de-locking the spread cursor must produce findings"
+    assert all(f.pass_name == "lock-discipline" for f in findings)
+    assert all("_cursor" in f.message for f in findings)
 
 
 def test_reverting_pr6_gather_snapshot_fix_is_caught():

@@ -1,0 +1,166 @@
+"""Race-fuzz for the replicated data plane (test_slo_fuzz.py style).
+
+Seeded, hand-rolled fuzzing: concurrent ``invoke_async`` traffic against a
+real TinyJaxBackend while a churn thread scales the replica set out and in
+and occasionally redeploys (displacing the WHOLE set at once). The
+conservation properties that must hold on EVERY trace:
+
+* every submitted future resolves exactly once — no hangs, no double
+  resolution, no drops (a scale-in/redeploy race retries, never strands);
+* echoed results match their request payloads;
+* no dispatch ever resolves a DRAINING or RETIRED replica — the route flip
+  and the DRAINING transition share one critical section;
+* every lock the platform stack acquires during the trace records into a
+  runtime lock graph that stays acyclic (provlint's runtime net), with the
+  scale-out/scale-in paths exercised under instrumentation.
+"""
+import random
+import threading
+import time
+from concurrent.futures import wait
+
+import pytest
+
+from repro.analysis import LockGraph, patched_locks
+from repro.core import FunctionSpec, FusionPolicy, InstanceState, TinyJaxBackend
+
+
+class _CheckedTiny(TinyJaxBackend):
+    """TinyJaxBackend whose dispatch paths resolve through ``resolve_entry``
+    and record the replica state they observed — the fuzz's invariant probe
+    for 'no request lands on a DRAINING/RETIRED replica'."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.dispatches = 0
+        self.state_violations = []
+        self._obs_lock = threading.Lock()
+
+    def _observe(self, instance, state):
+        with self._obs_lock:
+            self.dispatches += 1
+            if state in (InstanceState.DRAINING, InstanceState.RETIRED):
+                self.state_violations.append(
+                    f"{instance.instance_id} resolved while {state.value}")
+
+    def _dispatch_sync(self, name, args):
+        instance, state = self.registry.resolve_entry(name)
+        self._observe(instance, state)
+        return self._run_request(instance, name, args)
+
+    def _dispatch_batch_impl(self, name, args_list):
+        instance, state = self.registry.resolve_entry(name)
+        self._observe(instance, state)
+        return self._run_batch(instance, name, args_list)
+
+
+@pytest.mark.parametrize("seed", [7, 23])
+def test_conservation_under_replica_churn(seed):
+    rng = random.Random(seed)
+    n_requests = 160
+    max_replicas = 3
+
+    # provlint runtime net: instrument every lock the platform stack creates
+    # (registry RLock, spread cursor, instance locks, scheduler lanes) and
+    # assert the observed acquisition graph never cycles. Entered BEFORE
+    # construction so the long-lived locks are all recorded.
+    lock_graph = LockGraph()
+    lock_patch = patched_locks(lock_graph)
+    lock_patch.__enter__()
+    p = _CheckedTiny(FusionPolicy(enabled=False), max_batch=4,
+                     max_delay_ms=1.0, adaptive=True)
+    stop = threading.Event()
+    churn_errors = []
+    try:
+        import jax.numpy as jnp
+
+        p.deploy(FunctionSpec("hot", lambda ctx, params, x: x * 2 + 1, None))
+        # warm the pow2 batch buckets (1/2/4) so no fuzz-time XLA compile
+        # stretches the trace's real-time budget
+        assert float(p.invoke("hot", jnp.float32(3.0))) == 7.0
+        for _ in range(3):
+            done, not_done = wait(
+                [p.invoke_async("hot", jnp.float32(i)) for i in range(4)],
+                timeout=30)
+            assert not not_done
+
+        def churn():
+            while not stop.is_set():
+                try:
+                    roll = rng.random()
+                    replicas = p.registry.replicas("hot")
+                    if roll < 0.45 and len(replicas) < max_replicas:
+                        p._spawn_replica("hot")
+                    elif roll < 0.8 and len(replicas) > 1:
+                        # newest-first scale-in; raced no-ops return None
+                        p.lifecycle.scale_in(replicas[-1], reason="fuzz")
+                    elif roll >= 0.9:
+                        # publish churn: displace the WHOLE replica set
+                        p._redeploy("hot")
+                except Exception as exc:  # noqa: BLE001 — a churn crash is a finding
+                    churn_errors.append(repr(exc))
+                time.sleep(0.002)
+
+        churner = threading.Thread(target=churn, daemon=True)
+        churner.start()
+
+        futs = []
+        resolution_counts = {}
+        counts_lock = threading.Lock()
+
+        def stamp(idx):
+            def cb(_fut):
+                with counts_lock:
+                    resolution_counts[idx] = resolution_counts.get(idx, 0) + 1
+            return cb
+
+        i = 0
+        while i < n_requests:
+            for _ in range(rng.randrange(1, 7)):  # bursts coalesce into batches
+                if i >= n_requests:
+                    break
+                fut = p.invoke_async("hot", jnp.float32(i))
+                fut.add_done_callback(stamp(i))
+                futs.append((i, fut))
+                i += 1
+            if rng.random() < 0.4:
+                time.sleep(rng.choice([0.0005, 0.002]))
+
+        done, not_done = wait([f for _, f in futs], timeout=60)
+        stop.set()
+        churner.join(timeout=10)
+        lock_patch.__exit__(None, None, None)
+        lock_patch = None
+
+        assert not not_done, f"{len(not_done)} futures hung (conservation violated)"
+        assert not churn_errors, churn_errors[:3]
+        assert not p.state_violations, p.state_violations[:3]
+        # exactly-once, correct-payload resolution: the retry path absorbs
+        # scale-in/redeploy races instead of surfacing or duplicating them
+        for idx, fut in futs:
+            assert fut.exception() is None, (idx, fut.exception())
+            assert float(fut.result()) == idx * 2 + 1, (
+                f"request {idx} got another's result")
+        deadline = time.perf_counter() + 5.0
+        while time.perf_counter() < deadline:
+            with counts_lock:
+                if len(resolution_counts) >= n_requests:
+                    break
+            time.sleep(0.001)
+        with counts_lock:
+            assert len(resolution_counts) == n_requests
+            assert all(c == 1 for c in resolution_counts.values()), (
+                "a future resolved more than once")
+        # the churn actually churned: scale epochs landed in the event log
+        kinds = {e.kind for e in p.lifecycle.events}
+        assert "scale-out" in kinds, kinds
+        assert p.registry.replica_count("hot") >= 1
+        assert p.dispatches > 0
+        lock_graph.assert_acyclic()
+        assert lock_graph.edges(), "lock instrumentation never fired"
+    finally:
+        stop.set()
+        if lock_patch is not None:
+            lock_patch.__exit__(None, None, None)
+        p.shutdown()
+        lock_graph.assert_acyclic()  # shutdown's drains are part of the trace

@@ -1,0 +1,611 @@
+"""Deterministic replicated-data-plane simulations on the virtual clock.
+
+Every simulation here drives the REAL routing table, control plane, and
+autoscaler — only the execution units are timing stubs (one virtual-time
+pod per replica) — through scripted virtual time, closing with the clock's
+elapsed-real-time guard like test_slo_sim.py. Covers (ISSUE 9):
+
+* replica-set routing: epoch bumps once per effective ordered-set change
+  (the PR 3 no-op pins extended to multi-replica updates), spread policies
+  (least-outstanding default, round-robin fallback), pick accounting;
+* rho-driven scale-out recovering throughput on a hot function while a
+  strict class's p95 stays in target, then trough scale-in back to one
+  replica once the load stops — with every future resolving correctly;
+* scale-in never dropping an in-flight request: the victim drains
+  (DRAINING is set atomically with route removal, so no resolve can pick
+  it) and retires only after its last request completes;
+* the fuse-vs-replicate policy arm flipping on the spin-up-vs-merge-cost
+  comparison, and replica count as fission pressure in decide_split;
+* per-replica demand/billing attribution: spin-up canaries stamp no
+  demand, each client request bills exactly one replica.
+"""
+import itertools
+import threading
+from concurrent.futures import wait
+
+import pytest
+
+from repro.core.autoscaler import Autoscaler
+from repro.core.function import InstanceState
+from repro.core.lifecycle import ControlPlane
+from repro.core.policy import FusionPolicy
+from repro.core.registry import (
+    LeastOutstandingSpread,
+    RoundRobinSpread,
+    RoutingTable,
+    make_spread,
+)
+from repro.scheduler import (
+    AdaptiveConfig,
+    RequestScheduler,
+    SLOClass,
+    VirtualClock,
+)
+from repro.scheduler.adaptive import SchedulerSignals
+
+REAL_BUDGET_S = 10.0
+
+
+def settle(clock, n=1):
+    clock.wait_for_waiters(n, timeout=5.0)
+
+
+def _pump(clock, dt, pred, max_iters=3000):
+    """Advance virtual time on a fixed grid until ``pred()`` holds."""
+    for _ in range(max_iters):
+        if pred():
+            return
+        settle(clock)
+        clock.advance(dt)
+    raise AssertionError("simulation did not converge")
+
+
+# --------------------------------------------------------- execution stub
+
+
+_IDS = itertools.count()
+
+
+class _SimReplica:
+    """Timing stub of a FunctionInstance: the real lifecycle state machine
+    and in-flight bracketing, with compute replaced by one virtual-time pod
+    (requests serialize per replica, ``service_s`` of simulated time per
+    batch) so replica parallelism is exactly the pod count."""
+
+    def __init__(self, clock, members, service_s=0.008):
+        self.clock = clock
+        self.instance_id = f"sim-{next(_IDS)}"
+        self.members = set(members)
+        self.state = InstanceState.PROVISIONING
+        self.service_s = service_s
+        self._cv = threading.Condition()
+        self._active = 0
+        self._busy = False
+        self.served = 0
+
+    def mark_ready(self):
+        self.state = InstanceState.READY
+
+    def mark_serving(self):
+        if self.state != InstanceState.RETIRED:
+            self.state = InstanceState.SERVING
+
+    def begin_drain(self):
+        with self._cv:
+            if self.state != InstanceState.RETIRED:
+                self.state = InstanceState.DRAINING
+
+    def begin_request(self):
+        with self._cv:
+            assert self.state != InstanceState.RETIRED, "request on retired unit"
+            self._active += 1
+
+    def end_request(self):
+        with self._cv:
+            self._active -= 1
+            self._cv.notify_all()
+
+    def outstanding(self):
+        with self._cv:
+            return self._active
+
+    def occupy(self):
+        """Hold this replica's pod for one batch service time."""
+        with self._cv:
+            while self._busy:
+                self.clock.wait_on(self._cv, 0.5)
+            self._busy = True
+        self.clock.sleep(self.service_s)
+        with self._cv:
+            self._busy = False
+            self.served += 1
+            self._cv.notify_all()
+
+    def retire(self, timeout=30.0):
+        self.begin_drain()
+        with self._cv:
+            while self._active:
+                self.clock.wait_on(self._cv, 0.5)
+            self.state = InstanceState.RETIRED
+        return 1000  # nominal freed bytes
+
+
+class _SimPlatform:
+    """Real RoutingTable + ControlPlane + RequestScheduler + Autoscaler on
+    a virtual clock, dispatching into :class:`_SimReplica` pods."""
+
+    def __init__(self, clock, *, service_s=0.008, spread=None, max_batch=4,
+                 autoscale=None, idle_timeout_s=1.0):
+        self.clock = clock
+        self.service_s = service_s
+        self.registry = RoutingTable(spread=spread)
+        self.lifecycle = ControlPlane(self, self.registry, clock=clock)
+        self.scheduler = RequestScheduler(
+            self._dispatch, max_batch=max_batch, adaptive=True,
+            adaptive_config=AdaptiveConfig(max_delay_s=0.016),
+            idle_timeout_s=idle_timeout_s, be_shed_depth=10**6, clock=clock,
+        )
+        self.violations = []
+        self.spawned = []
+        self.autoscaler = None
+        if autoscale is not None:
+            self.autoscaler = Autoscaler(self, **autoscale)
+            self.lifecycle.add_tick_hook(self.autoscaler.tick)
+
+    def deploy(self, name):
+        inst = _SimReplica(self.clock, {name}, self.service_s)
+        inst.mark_ready()
+        self.lifecycle.publish({name: inst}, kind="deploy", reason="deploy")
+        return inst
+
+    def _spawn_replica(self, name):
+        primary = self.registry.get(name)
+        if primary is None:
+            return None
+        replica = _SimReplica(self.clock, set(primary.members), self.service_s)
+        replica.mark_ready()
+        event = self.lifecycle.scale_out(
+            replica, tuple(sorted(replica.members)),
+            reason=f"replica of {primary.instance_id}",
+        )
+        if event is None:
+            return None
+        self.spawned.append(replica)
+        return replica
+
+    def request_replica(self, name, reason=""):
+        if self.autoscaler is not None:
+            self.autoscaler.request_scale_out(name, reason)
+
+    def retire_instance(self, instance):
+        return instance.retire()
+
+    def _dispatch(self, name, args_list):
+        instance, state = self.registry.resolve_entry(name)
+        if state in (InstanceState.DRAINING, InstanceState.RETIRED):
+            self.violations.append(f"resolved {instance.instance_id} in {state}")
+        instance.begin_request()
+        try:
+            instance.occupy()
+        finally:
+            instance.end_request()
+        return [a[0] for a in args_list]
+
+    def shutdown(self):
+        self.scheduler.shutdown()
+        self.lifecycle.shutdown()
+
+
+# ------------------------------------ epoch pins (publish bump semantics)
+
+
+def test_version_bumps_once_per_effective_replica_set_change():
+    """The PR 3 no-op pins, extended to multi-replica updates: ``version``
+    is a routing epoch, so identical republishes of a replica SET, no-op
+    add/removes, and empty updates must not mint new epochs."""
+    clock = VirtualClock()
+    rt = RoutingTable()
+    a = _SimReplica(clock, {"f"})
+    b = _SimReplica(clock, {"f"})
+    v0 = rt.version
+    rt.publish({})
+    assert rt.version == v0  # empty publish: no epoch
+    rt.register("f", a)
+    rt.register("f", a)  # identical single route: no epoch
+    assert rt.version == v0 + 1
+    rt.publish({"f": (a, b)})  # replica set grew: ONE epoch
+    assert rt.version == v0 + 2
+    rt.publish({"f": (a, b)})  # identical ordered set: no epoch
+    rt.publish({"f": [a, b]})  # list spelling of the same set: no epoch
+    assert rt.version == v0 + 2
+    assert rt.replicas("f") == (a, b)
+    # add/remove replicas: one bump per effective change, none for no-ops
+    assert rt.add_replicas(["f"], b) == ()  # already present
+    assert rt.add_replicas(["ghost"], b) == ()  # unrouted name skipped
+    assert rt.version == v0 + 2
+    assert rt.remove_replicas(["f"], b) == ("f",)
+    assert rt.version == v0 + 3
+    assert rt.remove_replicas(["f"], b) == ()  # not a member anymore
+    assert rt.remove_replicas(["f"], a) == ()  # keep_last: sole replica stays
+    assert rt.version == v0 + 3
+    assert rt.replicas("f") == (a,)
+    # swap collapses a replica set to a single unit — but an identical
+    # collapse is still a no-op
+    rt.publish({"f": (a, b)})
+    rt.swap(["f"], a)
+    assert rt.version == v0 + 5
+    rt.swap(["f"], a)
+    rt.swap([], b)
+    assert rt.version == v0 + 5
+    # one real change among no-ops: ONE epoch
+    rt.publish({"f": a, "g": b})
+    assert rt.version == v0 + 6
+    rt.unpublish(["f", "g"])
+    assert rt.version == v0 + 7
+    rt.unpublish(["f"])  # nothing routed: no epoch
+    assert rt.version == v0 + 7
+
+
+def test_publish_empty_sequence_unroutes_and_get_returns_primary():
+    clock = VirtualClock()
+    rt = RoutingTable()
+    a = _SimReplica(clock, {"f"})
+    b = _SimReplica(clock, {"f"})
+    rt.publish({"f": (a, b)})
+    assert rt.get("f") is a  # primary = first-published replica
+    assert rt.replica_count("f") == 2
+    assert rt.is_routed(b)
+    displaced = rt.publish({"f": ()})
+    assert displaced == {"f": (a, b)}
+    assert rt.get("f") is None and not rt.is_routed(a)
+    with pytest.raises(Exception):
+        rt.resolve("f")
+
+
+# -------------------------------------------------------- spread policies
+
+
+def test_round_robin_spread_cycles_in_publish_order():
+    clock = VirtualClock()
+    rt = RoutingTable(spread="round-robin")
+    assert rt.spread_name == "round-robin"
+    a, b, c = (_SimReplica(clock, {"f"}) for _ in range(3))
+    rt.publish({"f": (a, b, c)})
+    picked = [rt.resolve("f") for _ in range(6)]
+    assert picked == [a, b, c, a, b, c]
+    summary = rt.replica_summary()["f"]
+    assert summary["replicas"] == [a.instance_id, b.instance_id, c.instance_id]
+    assert summary["picks"] == {r.instance_id: 2 for r in (a, b, c)}
+
+
+def test_least_outstanding_spread_prefers_idle_replica_and_rotates_ties():
+    clock = VirtualClock()
+    rt = RoutingTable()  # least-outstanding is the default
+    assert rt.spread_name == "least-outstanding"
+    a, b = _SimReplica(clock, {"f"}), _SimReplica(clock, {"f"})
+    rt.publish({"f": (a, b)})
+    a.begin_request()  # a is busy: every pick must land on b
+    assert all(rt.resolve("f") is b for _ in range(4))
+    a.end_request()
+    picked = {rt.resolve("f") for _ in range(2)}
+    assert picked == {a, b}, "ties must rotate, not pin one replica"
+    # resolve_entry surfaces the picked replica's state atomically
+    inst, state = rt.resolve_entry("f")
+    assert state == InstanceState.PROVISIONING  # stub default; never DRAINING
+
+
+def test_make_spread_resolves_names_instances_and_rejects_unknown():
+    assert isinstance(make_spread(None), LeastOutstandingSpread)
+    assert isinstance(make_spread("round-robin"), RoundRobinSpread)
+    rr = RoundRobinSpread()
+    assert make_spread(rr) is rr
+    with pytest.raises(ValueError, match="unknown spread"):
+        make_spread("po2")
+
+
+# ------------------------------------------------------------- autoscaler
+
+
+def test_autoscaler_rejects_inverted_replica_bounds():
+    clock = VirtualClock()
+    plat = _SimPlatform(clock)
+    try:
+        with pytest.raises(ValueError):
+            Autoscaler(plat, max_replicas=1, min_replicas=2)
+    finally:
+        plat.shutdown()
+
+
+def test_replicate_hint_spawns_replica_up_to_the_cap():
+    """The fusion policy's replicate arm lands as a reconciler-tick hint:
+    the spin-up happens on the control-plane thread, respects max_replicas,
+    and records a scale-out event."""
+    clock = VirtualClock()
+    plat = _SimPlatform(clock, autoscale=dict(
+        rho_high=99.0, sustain=99, max_replicas=2, cooldown_s=0.0,
+        eval_interval_s=0.01,
+    ))
+    try:
+        plat.deploy("svc")
+        plat.request_replica("svc", reason="saturated callee: replicate")
+        _pump(clock, 0.01, lambda: plat.registry.replica_count("svc") == 2)
+        plat.request_replica("svc", reason="again")  # over the cap: no-op
+        for _ in range(10):
+            settle(clock)
+            clock.advance(0.01)
+        assert plat.registry.replica_count("svc") == 2
+        events = plat.autoscaler.stats()["events"]
+        assert [e["kind"] for e in events] == ["scale-out"]
+        assert "replicate" in events[0]["reason"]
+        # the epoch log recorded it as a scale-out transition
+        kinds = [e.kind for e in plat.lifecycle.events]
+        assert kinds == ["deploy", "scale-out"]
+        clock.assert_elapsed_real_below(REAL_BUDGET_S)
+    finally:
+        plat.shutdown()
+
+
+# ------------------------------- the tentpole sim: scale out, then back in
+
+
+def _run_hot_function_trace(plat, clock, rounds=40, per_lane=2):
+    """Open-loop skewed load: ``per_lane`` requests per virtual 8ms round on
+    each of 4 shape-distinct lanes of "hot", plus a strict gold trickle.
+    Returns (best-effort futures, gold futures, makespan seconds)."""
+    gold = SLOClass("gold", 250.0)
+    futs, gold_futs = [], []
+    t0 = clock.now()
+    for r in range(rounds):
+        for lane in range(4):
+            for k in range(per_lane):
+                futs.append(plat.scheduler.submit(
+                    "hot", (r * 100 + lane * 10 + k, (0,) * (lane + 1))))
+        if r % 4 == 0:
+            gold_futs.append(plat.scheduler.submit(
+                "hot", (9000 + r, (0,) * 5), slo=gold))
+        target = t0 + (r + 1) * 0.008
+        _pump(clock, 0.002, lambda: clock.now() >= target - 1e-9)
+    _pump(clock, 0.002,
+          lambda: all(f.done() for f in futs + gold_futs), max_iters=5000)
+    return futs, gold_futs, clock.now() - t0
+
+
+def test_sim_scale_out_recovers_throughput_then_trough_scale_in():
+    """The replicated data plane end to end, all in virtual time: a hot
+    function under 2x its single-unit capacity gains replicas from the
+    rho-driven autoscaler (makespan shrinks vs the single-instance
+    baseline), the strict class stays in target, every future resolves with
+    its own payload, no resolve ever lands on a draining replica — and once
+    the load stops, trough scale-in drains back to one replica without
+    dropping anything."""
+    # baseline: same trace, no autoscaler, one replica throughout
+    clock_b = VirtualClock()
+    base = _SimPlatform(clock_b)
+    try:
+        base.deploy("hot")
+        futs_b, gold_b, makespan_base = _run_hot_function_trace(base, clock_b)
+        assert not base.violations, base.violations[:3]
+        assert base.registry.replica_count("hot") == 1
+        for f in futs_b + gold_b:
+            assert f.exception() is None
+        clock_b.assert_elapsed_real_below(REAL_BUDGET_S)
+    finally:
+        base.shutdown()
+
+    clock = VirtualClock()
+    plat = _SimPlatform(clock, autoscale=dict(
+        rho_high=1.0, rho_low=0.2, sustain=2, max_replicas=3,
+        cooldown_s=0.05, eval_interval_s=0.02,
+    ))
+    try:
+        plat.deploy("hot")
+        futs, gold_futs, makespan = _run_hot_function_trace(plat, clock)
+        assert not plat.violations, plat.violations[:3]
+        # conservation: every future resolved, each with its own payload
+        done, not_done = wait(futs + gold_futs, timeout=5)
+        assert not not_done
+        for f in futs + gold_futs:
+            assert f.exception() is None
+        payloads = [f.result() for f in futs]
+        assert payloads == [r * 100 + lane * 10 + k
+                            for r in range(40) for lane in range(4)
+                            for k in range(2)]
+        # the autoscaler actually scaled out to the cap...
+        assert plat.registry.replica_count("hot") == 3
+        out_events = [e for e in plat.autoscaler.stats()["events"]
+                      if e["kind"] == "scale-out"]
+        assert len(out_events) == 2 and all("rho" in e["reason"] for e in out_events)
+        # ...every replica took real work through the spread...
+        assert all(rep.served > 0 for rep in plat.spawned)
+        picks = plat.registry.replica_summary()["hot"]["picks"]
+        assert len(picks) == 3 and all(n > 0 for n in picks.values())
+        # ...throughput recovered vs the single-instance baseline...
+        assert makespan <= 0.75 * makespan_base, (makespan, makespan_base)
+        # ...and the strict class stayed in target throughout the overload
+        gold_stats = plat.scheduler.class_stats()["gold"]
+        assert gold_stats["met"] is True, gold_stats
+
+        # load stops -> lanes idle out -> rho reads 0 -> trough scale-in
+        # drains back to one replica, newest first, nothing dropped
+        _pump(clock, 0.05, lambda: plat.registry.replica_count("hot") == 1,
+              max_iters=300)
+        assert not plat.violations, plat.violations[:3]
+        in_events = [e for e in plat.autoscaler.stats()["events"]
+                     if e["kind"] == "scale-in"]
+        assert len(in_events) == 2
+        assert all(r.state == InstanceState.RETIRED for r in plat.spawned)
+        primary = plat.registry.get("hot")
+        assert primary.state == InstanceState.SERVING
+        assert primary not in plat.spawned, "the primary replica must persist"
+        clock.assert_elapsed_real_below(REAL_BUDGET_S)
+    finally:
+        plat.shutdown()
+
+
+def test_sim_scale_in_never_drops_an_in_flight_request():
+    """Scale-in's drain path: route removal + DRAINING happen atomically
+    (no resolve can pick the victim), but retirement waits for the victim's
+    in-flight request to finish — the request completes normally."""
+    clock = VirtualClock()
+    plat = _SimPlatform(clock)
+    try:
+        plat.deploy("hot")
+        victim = plat._spawn_replica("hot")
+        assert victim is not None and plat.registry.replica_count("hot") == 2
+        finished = []
+
+        def in_flight():
+            victim.begin_request()
+            try:
+                clock.sleep(0.05)
+            finally:
+                victim.end_request()
+            finished.append(clock.now())
+
+        worker = threading.Thread(target=in_flight, daemon=True)
+        worker.start()
+        settle(clock)  # the request is mid-service, parked on the clock
+        out = {}
+        drainer = threading.Thread(
+            target=lambda: out.update(
+                event=plat.lifecycle.scale_in(victim, reason="trough")),
+            daemon=True)
+        drainer.start()
+        settle(clock, 2)  # drainer blocked in retire, worker still serving
+        assert victim.state == InstanceState.DRAINING
+        assert not finished, "scale-in must not cancel the in-flight request"
+        # the route flip already happened: only the primary resolves
+        assert plat.registry.replicas("hot") == (plat.registry.get("hot"),)
+        for _ in range(8):
+            inst, state = plat.registry.resolve_entry("hot")
+            assert inst is not victim and state == InstanceState.SERVING
+        clock.advance(0.05)  # the request completes -> drain finishes
+        worker.join(timeout=5)
+        drainer.join(timeout=5)
+        assert finished and victim.state == InstanceState.RETIRED
+        event = out["event"]
+        assert event.kind == "scale-in" and event.names == ("hot",)
+        assert event.retired == (victim.instance_id,)
+        # a sole replica refuses to scale in (that would unroute the name)
+        assert plat.lifecycle.scale_in(plat.registry.get("hot")) is None
+        assert plat.registry.get("hot").state == InstanceState.SERVING
+        clock.assert_elapsed_real_below(REAL_BUDGET_S)
+    finally:
+        plat.shutdown()
+
+
+# ----------------------------------------------- fuse-vs-replicate policy
+
+
+class _EdgeStats:
+    def __init__(self, sync_count=50, mean_wait_s=0.05):
+        self.sync_count = sync_count
+        self.mean_wait_s = mean_wait_s
+        self.p95_wait_s = mean_wait_s
+
+
+SATURATED = SchedulerSignals(queue_depth=4, mean_occupancy=1.0, p95_ms=0.0)
+
+
+def test_policy_flips_replicate_when_spinup_beats_merge_cost():
+    pol = FusionPolicy(merge_cost_s=2.0)
+    # warm replica (50ms) vs a 2s merge on a saturated callee: replicate
+    d = pol.decide("A", "B", _EdgeStats(), "t", "t", SATURATED,
+                   replica_spinup_s=0.05, callee_replicas=1)
+    assert d.replicate and not d.fuse
+    assert "replica" in d.reason and "beats merge" in d.reason
+    # spin-up slower than the merge itself: back to the penalized-merge arm
+    # (saving 0.05 x 500 = 25s >= 2 x 4 = 8s, so the merge still wins)
+    d = pol.decide("A", "B", _EdgeStats(), "t", "t", SATURATED,
+                   replica_spinup_s=5.0, callee_replicas=1)
+    assert not d.replicate and d.fuse
+    assert "saturated" in d.reason
+
+
+def test_policy_replicate_arm_respects_cap_estimate_and_kill_switch():
+    base = dict(replica_spinup_s=0.05, callee_replicas=1)
+    # callee already at the replica-hint cap: capacity is not the fix
+    d = FusionPolicy(merge_cost_s=2.0, max_replica_hint=2).decide(
+        "A", "B", _EdgeStats(), "t", "t", SATURATED,
+        replica_spinup_s=0.05, callee_replicas=2)
+    assert not d.replicate and d.fuse
+    # no spin-up estimate yet (no replica ever spun up): never replicate
+    d = FusionPolicy(merge_cost_s=2.0).decide(
+        "A", "B", _EdgeStats(), "t", "t", SATURATED,
+        replica_spinup_s=None, callee_replicas=1)
+    assert not d.replicate
+    # kill switch
+    d = FusionPolicy(merge_cost_s=2.0, replicate_enabled=False).decide(
+        "A", "B", _EdgeStats(), "t", "t", SATURATED, **base)
+    assert not d.replicate
+    # an UNsaturated callee never replicates — capacity is not the problem
+    calm = SchedulerSignals(queue_depth=0, mean_occupancy=0.1)
+    d = FusionPolicy(merge_cost_s=2.0).decide(
+        "A", "B", _EdgeStats(), "t", "t", calm, **base)
+    assert not d.replicate and d.fuse
+
+
+def test_decide_split_replica_count_halves_the_sustain_floor():
+    members = frozenset({"a", "b"})
+    sat = SchedulerSignals(queue_depth=4, mean_occupancy=1.0)
+    # unreplicated group: the full split_sustain=3 evaluations are required
+    pol = FusionPolicy()
+    for _ in range(2):
+        assert not pol.decide_split(members, signals=sat, age_s=5.0).split
+    assert pol.decide_split(members, signals=sat, age_s=5.0).split
+    # a replicated group is fission pressure: the floor halves to 1
+    pol2 = FusionPolicy()
+    d = pol2.decide_split(members, signals=sat, age_s=5.0, replica_count=3)
+    assert d.split and "replica pressure" in d.reason
+    assert d.partition == (frozenset({"a"}), frozenset({"b"}))
+
+
+# ------------------------------------- demand + billing attribution (real)
+
+
+def test_spawn_replica_stamps_no_demand_and_bills_each_request_once():
+    """note_demand fires once per client request at the entry points; the
+    spin-up canary goes through direct execute, so replica provisioning
+    must leave the demand rate untouched — and by_instance's buckets must
+    sum to exactly the client request count across the replica set."""
+    pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.core import FunctionSpec, TinyJaxBackend
+
+    clock = VirtualClock()
+    p = TinyJaxBackend(FusionPolicy(enabled=False), clock=clock)
+    try:
+        p.deploy(FunctionSpec("f", lambda ctx, params, x: x * 2 + 1, None))
+        for i in range(6):
+            p.invoke("f", jnp.float32(i))
+        rate_before = p.handler.recent_rate("f")
+        assert rate_before > 0.0
+        replica = p._spawn_replica("f")
+        assert replica is not None
+        # the canary warm-up billed nothing and stamped no demand (the
+        # virtual clock froze time, so the windowed rate is exact)
+        assert p.handler.recent_rate("f") == rate_before
+        assert p.meter.summary()["by_function"]["f"]["calls"] == 6
+        prov = [r for r in p.meter.provisioning if r.kind == "scale-out"]
+        assert len(prov) == 1 and prov[0].billed
+        assert prov[0].warm, "replica spin-up must restore, not rebuild"
+        assert p.replica_spinup_estimate() is not None
+        # 6 more requests spread over both replicas: 12 billed calls total,
+        # each request in exactly one replica's bucket
+        for i in range(6):
+            assert float(p.invoke("f", jnp.float32(i))) == i * 2 + 1
+        by_inst = p.meter.by_instance()
+        stats = p.stats()["replicas"]
+        info = stats["functions"]["f"]
+        assert len(info["replicas"]) == 2
+        assert sum(d["calls"] for d in by_inst.values()) == 12
+        assert sum(info["picks"].values()) == 12
+        assert all(n >= 2 for n in info["picks"].values()), (
+            "least-outstanding ties must rotate across idle replicas")
+        assert set(info["billing"]) <= set(info["replicas"])
+        assert stats["spread"] == "least-outstanding"
+        assert p.meter.summary()["by_function"]["f"]["calls"] == 12
+        clock.assert_elapsed_real_below(REAL_BUDGET_S)
+    finally:
+        p.shutdown()
