@@ -56,13 +56,14 @@ BACKENDS = {"tinyjax": TinyJaxBackend, "orchestrated": OrchestratedBackend}
 MODES = ("unfused-serial", "unfused-batched", "fused-serial", "fused-batched")
 
 
-def build_engine(args, fused: bool, adaptive: bool = False, kv_pages: int = 0):
+def build_engine(args, fused: bool, adaptive: bool = False, kv_pages: int = 0,
+                 tracing: bool = True):
     cfg = reduced_config(get_arch(args.arch))
     model = build_model(cfg)
     policy = FusionPolicy(min_observations=2, merge_cost_s=0.0, enabled=fused)
     platform = BACKENDS[args.backend](
         policy, max_batch=args.max_batch or args.concurrency, max_delay_ms=args.max_delay_ms,
-        adaptive=adaptive,
+        adaptive=adaptive, tracing=tracing,
     )
     engine = ServingEngine(model, platform, max_len=args.max_len,
                            kv_pages=kv_pages, kv_page_size=args.page_size)
@@ -109,10 +110,10 @@ class Client:
         self.cur_len = self.cur_len + 1
 
 
-def run_closed_loop(args, mode: str) -> dict:
+def run_closed_loop(args, mode: str, tracing: bool = True) -> dict:
     fused = mode.startswith("fused")
     batched = mode.endswith("batched")
-    engine, platform = build_engine(args, fused)
+    engine, platform = build_engine(args, fused, tracing=tracing)
     try:
         warm(engine)
         clients = [Client(engine, i, args.prompt_len) for i in range(args.concurrency)]
@@ -1460,6 +1461,21 @@ def run_smoke(args) -> int:
     ok = res["throughput_rps"] > 0 and sched.get("mean_batch", 0.0) > 1.05
     if not ok:
         print("[smoke] FAIL: scheduler no longer coalesces concurrent traffic")
+    # tracing-overhead gate: the recorder is always on in production
+    # configs, so its cost on the SAME closed-loop traffic must stay under
+    # 3% throughput. One retry: on a shared 2-core box run-to-run noise
+    # alone can exceed the margin; a real regression fails both attempts.
+    off = run_closed_loop(args, "fused-batched", tracing=False)
+    ratio = res["throughput_rps"] / max(off["throughput_rps"], 1e-9)
+    if ratio < 0.97:
+        print(f"[smoke] tracing overhead attempt 1 flaked (on/off ratio {ratio:.3f}); retrying once")
+        on2 = run_closed_loop(args, "fused-batched")
+        off2 = run_closed_loop(args, "fused-batched", tracing=False)
+        ratio = on2["throughput_rps"] / max(off2["throughput_rps"], 1e-9)
+    print(f"[smoke] tracing overhead: on/off throughput ratio {ratio:.3f}")
+    if ratio < 0.97:
+        print("[smoke] FAIL: tracing costs more than 3% throughput")
+        ok = False
     # churn gate: merge -> saturate -> split under load, no dropped/hung
     # futures. One retry, same policy as the slow-marked timing tests: on a
     # 2-core shared box the saturation trigger can flake (~10%) on probe
@@ -1517,6 +1533,9 @@ def main():
     ap.add_argument("--page-size", type=int, default=16, help="KV arena page size (tokens)")
     ap.add_argument("--modes", nargs="*", default=["fused-serial", "fused-batched"], choices=MODES)
     ap.add_argument("--json", action="store_true", help="emit machine-readable results")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="export a Chrome/perfetto trace_event JSON of every "
+                         "platform's request + control-plane spans to PATH at exit")
     args = ap.parse_args()
 
     if not args.coldstart:
@@ -1526,6 +1545,21 @@ def main():
         from repro.launch.compile_cache import maybe_enable_from_env
         maybe_enable_from_env()
 
+    if args.trace:
+        # pin every tracer created from here on: scenarios drop their
+        # platforms, but the spans must survive until the export below
+        from repro.obs import retain_tracers
+        retain_tracers()
+    try:
+        _dispatch(args)
+    finally:
+        if args.trace:
+            from repro.obs import export_all_chrome
+            export_all_chrome(args.trace)
+            print(f"[trace] wrote {args.trace}")
+
+
+def _dispatch(args):
     if args.coldstart:
         if args.smoke:
             sys.exit(run_coldstart_smoke(args))

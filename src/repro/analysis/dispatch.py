@@ -30,6 +30,8 @@ from __future__ import annotations
 import threading
 from dataclasses import dataclass
 
+from repro.analysis.guards import guarded_by
+
 
 @dataclass(frozen=True)
 class DispatchSnapshot:
@@ -40,15 +42,36 @@ class DispatchSnapshot:
 
 
 class DispatchTracer:
-    """Armable recompile + host-sync counter. See module docstring."""
+    """Armable recompile + host-sync counter. See module docstring.
+
+    Thread-safe and re-entrant: ``arm``/``disarm`` are ref-counted under
+    ``_mu``, so overlapping measurement windows (the smoke gate arming
+    while the overhead gate is already armed) never double-install the
+    transfer patches — and never capture an installed wrapper as the
+    "original" to restore, which would leak the patch forever."""
+
+    GUARDED_FIELDS = {
+        "_arm_count": "_mu",
+        "_listener_installed": "_mu",
+        "_unpatch": "_mu",
+        "compiles": "_mu",
+        "host_syncs": "_mu",
+        "decode_steps": "_mu",
+        "kernel_calls": "_mu",
+    }
 
     _EVENT = "/jax/core/compile/backend_compile_duration"
 
     def __init__(self):
         self._mu = threading.Lock()
+        # lock-free fast-path flag the hot hooks read; written ONLY under
+        # _mu. A stale read at an arm/disarm boundary misses/adds at most
+        # one in-flight event — never a leak or a crash — so the hooks
+        # stay O(1) with no lock acquisition while disarmed.
         self._armed = False
+        self._arm_count = 0
         self._listener_installed = False
-        self._patched = False
+        self._unpatch = None  # installed patches' restore thunk, or None
         self.compiles = 0
         self.host_syncs = 0
         self.decode_steps = 0
@@ -61,10 +84,16 @@ class DispatchTracer:
     # -- wiring ------------------------------------------------------------
 
     def _on_event(self, event: str, duration: float, **kw) -> None:
-        if event == self._EVENT:
+        # jax.monitoring has no unregister API, so the listener outlives
+        # every disarm: it must gate on the armed state or steady-state
+        # compile asserts would see compiles from unrelated code between
+        # measurement windows
+        if event == self._EVENT and self._armed:
             with self._mu:
-                self.compiles += 1
+                if self._arm_count > 0:
+                    self.compiles += 1
 
+    @guarded_by("_mu")
     def _install_listener(self) -> None:
         if self._listener_installed:
             return
@@ -77,8 +106,12 @@ class DispatchTracer:
         import jax
         return isinstance(x, jax.Array) and not isinstance(x, jax.core.Tracer)
 
+    @guarded_by("_mu")
     def _patch_transfers(self) -> None:
-        if self._patched:
+        """Install the asarray/device_get counting wrappers. Only called on
+        the 0 -> 1 arm transition with the previous patches restored, so the
+        captured originals are always the real functions."""
+        if self._unpatch is not None:
             return
         import jax
         import numpy
@@ -90,13 +123,15 @@ class DispatchTracer:
         def asarray(a, *args, **kw):
             if tracer._armed and tracer._is_device_array(a):
                 with tracer._mu:
-                    tracer.host_syncs += 1
+                    if tracer._arm_count > 0:
+                        tracer.host_syncs += 1
             return orig_asarray(a, *args, **kw)
 
         def device_get(x):
             if tracer._armed:
                 with tracer._mu:
-                    tracer.host_syncs += 1
+                    if tracer._arm_count > 0:
+                        tracer.host_syncs += 1
             return orig_device_get(x)
 
         numpy.asarray = asarray
@@ -105,20 +140,30 @@ class DispatchTracer:
             setattr(numpy, "asarray", orig_asarray),
             setattr(jax, "device_get", orig_device_get),
         )
-        self._patched = True
 
     # -- public API --------------------------------------------------------
 
     def arm(self) -> None:
-        self._install_listener()
-        self._patch_transfers()
-        self._armed = True
+        """Begin (or join) a measurement window. Every ``arm`` needs a
+        matching ``disarm``; patches install on the first and are removed
+        by the last, so mid-flight re-arms neither double-count nor leak."""
+        with self._mu:
+            self._arm_count += 1
+            if self._arm_count == 1:
+                self._install_listener()
+                self._patch_transfers()
+                self._armed = True
 
     def disarm(self) -> None:
-        self._armed = False
-        if self._patched:
-            self._unpatch()
-            self._patched = False
+        with self._mu:
+            if self._arm_count == 0:
+                return  # idempotent: stray disarms don't underflow
+            self._arm_count -= 1
+            if self._arm_count == 0:
+                self._armed = False
+                if self._unpatch is not None:
+                    self._unpatch()
+                    self._unpatch = None
 
     def note_decode_step(self) -> None:
         if self._armed:

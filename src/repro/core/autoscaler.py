@@ -151,6 +151,10 @@ class Autoscaler:
                 "instance": replica.instance_id, "reason": reason,
                 "t": round(now, 4),
             })
+        platform.tracer.control_event(
+            f"scale-out:{name}",
+            args={"name": name, "replicas": n + 1,
+                  "instance": replica.instance_id, "reason": reason})
 
     # ------------------------------------------------------------- scale in
 
@@ -190,6 +194,10 @@ class Autoscaler:
                         "instance": victim.instance_id, "reason": reason,
                         "t": round(event.t_completed, 4),
                     })
+                self.platform.tracer.control_event(
+                    f"scale-in:{','.join(event.names)}",
+                    t=event.t_completed,
+                    args={"instance": victim.instance_id, "reason": reason})
         finally:
             with self._lock:
                 self._pending_in.discard(victim.instance_id)

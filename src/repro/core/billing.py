@@ -183,43 +183,69 @@ class BillingMeter:
         total client request count no matter how many replicas share a name;
         micro-batched requests already split their shared GB-s by batch."""
         with self._lock:
-            out: dict[str, dict] = {}
-            for r in self.records:
-                d = out.setdefault(r.instance, {"calls": 0, "gb_s": 0.0})
-                d["calls"] += 1
-                d["gb_s"] += r.gb_seconds
-            return out
+            records = list(self.records)
+        return self._by_instance(records)
 
-    def summary(self) -> dict:
+    @staticmethod
+    def _by_instance(records: list[InvocationRecord]) -> dict[str, dict]:
+        out: dict[str, dict] = {}
+        for r in records:
+            d = out.setdefault(r.instance, {"calls": 0, "gb_s": 0.0})
+            d["calls"] += 1
+            d["gb_s"] += r.gb_seconds
+        return out
+
+    def snapshot(self) -> dict:
+        """One COHERENT view of the meter: records, leases, and provisioning
+        are copied under a single lock acquisition, then every derived view
+        (summary, per-instance split, arena, latency) is computed from that
+        one copy. ``platform.stats()`` assembles from this, so its totals
+        are conserved even while invokes land concurrently — summing the
+        per-instance calls always equals summing the per-function calls
+        (regression-tested in test_obs.py)."""
         with self._lock:
-            by_fn: dict[str, dict] = {}
-            for r in self.records:
-                d = by_fn.setdefault(r.function, {"calls": 0, "gb_s": 0.0, "blocked_gb_s": 0.0})
-                d["calls"] += 1
-                d["gb_s"] += r.gb_seconds
-                d["blocked_gb_s"] += r.blocked_s * r.resident_bytes / 1e9
-        out = {
+            records = list(self.records)
+            leases = list(self.arena_leases)
+            prov = list(self.provisioning)
+        by_fn: dict[str, dict] = {}
+        for r in records:
+            d = by_fn.setdefault(r.function, {"calls": 0, "gb_s": 0.0, "blocked_gb_s": 0.0})
+            d["calls"] += 1
+            d["gb_s"] += r.gb_seconds
+            d["blocked_gb_s"] += r.blocked_s * r.resident_bytes / 1e9
+        billing = {
             "total_gb_s": sum(d["gb_s"] for d in by_fn.values()),
             "blocked_gb_s": sum(d["blocked_gb_s"] for d in by_fn.values()),
             "by_function": by_fn,
         }
-        arena = self.arena_summary()
-        if arena["requests"]:
-            out["arena"] = arena
-        with self._lock:
-            prov = list(self.provisioning)
+        if leases:
+            billing["arena"] = {
+                "requests": len(leases),
+                "gb_s": sum(l.gb_seconds for l in leases),
+                "mean_pages": sum(l.pages for l in leases) / len(leases),
+                "max_pages": max(l.pages for l in leases),
+                "mean_billed_pages": sum(l.billed_pages for l in leases) / len(leases),
+                "mean_residency_s": sum(l.duration_s for l in leases) / len(leases),
+            }
         if prov:
             # a SEPARATE line item, not folded into total_gb_s: invocation
             # GB-s is the paper's double-billing comparison and must not
             # shift when provisioning accounting is enabled
-            out["provisioning"] = {
+            billing["provisioning"] = {
                 "events": len(prov),
                 "billed_gb_s": sum(p.gb_seconds for p in prov if p.billed),
                 "billed_s": sum(p.seconds for p in prov if p.billed),
                 "warm": sum(1 for p in prov if p.warm),
                 "cold": sum(1 for p in prov if not p.warm),
             }
-        return out
+        return {
+            "billing": billing,
+            "by_instance": self._by_instance(records),
+            "latency": self._latency.snapshot(),
+        }
+
+    def summary(self) -> dict:
+        return self.snapshot()["billing"]
 
 
 def now() -> float:

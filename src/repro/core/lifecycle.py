@@ -178,9 +178,7 @@ class ControlPlane:
             retired=tuple(i.instance_id for i in doomed), freed_bytes=freed,
             t_completed=self.clock.now(), deferred_s=round(deferred_s, 4),
         )
-        with self._events_lock:
-            self.events.append(event)
-        return event
+        return self._record(event)
 
     def park(self, instance: "FunctionInstance", *, reason: str = "") -> EpochEvent | None:
         """Scale-to-zero epoch: atomically UNROUTE an instance's functions
@@ -207,9 +205,7 @@ class ControlPlane:
             retired=(instance.instance_id,), freed_bytes=freed,
             t_completed=self.clock.now(),
         )
-        with self._events_lock:
-            self.events.append(event)
-        return event
+        return self._record(event)
 
     def scale_out(self, instance: "FunctionInstance", names, *,
                   reason: str = "") -> EpochEvent | None:
@@ -229,9 +225,7 @@ class ControlPlane:
             epoch=epoch, kind="scale-out", names=added, reason=reason,
             t_completed=self.clock.now(),
         )
-        with self._events_lock:
-            self.events.append(event)
-        return event
+        return self._record(event)
 
     def scale_in(self, instance: "FunctionInstance", *,
                  reason: str = "") -> EpochEvent | None:
@@ -263,8 +257,20 @@ class ControlPlane:
             retired=(instance.instance_id,), freed_bytes=freed,
             t_completed=self.clock.now(),
         )
+        return self._record(event)
+
+    def _record(self, event: EpochEvent) -> EpochEvent:
+        """Append to the epoch log and stamp the transition as an instant on
+        the control-plane trace timeline — epoch swaps become visible next
+        to the request traffic that triggered them."""
         with self._events_lock:
             self.events.append(event)
+        tracer = getattr(self.platform, "tracer", None)
+        if tracer is not None:
+            tracer.control_event(
+                f"epoch:{event.kind}", t=event.t_completed,
+                args={"epoch": event.epoch, "names": list(event.names),
+                      "reason": event.reason})
         return event
 
     # ----------------------------------------------------------- reconciler

@@ -103,6 +103,19 @@ class Merger:
         "_threads": "_lock",
     }
 
+
+    def _trace_outcome(self, kind: str, event) -> None:
+        """Stamp the merge/split transaction outcome on the control-plane
+        trace timeline — policy decisions land next to the traffic that
+        caused them (successful builds also get a duration span via
+        ``note_provisioning``; this instant carries the verdict)."""
+        tracer = getattr(self.platform, "tracer", None)
+        if tracer is not None:
+            tracer.control_event(
+                f"{kind}:{'+'.join(event.members)}", t=event.t_completed,
+                args={"members": list(event.members),
+                      "healthy": event.healthy, "reason": event.reason})
+
     def __init__(self, platform, policy, *, health_rtol: float = 2e-2, health_atol: float = 1e-2, async_build: bool = False):
         self.platform = platform
         self.policy = policy
@@ -285,10 +298,10 @@ class Merger:
                     with self._lock:
                         self._quarantined.add((caller, callee))
                         self._failed_groups.add(frozenset(group))
-                self.merge_log.append(
-                    MergeEvent(self._clock.now(), tuple(sorted(group)), 0, self._clock.now() - t0,
-                               False, reason, tuple(checked))
-                )
+                event = MergeEvent(self._clock.now(), tuple(sorted(group)), 0,
+                                   self._clock.now() - t0, False, reason, tuple(checked))
+                self.merge_log.append(event)
+                self._trace_outcome("merge", event)
                 return
 
             # --- pre-merge baseline snapshot: what regret will compare against ---
@@ -334,10 +347,11 @@ class Merger:
                 note("merge", build_s, warm=warm,
                      functions=tuple(sorted(group)),
                      resident_bytes=merged.resident_bytes())
-            self.merge_log.append(
-                MergeEvent(self._clock.now(), tuple(sorted(group)), freed, build_s, True,
-                           checked_members=tuple(checked), epoch=event.epoch, warm=warm)
-            )
+            merge_event = MergeEvent(
+                self._clock.now(), tuple(sorted(group)), freed, build_s, True,
+                checked_members=tuple(checked), epoch=event.epoch, warm=warm)
+            self.merge_log.append(merge_event)
+            self._trace_outcome("merge", merge_event)
         finally:
             with self._lock:
                 self._inflight.discard((caller, callee))
@@ -448,6 +462,7 @@ class Merger:
                 "no canary traffic captured", (), build_s=self._clock.now() - t0,
             )
             self.split_log.append(event)
+            self._trace_outcome("split", event)
             return event
 
         units: dict[frozenset, FunctionInstance] = {}
@@ -507,6 +522,7 @@ class Merger:
                     tuple(checked), build_s=self._clock.now() - t0,
                 )
                 self.split_log.append(event)
+                self._trace_outcome("split", event)
                 return event
 
             for unit in units.values():
@@ -556,4 +572,5 @@ class Merger:
             tuple(checked), epoch=epoch_event.epoch, build_s=build_s, warm=warm,
         )
         self.split_log.append(event)
+        self._trace_outcome("split", event)
         return event

@@ -33,6 +33,8 @@ from repro.core.lifecycle import ControlPlane
 from repro.core.merger import Merger
 from repro.core.policy import FusionPolicy
 from repro.core.registry import RoutingTable
+from repro.obs.critical_path import EdgeCostModel
+from repro.obs.trace import Tracer
 from repro.scheduler import RequestScheduler
 from repro.scheduler.clock import SYSTEM_CLOCK
 from repro.scheduler.slo import SLOClass
@@ -95,18 +97,27 @@ class ProvusePlatform:
                  snapshot_dir: str | None = None, idle_park_s: float = 0.0,
                  spread=None, autoscale: bool = False,
                  autoscale_config: dict | None = None,
-                 clock=None):
+                 clock=None, tracing: bool = True):
         # One injectable time source for the whole platform: scheduler
         # windows, handler edge heat, lifecycle deferrals, and merge ages
         # all move on the same axis (virtual in simulation tests).
         self.clock = clock or SYSTEM_CLOCK
+        # Always-on causal tracing: every entry point mints a SpanContext,
+        # every phase lands in the tracer's flight recorder, and the
+        # EdgeCostModel turns measured sync waits / merge stalls into the
+        # policy's cost inputs. ``tracing=False`` disables span minting
+        # (the overhead-gate baseline) without touching any call site.
+        self.tracer = Tracer(clock=self.clock, enabled=tracing)
+        self.edge_costs = EdgeCostModel()
         # spread: replica selection policy for multi-replica routes —
         # "least-outstanding" (default) or "round-robin" (see registry).
         self.registry = RoutingTable(spread=spread)
         self.meter = BillingMeter(clock=self.clock)
         self.policy = policy or FusionPolicy()
+        if self.policy.cost_model is None:
+            self.policy.cost_model = self.edge_costs
         self.handler = FunctionHandler(self.meter, on_fusion_candidate=self._on_candidate,
-                                       clock=self.clock)
+                                       clock=self.clock, tracer=self.tracer)
         # Control plane: every deploy/merge/split/redeploy is an epoch
         # transition published through here; the reconciler thread (started
         # lazily) executes deferred transitions during traffic troughs.
@@ -123,6 +134,7 @@ class ProvusePlatform:
             be_shed_depth=be_shed_depth,
             on_request_done=lambda name, lat_s, k: self.meter.observe_latency(name, lat_s),
             clock=self.clock,
+            tracer=self.tracer,
         )
         # fission: the reconciler periodically runs the regret check
         # (Merger.evaluate_splits) so a merge the live signals say was a
@@ -294,10 +306,29 @@ class ProvusePlatform:
         """PROVISIONING fast path: restore(snapshot) -> health-check on the
         captured canary -> publish. The restored params are digest-verified
         bit-exact, and the program normally comes from the executable index —
-        a warm resurrect performs zero XLA compiles."""
+        a warm resurrect performs zero XLA compiles.
+
+        When a request trace is active (the data-path gate resurrecting on
+        the invoke path), the whole restore is a "cold-provision" span in
+        that trace — the canary execute nests under it, not beside it."""
+        t0 = self.clock.now()
+        cur = self.tracer.current()
+        if cur is None:
+            self._resurrect_impl(name, t0)
+            return
+        ctx, parent = cur
+        sid = ctx.alloc_id()
+        try:
+            with self.tracer.activate(ctx, sid):
+                self._resurrect_impl(name, t0)
+        finally:
+            ctx.emit(f"resurrect:{name}", "cold-provision", t0,
+                     self.clock.now(), parent_id=parent, span_id=sid,
+                     args={"function": name})
+
+    def _resurrect_impl(self, name: str, t0: float) -> None:
         with self._parked_lock:
             rec = self._parked[name]
-        t0 = self.clock.now()
         params = self.snapshots.restore(rec.digest, rec.like)
         spec = dataclasses.replace(rec.spec, params=params)
         inst = FunctionInstance({name: spec}, self)
@@ -370,6 +401,23 @@ class ProvusePlatform:
         with self._prov_lock:
             self._prov_records.append(rec)
         self.meter.record_provisioning(rec)
+        # Control-plane timeline: the transition becomes a span ending now,
+        # so merges/splits/parks/resurrects are visually attributable to the
+        # traffic around them in the same exported trace.
+        t1 = self.clock.now()
+        self.tracer.control_span(
+            f"{kind}:{'+'.join(rec.functions) or '?'}", t1 - rec.seconds, t1,
+            args={"kind": kind, "warm": rec.warm, "billed": rec.billed,
+                  "seconds": rec.seconds})
+        if kind == "merge":
+            # feed the measured merge stall (and the queue depth it was
+            # inflicted on) back into the policy's cost model — this is the
+            # measured replacement for the static saturation_penalty
+            try:
+                depth = self.scheduler.signals_for(rec.functions).queue_depth
+            except Exception:  # noqa: BLE001 — feedback is best-effort
+                depth = 0
+            self.edge_costs.observe_merge_stall(rec.seconds, depth)
 
     def provisioning_stats(self) -> dict:
         """Warm/cold provisioning latency aggregates + compile-cache and
@@ -493,14 +541,17 @@ class ProvusePlatform:
             self._spinup_ewma_s = seconds if prev is None else 0.5 * prev + 0.5 * seconds
         return replica
 
-    def replica_stats(self) -> dict:
+    def replica_stats(self, per_instance: dict | None = None) -> dict:
         """Per-replica view for ``stats()["replicas"]``: replica ids, spread
         pick counts, in-flight counts, per-replica billing split, and the
         name-level demand rate. Demand is stamped ONCE per client request at
         the entry points (note_demand) — never per replica pick — so the
-        fission divergence signals see replicated traffic exactly once."""
+        fission divergence signals see replicated traffic exactly once.
+        ``stats()`` passes the per-instance split from its coherent meter
+        snapshot; standalone callers let it be computed fresh."""
         summary = self.registry.replica_summary()
-        per_instance = self.meter.by_instance()
+        if per_instance is None:
+            per_instance = self.meter.by_instance()
         functions = {}
         for name, info in summary.items():
             functions[name] = {
@@ -634,12 +685,24 @@ class ProvusePlatform:
             self._drain_candidates()
 
     def invoke(self, name: str, *args):
-        """External (client) invocation — serial path."""
+        """External (client) invocation — serial path. Mints the request's
+        trace and activates it so every phase below (execute, cross-function
+        hops, resurrects) nests under this root."""
         self.handler.record_canary(name, args)
         self.handler.note_demand(name)
         t0 = self.clock.now()
-        out = self._invoke_with_retry(name, args)
-        self.meter.observe_latency(name, self.clock.now() - t0)
+        ctx = self.tracer.begin_request(name, "invoke", t0=t0)
+        try:
+            with self.tracer.activate(ctx):
+                out = self._invoke_with_retry(name, args)
+        except BaseException as exc:
+            if ctx is not None:
+                ctx.finish(args={"error": type(exc).__name__})
+            raise
+        t1 = self.clock.now()
+        if ctx is not None:
+            ctx.finish(t1)
+        self.meter.observe_latency(name, t1 - t0)
         return out
 
     def invoke_async(self, name: str, *args, priority: int = 0,
@@ -708,16 +771,28 @@ class ProvusePlatform:
         """Blocking function-to-function dispatch (runs inside the caller's
         pure_callback — the caller's program is parked until this returns)."""
         self.handler.record_canary(callee, args)
+        # Boundary hop: the wait is a distinct "cross-function-sync" span in
+        # the caller's trace (a fused-inline call records no hop — see
+        # EagerContext.call), and the measured wait feeds the edge-cost EWMA
+        # the fusion policy weighs instead of its static knobs.
+        cur = self.tracer.current()
+        sid = cur[0].alloc_id() if cur is not None else None
         self._ensure_live(callee)
         t0 = self.clock.now()
-        try:
-            out = self._dispatch_sync(callee, args)
-        except UnknownFunctionError:
-            self._ensure_live(callee)  # raced a park — resurrect and retry
-            out = self._dispatch_sync(callee, args)
+        with self.tracer.activate(cur[0] if cur else None, sid or 1):
+            try:
+                out = self._dispatch_sync(callee, args)
+            except UnknownFunctionError:
+                self._ensure_live(callee)  # raced a park — resurrect and retry
+                out = self._dispatch_sync(callee, args)
         wait = self.clock.now() - t0
+        if cur is not None:
+            cur[0].emit(f"{caller_fn}->{callee}", "cross-function-sync",
+                        t0, t0 + wait, parent_id=cur[1], span_id=sid,
+                        args={"caller": caller_fn, "callee": callee})
         self.handler.attribute_blocked(wait)
         self.handler.observe_edge(caller_fn, callee, sync=True, wait_s=wait)
+        self.edge_costs.observe_sync_edge(caller_fn, callee, wait)
         return out
 
     def async_call(self, caller_instance: FunctionInstance, caller_fn: str, callee: str, args: tuple) -> None:
@@ -730,6 +805,11 @@ class ProvusePlatform:
         return sum(inst.resident_bytes() for inst in self.registry.live_instances())
 
     def stats(self) -> dict:
+        # ONE billing-meter snapshot feeds billing, latency, AND the
+        # per-replica split: totals inside a stats() dict are mutually
+        # consistent even mid-traffic (each sub-view derives from the same
+        # records copy taken under a single lock acquisition).
+        meter_snap = self.meter.snapshot()
         return {
             "backend": self.backend_name,
             "ram_bytes": self.ram_bytes(),
@@ -761,10 +841,11 @@ class ProvusePlatform:
             ],
             "lifecycle": self.lifecycle.stats(),
             "provisioning": self.provisioning_stats(),
-            "billing": self.meter.summary(),
-            "latency": self.meter.latency_summary(),
+            "billing": meter_snap["billing"],
+            "latency": meter_snap["latency"],
             "scheduler": self.scheduler.stats(),
-            "replicas": self.replica_stats(),
+            "replicas": self.replica_stats(per_instance=meter_snap["by_instance"]),
+            "edge_costs": self.edge_costs.stats(),
         }
 
     # ------------------------------------------------------------- backend API
@@ -820,32 +901,37 @@ class _Worker:
     def __init__(self, platform: "OrchestratedBackend", instance: FunctionInstance):
         self.instance = instance
         self.platform = platform
-        self.q: "queue.Queue[tuple[str, tuple, Future] | None]" = queue.Queue()
+        self.q: "queue.Queue[tuple | None]" = queue.Queue()  # (entry, payload, fut, is_batch, trace-ctx)
         self.thread = threading.Thread(target=self._loop, daemon=True, name=f"worker-{instance.instance_id}")
         self.thread.start()
 
     def _loop(self):
+        tracer = self.platform.tracer
         while True:
             item = self.q.get()
             if item is None:
                 return
-            entry, payload, fut, is_batch = item
+            entry, payload, fut, is_batch, cur = item
             try:
-                if is_batch:
-                    fut.set_result(self.platform._run_batch(self.instance, entry, payload))
-                else:
-                    fut.set_result(self.platform._run_request(self.instance, entry, payload))
+                # re-activate the submitter's trace context: spans emitted
+                # inside the pod (handler execute, nested calls) land in the
+                # request's tree even though it hopped threads
+                with tracer.activate_snapshot(cur):
+                    if is_batch:
+                        fut.set_result(self.platform._run_batch(self.instance, entry, payload))
+                    else:
+                        fut.set_result(self.platform._run_request(self.instance, entry, payload))
             except Exception as exc:  # noqa: BLE001
                 fut.set_exception(exc)
 
     def submit(self, entry: str, args: tuple) -> Future:
         fut: Future = Future()
-        self.q.put((entry, args, fut, False))
+        self.q.put((entry, args, fut, False, self.platform.tracer.current()))
         return fut
 
     def submit_batch(self, entry: str, args_list: list[tuple]) -> Future:
         fut: Future = Future()
-        self.q.put((entry, args_list, fut, True))
+        self.q.put((entry, args_list, fut, True, self.platform.tracer.current()))
         return fut
 
     def stop(self):

@@ -80,6 +80,7 @@ class _Request:
         "inputs", "max_new_tokens", "eos_id", "slo", "future",
         "t_submit", "t_alloc", "t_admit", "tokens", "step_s", "seq_id",
         "cur_len", "remaining", "next_token", "last_emit", "job",
+        "span", "psid",
     )
 
     def __init__(self, inputs, max_new_tokens, eos_id, slo, future, t_submit):
@@ -99,6 +100,8 @@ class _Request:
         self.next_token = 0
         self.last_emit = 0.0
         self.job = None  # PagedPrefillJob while the chunked prefill runs
+        self.span = None  # obs.SpanContext root (None when tracing off)
+        self.psid = None  # pre-allocated prefill-stall span id (chunk parent)
 
 
 class ContinuousBatcher:
@@ -156,6 +159,10 @@ class ContinuousBatcher:
         self.completed = 0
         self.shed = 0
         self._occupancy_sum = 0
+        # obs.Tracer (duck-typed): every submit mints a "serve" trace whose
+        # queue-wait / prefill-stall (+ chunk children) / batch-compute
+        # phases tile [t_submit, t_done] exactly
+        self._tracer = getattr(engine.platform, "tracer", None)
         self._thread = threading.Thread(target=self._loop, daemon=True, name="continuous-batcher")
         self._thread.start()
 
@@ -174,6 +181,10 @@ class ContinuousBatcher:
             raise ValueError(f"ContinuousBatcher serves one sequence per request, got batch {b}")
         fut: Future = Future()
         req = _Request(inputs, max_new_tokens, eos_id, slo, fut, self.clock.now())
+        if self._tracer is not None:
+            req.span = self._tracer.begin_request(
+                self.engine.entry, "serve", t0=req.t_submit,
+                attrs={"slo": slo.name, "max_new_tokens": req.max_new_tokens})
         with self._cv:
             if self._stopped:
                 raise RuntimeError("batcher is shut down")
@@ -190,6 +201,7 @@ class ContinuousBatcher:
                 fut.set_exception(ShedError(
                     f"best-effort shed: {be_depth} queued >= {self.max_queue}"
                 ))
+                self._fail_span(req, "ShedError")
                 return fut
             self._lanes.push(req, slo)
             self._cv.notify_all()
@@ -232,6 +244,14 @@ class ContinuousBatcher:
 
     # ------------------------------------------------------------ internals
 
+    @staticmethod
+    def _fail_span(req: _Request, error: str) -> None:
+        """Close a request's trace root on an error/shed path — the span tree
+        stays latency-conserving (an unfinished root would drop the whole
+        trace from attribution)."""
+        if req.span is not None:
+            req.span.finish(args={"error": error})
+
     def _admit(self) -> None:
         """Fill free slots from the lanes, strictest class first. Runs on
         the loop thread. The chunked path (default for token prompts)
@@ -265,6 +285,7 @@ class ContinuousBatcher:
                     f"{need} pages; pool holds {arena.num_pages - 1}, "
                     f"table {self.engine.block_width}"
                 ))
+                self._fail_span(req, "ArenaFull")
                 continue
             self._seq += 1
             req.seq_id = ("cb", self._seq)
@@ -280,6 +301,7 @@ class ContinuousBatcher:
                     return                             # will free pages
                 except BaseException as exc:  # noqa: BLE001 — deliver, don't kill the loop
                     _deliver(req.future, exc=exc)
+                    self._fail_span(req, type(exc).__name__)
                     continue
                 self._job = req
                 return
@@ -291,6 +313,7 @@ class ContinuousBatcher:
                 return                             # free pages; retry first
             except BaseException as exc:  # noqa: BLE001 — deliver, don't kill the loop
                 _deliver(req.future, exc=exc)
+                self._fail_span(req, type(exc).__name__)
                 continue
             req.cur_len = t_in
             self._seat(req, logits)
@@ -300,6 +323,13 @@ class ContinuousBatcher:
         free slot — one is guaranteed, because slots only fill through this
         method and admission checked before starting."""
         req.t_admit = self.clock.now()
+        if req.span is not None:
+            # exact tiling of [t_submit, t_admit]: lane wait, then prompt
+            # processing (chunk spans nest under the stall, so stall
+            # self-time = time the prompt WAITED between chunks)
+            req.span.emit("queue-wait", "queue-wait", req.t_submit, req.t_alloc)
+            req.span.emit("prefill-stall", "prefill-stall", req.t_alloc,
+                          req.t_admit, span_id=req.psid)
         req.last_emit = req.t_admit  # first token emitted at admission
         req.remaining = req.max_new_tokens
         first = int(np.asarray(_greedy_token(jnp.asarray(logits)))[0, 0])
@@ -354,10 +384,19 @@ class ContinuousBatcher:
             self._job = None
             self.engine.arena.free(req.seq_id)
             _deliver(req.future, exc=exc)
+            self._fail_span(req, type(exc).__name__)
             return True
         done = req.job.pos - pos0
+        t1 = self.clock.now()
         if done > 0:  # a whole-prompt cache hit computes zero prompt tokens
-            self._est_prefill.observe((self.clock.now() - t0) / done)
+            self._est_prefill.observe((t1 - t0) / done)
+        if req.span is not None:
+            if req.psid is None:
+                # parent for every chunk: the prefill-stall span _seat emits
+                # over [t_alloc, t_admit] once the prompt completes
+                req.psid = req.span.alloc_id()
+            req.span.emit("prefill-chunk", "prefill-chunk", t0, t1,
+                          parent_id=req.psid, args={"tokens": done})
         self.prefill_chunks += 1
         if logits is None:
             return True  # more chunks to go
@@ -392,6 +431,11 @@ class ContinuousBatcher:
         ))
         self.completed += 1
         self.tokens_out += len(req.tokens)
+        if req.span is not None:
+            req.span.emit("batch-compute", "batch-compute", req.t_admit, t_done,
+                          args={"tokens": len(req.tokens)})
+            req.span.finish(t_done, args={"tokens": len(req.tokens),
+                                          "pages": pages})
         _deliver(req.future, result={
             "tokens": np.asarray(req.tokens, np.int32)[None, :],
             "step_s": list(req.step_s),
@@ -421,6 +465,14 @@ class ContinuousBatcher:
                 continue
             if added or moved:  # this slot's page set changed
                 self._bt[i] = self.engine.arena.block_row(req.seq_id, width)
+                if req.span is not None:
+                    # page-extend / copy-on-write land as instants on the
+                    # request's own timeline (CoW = a shared prefix page
+                    # privatized before this step's scatter)
+                    req.span.event("page-cow" if moved else "page-extend",
+                                   args={"added": bool(added),
+                                         "cow": bool(moved),
+                                         "len": req.cur_len})
             self._tok[i, 0] = req.next_token
             self._cur[i] = req.cur_len
             active.append(i)
@@ -475,6 +527,7 @@ class ContinuousBatcher:
                         self._release_slot(i)
                         self.engine.arena.free(req.seq_id)
                         _deliver(req.future, exc=exc)
+                        self._fail_span(req, type(exc).__name__)
             with self._cv:
                 if self._stopped and all(s is None for s in self._slots) \
                         and self._lanes.depth() == 0 and self._job is None:
@@ -485,9 +538,11 @@ class ContinuousBatcher:
             req, self._job = self._job, None
             self.engine.arena.free(req.seq_id)
             _deliver(req.future, exc=RuntimeError("batcher shut down"))
+            self._fail_span(req, "shutdown")
         with self._cv:
             while True:
                 got = self._lanes.pop()
                 if got is None:
                     break
                 _deliver(got[0].future, exc=RuntimeError("batcher shut down"))
+                self._fail_span(got[0], "shutdown")

@@ -275,3 +275,34 @@ def test_batcher_eos_leaves_early(paged_engine):
         np.testing.assert_array_equal(got, toks[: len(got)])
     finally:
         cb.shutdown()
+
+
+def test_serve_trace_phases_sum_to_e2e_latency(paged_engine):
+    """Every served request's span tree must tile its wall time exactly:
+    queue-wait + prefill-stall (+ chunk self-time) + batch-compute account
+    for submit-to-done, with no negative or unexplained residue."""
+    from repro.obs import attribute, build_trees
+
+    engine = paged_engine
+    tracer = engine.platform.tracer
+    tracer.recorder.clear()
+    cb = ContinuousBatcher(engine, capacity=2)
+    try:
+        prompts = [jnp.full((1, 4 + 5 * i), 3 + i, jnp.int32) for i in range(3)]
+        futs = [cb.submit({"tokens": p}, 5) for p in prompts]
+        for f in futs:
+            f.result(timeout=300)
+    finally:
+        cb.shutdown()
+    records = tracer.recorder.snapshot()
+    serve = [r for r in build_trees(records).values()
+             if r[1].cat == "serve"]
+    assert len(serve) == 3
+    for tree in serve:
+        res = attribute(list(tree.values()))[0]
+        assert res["conserved"], res
+        assert res["residual_s"] == 0.0
+        phases = res["phases"]
+        assert {"queue-wait", "prefill-stall", "batch-compute"} <= set(phases)
+        assert abs(sum(phases.values()) - res["wall_s"]) <= 1e-9
+        assert all(v >= -1e-9 for v in phases.values()), phases

@@ -1,0 +1,438 @@
+"""Observability layer: flight recorder, span trees, critical-path
+attribution, deterministic exporters, and the coherent-stats regression.
+
+The conservation tests are the core contract: every finished request trace's
+leaf phases (plus parent self-time) sum EXACTLY to its end-to-end latency —
+`attribute` computes the residual and these tests assert it is zero, on the
+serial invoke path, the coalesced async path, and under fault injection.
+"""
+import json
+import random
+import threading
+from concurrent.futures import wait
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FunctionSpec, FusionPolicy, TinyJaxBackend
+from repro.obs import (
+    CONTROL_TRACE_ID,
+    FlightRecorder,
+    SpanRecord,
+    Tracer,
+    attribute,
+    attribute_trace,
+    chrome_trace,
+    dumps_chrome,
+    prometheus_text,
+)
+from repro.scheduler import RequestScheduler, VirtualClock
+
+REAL_BUDGET_S = 10.0
+
+
+def settle(clock, n=1):
+    clock.wait_for_waiters(n, timeout=5.0)
+
+
+# ------------------------------------------------------- flight recorder
+
+
+def _rec(trace_id, span_id, t0=0.0, t1=1.0, parent=1, name="s", cat="execute",
+         ph="X"):
+    return SpanRecord(trace_id, span_id, parent, name, cat, t0, t1, ph)
+
+
+def test_flight_recorder_drop_oldest_and_counter():
+    rec = FlightRecorder(capacity_per_thread=4)
+    for i in range(10):
+        rec.append(_rec(1, i + 1, t0=float(i)))
+    records = rec.snapshot()
+    assert len(records) == 4
+    assert [r.span_id for r in records] == [7, 8, 9, 10], "oldest must drop"
+    assert rec.dropped() == 6
+    rec.clear()
+    assert rec.snapshot() == [] and rec.dropped() == 0
+
+
+def test_flight_recorder_never_mixes_threads_buffers():
+    rec = FlightRecorder(capacity_per_thread=8)
+
+    def writer(tid):
+        for i in range(8):
+            rec.append(_rec(tid, i + 1))
+
+    threads = [threading.Thread(target=writer, args=(t,)) for t in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(rec.snapshot()) == 32 and rec.dropped() == 0
+
+
+# ----------------------------------------------------------- attribution
+
+
+def test_attribution_exact_conservation_unit():
+    # root [0, 10]; queue-wait [0, 3]; compute [3, 10] with a nested child
+    records = [
+        _rec(7, 1, 0.0, 10.0, parent=0, name="req", cat="invoke"),
+        _rec(7, 2, 0.0, 3.0, parent=1, cat="queue-wait"),
+        _rec(7, 3, 3.0, 10.0, parent=1, cat="batch-compute"),
+        _rec(7, 4, 4.0, 6.0, parent=3, cat="cross-function-sync"),
+    ]
+    out = attribute_trace(records)
+    assert out["conserved"] and out["residual_s"] == pytest.approx(0.0, abs=1e-12)
+    assert out["wall_s"] == 10.0
+    assert out["phases"]["queue-wait"] == pytest.approx(3.0)
+    # compute self-time excludes the nested sync wait
+    assert out["phases"]["batch-compute"] == pytest.approx(5.0)
+    assert out["phases"]["cross-function-sync"] == pytest.approx(2.0)
+    assert sum(out["phases"].values()) == pytest.approx(out["wall_s"])
+
+
+def test_attribution_flags_orphans_and_negative_self_time():
+    orphan = [
+        _rec(1, 1, 0.0, 4.0, parent=0, cat="invoke"),
+        _rec(1, 5, 1.0, 2.0, parent=99, cat="execute"),  # parent never emitted
+    ]
+    assert not attribute_trace(orphan)["conserved"]
+    overlap = [
+        _rec(2, 1, 0.0, 4.0, parent=0, cat="invoke"),
+        _rec(2, 2, 0.0, 3.0, parent=1, cat="execute"),
+        _rec(2, 3, 0.0, 3.0, parent=1, cat="execute"),  # siblings overlap: 6 > 4
+    ]
+    assert not attribute_trace(overlap)["conserved"]
+    # unfinished root: trace not attributable at all
+    assert attribute_trace([_rec(3, 4, 0.0, 1.0, parent=1)]) is None
+
+
+# ----------------------------------------- serial invoke path (platform)
+
+
+def test_serial_invoke_trace_conserves_latency():
+    p = TinyJaxBackend(FusionPolicy(enabled=False))
+    try:
+        w = jnp.eye(8)
+
+        def fn_b(ctx, params, x):
+            return jnp.tanh(x @ params)
+
+        def fn_a(ctx, params, x):
+            return ctx.call("B", x @ params)
+
+        p.deploy(FunctionSpec("A", fn_a, w))
+        p.deploy(FunctionSpec("B", fn_b, w))
+        for _ in range(3):
+            p.invoke("A", jnp.ones((2, 8)))
+        results = attribute(p.tracer.recorder.snapshot())
+        invokes = [r for r in results if r["kind"] == "invoke"]
+        assert len(invokes) == 3
+        for r in invokes:
+            assert r["conserved"], r
+            assert r["residual_s"] == pytest.approx(0.0, abs=1e-9)
+            assert sum(r["phases"].values()) == pytest.approx(r["wall_s"])
+            assert "execute" in r["phases"]
+            # unfused chain: the A->B boundary hop must appear as sync wait
+            assert "cross-function-sync" in r["phases"]
+    finally:
+        p.shutdown()
+
+
+def test_fused_chain_records_inline_not_boundary_edges():
+    p = TinyJaxBackend(FusionPolicy(min_observations=2, merge_cost_s=0.0))
+    try:
+        w = jnp.eye(8)
+
+        def fn_b(ctx, params, x):
+            return jnp.tanh(x @ params)
+
+        def fn_a(ctx, params, x):
+            return ctx.call("B", x @ params)
+
+        p.deploy(FunctionSpec("A", fn_a, w))
+        p.deploy(FunctionSpec("B", fn_b, w))
+        for _ in range(8):
+            p.invoke("A", jnp.ones((2, 8)))
+        p.merger.wait_idle()
+        assert [m for m in p.merger.merge_log if m.healthy]
+        records = p.tracer.recorder.snapshot()
+        # post-merge the edge is compiled away: a fused-inline control event
+        # exists, and the LAST invoke's trace has no boundary hop
+        control = [r for r in records if r.trace_id == CONTROL_TRACE_ID]
+        assert any(r.name.startswith("fused-inline:A->B") for r in control)
+        assert any(r.name.startswith("merge:") for r in control)
+        results = attribute(records)
+        last = [r for r in results if r["kind"] == "invoke"][-1]
+        assert last["conserved"]
+        assert "cross-function-sync" not in last["phases"]
+    finally:
+        p.shutdown()
+
+
+# ------------------------------------- coalesced async path (sim, exact)
+
+
+def _sim_once(fail_batches=(), n=6):
+    """Scripted virtual-time sim: n arrivals 4ms apart into a 16ms window,
+    dispatch optionally failing for chosen batch ordinals. Returns the
+    tracer's records."""
+    clock = VirtualClock()
+    tracer = Tracer(clock=clock)
+    seen = {"batches": 0}
+
+    def dispatch(name, argss):
+        seen["batches"] += 1
+        if seen["batches"] in fail_batches:
+            raise RuntimeError("injected dispatch failure")
+        return [a[0] for a in argss]
+
+    sched = RequestScheduler(dispatch, clock=clock, max_batch=4,
+                             max_delay_ms=16.0, tracer=tracer)
+    try:
+        futs = []
+        for i in range(n):
+            futs.append(sched.submit("f", (i,)))
+            settle(clock)
+            clock.advance(0.004)
+        settle(clock)
+        clock.advance(0.1)  # drain every window
+        done, not_done = wait(futs, timeout=5)
+        assert not not_done
+        clock.assert_elapsed_real_below(REAL_BUDGET_S)
+        return tracer.recorder.snapshot()
+    finally:
+        sched.shutdown()
+
+
+def test_batched_trace_phases_tile_wall_exactly():
+    records = _sim_once()
+    results = attribute(records)
+    reqs = [r for r in results if r["kind"] == "invoke_async"]
+    assert len(reqs) == 6
+    for r in reqs:
+        assert r["conserved"], r
+        assert r["residual_s"] == 0.0, "phases must tile the wall EXACTLY"
+        assert {"queue-wait", "window-wait", "batch-compute"} <= set(r["phases"])
+        assert sum(r["phases"].values()) == pytest.approx(r["wall_s"], abs=1e-12)
+    # the shared execution is its own trace, referenced by the members
+    batches = [r for r in results if r["kind"] == "batch"]
+    assert batches, "batched dispatch must mint a batch trace"
+    member_refs = {
+        r.args["batch_trace"]
+        for r in records
+        if r.cat == "batch-compute" and r.args and "batch_trace" in r.args
+    }
+    assert member_refs == {b["trace_id"] for b in batches}
+
+
+def test_conservation_holds_under_fault_injection():
+    rng = random.Random(0xBAD5EED)
+    for trial in range(4):
+        fail = {rng.randint(1, 2)}  # 8 arrivals / max_batch 4 -> 2 batches
+        records = _sim_once(fail_batches=fail, n=8)
+        results = attribute(records)
+        reqs = [r for r in results if r["kind"] == "invoke_async"]
+        assert len(reqs) == 8, "failed requests must still close their traces"
+        assert any(r["attrs"] and r["attrs"].get("error") for r in reqs)
+        for r in reqs:
+            assert r["conserved"], (trial, r)
+            assert r["residual_s"] == 0.0
+
+
+def test_same_seed_sim_exports_byte_identical_traces():
+    a = dumps_chrome(chrome_trace(_sim_once()))
+    b = dumps_chrome(chrome_trace(_sim_once()))
+    assert a == b, "same-seed virtual-clock runs must export identical bytes"
+    doc = json.loads(a)
+    events = doc["traceEvents"]
+    assert events and doc["displayTimeUnit"] == "ms"
+    for ev in events:
+        # perfetto-loadable trace_event schema: complete spans carry dur,
+        # instants a scope, metadata only names
+        assert ev["ph"] in ("X", "i", "M")
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0 and isinstance(ev["ts"], float | int)
+
+
+# ------------------------------------------- satellite 1: coherent stats
+
+
+def test_stats_snapshot_totals_conserved_under_concurrent_invokes():
+    """Regression: stats() used to assemble billing/latency/per-instance
+    views under SEPARATE meter lock acquisitions, so a concurrent sampler
+    could read a per-function total that disagreed with the per-instance
+    split. One coherent snapshot must make them equal in every sample."""
+    p = TinyJaxBackend(FusionPolicy(enabled=False))
+    try:
+        w = jnp.eye(4)
+        p.deploy(FunctionSpec("F", lambda ctx, params, x: x @ params, w))
+        stop = threading.Event()
+        mismatches = []
+
+        def sampler():
+            while not stop.is_set():
+                s = p.stats()
+                by_fn = s["billing"]["by_function"]
+                fn_calls = sum(d["calls"] for d in by_fn.values())
+                inst_calls = sum(
+                    d["calls"]
+                    for f in s["replicas"]["functions"].values()
+                    for d in f["billing"].values()
+                )
+                if fn_calls != inst_calls:
+                    mismatches.append((fn_calls, inst_calls))
+                gb_fn = sum(d["gb_s"] for d in by_fn.values())
+                if abs(gb_fn - s["billing"]["total_gb_s"]) > 1e-12:
+                    mismatches.append(("gb", gb_fn, s["billing"]["total_gb_s"]))
+
+        def invoker():
+            x = jnp.ones((1, 4))
+            for _ in range(40):
+                p.invoke("F", x)
+
+        sam = threading.Thread(target=sampler)
+        sam.start()
+        workers = [threading.Thread(target=invoker) for _ in range(4)]
+        for t in workers:
+            t.start()
+        for t in workers:
+            t.join()
+        stop.set()
+        sam.join(timeout=5)
+        assert not mismatches, mismatches[:5]
+        assert sum(
+            d["calls"] for d in p.stats()["billing"]["by_function"].values()
+        ) == 160
+    finally:
+        p.shutdown()
+
+
+# ------------------------------------------------- exporters / prometheus
+
+
+def test_prometheus_dump_flattens_stats_and_trace_aggregates():
+    p = TinyJaxBackend(FusionPolicy(enabled=False))
+    try:
+        w = jnp.eye(4)
+        p.deploy(FunctionSpec("F", lambda ctx, params, x: x @ params, w))
+        for _ in range(3):
+            p.invoke("F", jnp.ones((1, 4)))
+        text = prometheus_text(p)
+        names = {line.split("{")[0].split(" ")[0] for line in text.splitlines()}
+        assert "repro_trace_spans_total" in names
+        assert "repro_trace_dropped_total" in names
+        assert "repro_trace_phase_seconds" in names
+        assert "repro_dispatch_compiles_total" in names
+        assert "repro_dispatch_host_syncs_total" in names
+        assert any(n.startswith("repro_stats_billing") for n in names)
+        # every line is valid exposition: metric[{labels}] value
+        for line in text.splitlines():
+            head, _, value = line.rpartition(" ")
+            assert head and float(value) is not None
+    finally:
+        p.shutdown()
+
+
+def test_prometheus_endpoint_serves_metrics():
+    import urllib.request
+
+    p = TinyJaxBackend(FusionPolicy(enabled=False))
+    server = None
+    try:
+        from repro.obs import serve_prometheus
+
+        w = jnp.eye(4)
+        p.deploy(FunctionSpec("F", lambda ctx, params, x: x @ params, w))
+        p.invoke("F", jnp.ones((1, 4)))
+        server = serve_prometheus(p, port=0)
+        port = server.server_address[1]
+        body = urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/metrics", timeout=10).read().decode()
+        assert "repro_trace_spans_total" in body
+    finally:
+        if server is not None:
+            server.shutdown()
+        p.shutdown()
+
+
+# ------------------------------------ satellite 2: dispatch tracer re-arm
+
+
+def test_dispatch_tracer_rearm_is_refcounted_and_restores_patches():
+    import numpy
+    import jax
+
+    from repro.analysis.dispatch import TRACER
+
+    orig_asarray = numpy.asarray
+    orig_device_get = jax.device_get
+    base = TRACER.snapshot()
+    x = jnp.ones((2, 2))
+    TRACER.arm()
+    TRACER.arm()  # nested window (overhead gate inside smoke gate)
+    np.asarray(x)
+    TRACER.disarm()
+    assert TRACER.armed, "inner disarm must not tear down the outer window"
+    np.asarray(x)
+    TRACER.disarm()
+    np.asarray(x)  # fully disarmed: not counted
+    TRACER.disarm()  # stray disarm: no underflow, no double-unpatch
+    d = TRACER.delta(base)
+    assert d.host_syncs == 2
+    assert numpy.asarray is orig_asarray, "patches must restore the ORIGINAL"
+    assert jax.device_get is orig_device_get
+    assert not TRACER.armed
+
+
+def test_dispatch_tracer_concurrent_arm_disarm_never_leaks_patch():
+    import numpy
+
+    from repro.analysis.dispatch import TRACER
+
+    orig_asarray = numpy.asarray
+    x = jnp.ones((2, 2))
+    errors = []
+
+    def churn():
+        try:
+            for _ in range(50):
+                TRACER.arm()
+                np.asarray(x)
+                TRACER.disarm()
+        except Exception as exc:  # pragma: no cover - the assert is the test
+            errors.append(exc)
+
+    threads = [threading.Thread(target=churn) for _ in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert not TRACER.armed
+    assert numpy.asarray is orig_asarray, "unbalanced unpatch leaked a wrapper"
+
+
+# --------------------------------------------------------- registry pins
+
+
+def test_retain_tracers_survives_platform_drop():
+    import gc
+
+    from repro.obs import export_all_chrome, live_tracers, retain_tracers
+
+    retain_tracers(True)
+    try:
+        p = TinyJaxBackend(FusionPolicy(enabled=False))
+        w = jnp.eye(4)
+        p.deploy(FunctionSpec("F", lambda ctx, params, x: x @ params, w))
+        p.invoke("F", jnp.ones((1, 4)))
+        tracer = p.tracer
+        p.shutdown()
+        del p
+        gc.collect()
+        assert tracer in live_tracers(), "retention must pin dropped platforms"
+    finally:
+        retain_tracers(False)
+    gc.collect()

@@ -166,6 +166,47 @@ def test_saturated_chain_deprioritizes_merge():
     assert policy.decide("a", "b", big, "t", "t", signals=saturated).fuse
 
 
+def test_measured_merge_stall_displaces_static_saturation_penalty():
+    """The same saturated edge decides DIFFERENTLY once measured costs
+    exist: the static 4x penalty vetoes the merge (required 8s > saving
+    5s), but an attached EdgeCostModel holding a measured ~50ms build
+    stall prices the saturation at stall x queue-depth instead — required
+    ~2.1s < 5s, so the merge goes through."""
+    from repro.obs import EdgeCostModel
+
+    policy = FusionPolicy(min_observations=1, merge_cost_s=2.0,
+                          amortization_horizon=500, saturation_penalty=4.0)
+    stats = _hot_edge(wait_s=0.01)  # projected saving 5s
+    saturated = SchedulerSignals(queue_depth=2, mean_occupancy=0.95, p95_ms=5.0)
+    d = policy.decide("a", "b", stats, "t", "t", signals=saturated)
+    assert not d.fuse and "saturated" in d.reason
+    cm = EdgeCostModel()
+    cm.observe_merge_stall(0.05, queue_depth=2)
+    policy.cost_model = cm
+    d = policy.decide("a", "b", stats, "t", "t", signals=saturated)
+    assert d.fuse and "measured stall" in d.reason
+
+
+def test_measured_edge_ewma_displaces_alltime_mean_wait():
+    """An edge whose all-time mean says 'fuse' but whose RECENT measured
+    sync waits collapsed (traffic pattern changed) must not fuse: the
+    cost model's EWMA replaces stats.mean_wait_s in the projected saving."""
+    from repro.obs import EdgeCostModel
+
+    policy = FusionPolicy(min_observations=1, merge_cost_s=2.0,
+                          amortization_horizon=500)
+    stats = _hot_edge(wait_s=0.01)  # all-time mean saving 5s > 2s: fuses
+    assert policy.decide("a", "b", stats, "t", "t").fuse
+    cm = EdgeCostModel()
+    for _ in range(20):  # measured waits now ~1ms: saving 0.5s < 2s
+        cm.observe_sync_edge("a", "b", 0.001)
+    policy.cost_model = cm
+    d = policy.decide("a", "b", stats, "t", "t")
+    assert not d.fuse and "not amortizable" in d.reason
+    # an edge the model has never seen still prices from the static mean
+    assert policy.decide("x", "y", stats, "t", "t").fuse
+
+
 def test_cold_chain_with_long_waits_promotes_merge():
     """Low occupancy + long tail waits: blocking dominates, fusion removes it
     — the policy halves the observation floor and discounts the cost."""
